@@ -1,0 +1,56 @@
+"""Benchmark helpers: timing, CSV emission, workload construction."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_bins, cell_index, choose_capacity, sort_permutation
+from repro.pic import GridSpec, uniform_plasma
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
+    """Median wall time of a jitted call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def make_workload(grid_shape=(16, 16, 16), ppc=8, seed=0, sorted_attrs=True, u_thermal=0.05, headroom=1.5):
+    """A uniform-plasma deposition workload: positions/velocities/weights in
+    sorted or shuffled attribute order, plus the binned layout."""
+    grid = GridSpec(shape=grid_shape)
+    px = max(1, round(ppc ** (1 / 3)))
+    parts = uniform_plasma(
+        jax.random.PRNGKey(seed), grid, ppc_each_dim=(px, px, px), density=1.0,
+        u_thermal=u_thermal, jitter=1.0,
+    )
+    pos, u, w = parts.pos, parts.u, parts.w
+    n = pos.shape[0]
+
+    if sorted_attrs:
+        perm = sort_permutation(cell_index(pos, grid_shape), jnp.ones(n, bool))
+    else:
+        perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), n)
+    pos, u, w = pos[perm], u[perm], w[perm]
+
+    cells = cell_index(pos, grid_shape)
+    n_cells = grid.n_cells
+    cap = choose_capacity(int(np.max(np.bincount(np.asarray(cells), minlength=n_cells))), headroom=headroom)
+    layout, overflow = build_bins(cells, jnp.ones(n, bool), n_cells=n_cells, capacity=cap)
+    assert int(overflow) == 0
+    gamma = jnp.sqrt(1 + jnp.sum(u * u, -1))
+    v = u / gamma[:, None]
+    return dict(grid=grid, pos=pos, v=v, qw=-w, cells=cells, layout=layout, n=n, cap=cap)

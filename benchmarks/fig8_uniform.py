@@ -1,0 +1,38 @@
+"""Paper Figure 8: end-to-end uniform-plasma performance across PPC.
+
+Full PIC step (gather + push + incremental sort + deposition + Maxwell)
+baseline (scatter/no-sort) vs MatrixPIC (matrix/GPMA), particles/second
+throughput at PPC in {1, 8, 27} (CPU-sized grid)."""
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.pic import FieldState, GridSpec, PICConfig, Simulation, pic_step, uniform_plasma
+
+
+def _sim(grid_shape, ppc_dim, cfg_kw):
+    grid = GridSpec(shape=grid_shape)
+    parts = uniform_plasma(
+        jax.random.PRNGKey(0), grid, ppc_each_dim=ppc_dim, density=1.0, u_thermal=0.05, jitter=1.0
+    )
+    cfg = PICConfig(grid=grid, dt=0.2, order=1, capacity=max(16, 3 * ppc_dim[0] ** 3), **cfg_kw)
+    sim = Simulation(FieldState.zeros(grid.shape), parts, cfg)
+    return sim
+
+
+def main():
+    grid_shape = (12, 12, 12)
+    for ppc_dim in [(1, 1, 1), (2, 2, 2), (3, 3, 3)]:
+        ppc = ppc_dim[0] ** 3
+        base = _sim(grid_shape, ppc_dim, dict(deposition="scatter", gather="scatter", sort_mode="none"))
+        full = _sim(grid_shape, ppc_dim, dict(deposition="matrix", gather="matrix", sort_mode="incremental"))
+        n = base.state.particles.n
+
+        t_base = time_fn(lambda: pic_step(base.state, base.config))
+        t_full = time_fn(lambda: pic_step(full.state, full.config))
+        emit(f"fig8/baseline_ppc{ppc}", t_base, f"particles_per_s={n / (t_base * 1e-6):.3e}")
+        emit(f"fig8/matrixpic_ppc{ppc}", t_full, f"particles_per_s={n / (t_full * 1e-6):.3e} speedup={t_base / t_full:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

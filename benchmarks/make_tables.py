@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.make_tables > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+from benchmarks.roofline import ACTIVE_PARAMS_B, SHAPE_TOKENS, load_records, roofline_terms
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main() -> None:
+    records = load_records()
+    singles = [r for r in records if r["mesh"] == "pod16x16"]
+    multis = {(r["arch"], r["shape"]): r for r in records if r["mesh"] == "pod2x16x16"}
+
+    print("### §Dry-run — all 40 cells x 2 meshes\n")
+    print("| arch | shape | 16x16: HBM/dev GB | compile s | 2x16x16: HBM/dev GB | compile s | status |")
+    print("|---|---|---|---|---|---|---|")
+    for r in singles:
+        m = multis.get((r["arch"], r["shape"]), {})
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP: {r['skipped'][:60]} |")
+            continue
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR |")
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | {r.get('hbm_per_device_gb','?')} | {r.get('compile_s','?')} "
+            f"| {m.get('hbm_per_device_gb','?')} | {m.get('compile_s','?')} | ok |"
+        )
+
+    print("\n### §Roofline — single-pod (16x16 = 256 chips), per-chip terms\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO | roofline frac | HBM GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in singles:
+        if "skipped" in r or "error" in r:
+            continue
+        t = roofline_terms(r, 256)
+        print(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+            f"{t['collective_s']:.2e} | **{t['dominant']}** | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_frac']:.3f} | {t['hbm_gb']} |"
+        )
+
+    print("\n### collective breakdown (single-pod, loop-corrected link bytes/chip)\n")
+    print("| arch | shape | all-reduce | all-gather | reduce-scatter | all-to-all | permute | link GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in singles:
+        if "skipped" in r or "error" in r:
+            continue
+        c = r["collectives"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_bytes(c['all-reduce']['bytes'])} | "
+            f"{fmt_bytes(c['all-gather']['bytes'])} | {fmt_bytes(c['reduce-scatter']['bytes'])} | "
+            f"{fmt_bytes(c['all-to-all']['bytes'])} | {fmt_bytes(c['collective-permute']['bytes'])} | "
+            f"{fmt_bytes(c['link_bytes'])} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

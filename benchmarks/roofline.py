@@ -1,0 +1,117 @@
+"""§Roofline: aggregate the dry-run JSON records into the three-term
+roofline table (EXPERIMENTS.md §Roofline).
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_link_bytes / (chips * link_bw)
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (collective bytes are per-program = already per-chip in
+the SPMD module; FLOPs/bytes from cost_analysis are per-device program
+costs as well).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train cells;
+2*N_active per decoded token for decode cells.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# active params (B) per arch for MODEL_FLOPS (MoE: activated expert share)
+ACTIVE_PARAMS_B = {
+    "deepseek-moe-16b": 2.8,        # 2 shared + 6/64 routed + attn/embed
+    "mixtral-8x22b": 39.0,
+    "xlstm-1.3b": 2.0,
+    "whisper-tiny": 0.036,
+    "starcoder2-15b": 15.96,
+    "starcoder2-7b": 7.40,
+    "gemma3-27b": 27.0,
+    "phi3-mini-3.8b": 3.82,
+    "jamba-v0.1-52b": 13.0,
+    "llava-next-mistral-7b": 7.24,
+}
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,       # one token per sequence
+    "long_500k": 1,
+}
+
+
+def load_records(result_dir: str = "benchmarks/dryrun_results"):
+    records = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            records.append(json.load(f))
+    return records
+
+
+def roofline_terms(rec: dict, chips: int) -> dict | None:
+    if "flops" not in rec:
+        return None
+    coll = rec.get("collectives", {})
+    link_bytes = coll.get("link_bytes", 0)
+    # cost_analysis of the SPMD module is per-device
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_collective = link_bytes / LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective), key=lambda kv: kv[1]
+    )[0]
+
+    arch, shape = rec["arch"], rec["shape"]
+    n_active = ACTIVE_PARAMS_B.get(arch, 0) * 1e9
+    tokens = SHAPE_TOKENS.get(shape, 0)
+    factor = 6 if shape.startswith("train") else 2
+    model_flops_global = factor * n_active * tokens
+    model_flops_per_chip = model_flops_global / chips
+    useful = model_flops_per_chip / rec["flops"] if rec["flops"] else 0.0
+
+    t_bound = max(t_compute, t_memory, t_collective)
+    roofline_frac = model_flops_per_chip / (t_bound * PEAK_FLOPS) if t_bound else 0.0
+
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": rec["mesh"],
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops": model_flops_per_chip,
+        "hlo_flops": rec["flops"],
+        "useful_ratio": useful,
+        "roofline_frac": roofline_frac,
+        "hbm_gb": rec.get("hbm_per_device_gb"),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def main():
+    records = load_records()
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,useful_ratio,roofline_frac,hbm_gb")
+    for rec in records:
+        if "skipped" in rec:
+            print(f"{rec['arch']},{rec['shape']},{rec['mesh']},,,,SKIPPED: {rec['skipped'][:40]},,,")
+            continue
+        if "error" in rec:
+            print(f"{rec['arch']},{rec['shape']},{rec['mesh']},,,,ERROR,,,")
+            continue
+        chips = 512 if "2x16" in rec["mesh"] else 256
+        t = roofline_terms(rec, chips)
+        print(
+            f"{t['arch']},{t['shape']},{t['mesh']},{t['compute_s']:.4e},{t['memory_s']:.4e},"
+            f"{t['collective_s']:.4e},{t['dominant']},{t['useful_ratio']:.3f},{t['roofline_frac']:.3f},{t['hbm_gb']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

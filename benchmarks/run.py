@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only table1_cic ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "table1_cic",     # Table 1: CIC kernel breakdown vs VPU baselines
+    "table2_qsp",     # Table 2: QSP kernel breakdown
+    "fig8_uniform",   # Fig 8: uniform plasma end-to-end across PPC
+    "fig9_lwfa",      # Fig 9: LWFA workload
+    "fig10_ablation", # Fig 10: component ablation
+    "table3_efficiency",  # Table 3: % of theoretical peak
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    mods = args.only or MODULES
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 1: first-order (CIC) deposition kernel breakdown.
+
+Maps the paper's configurations onto our implementations (DESIGN.md §7):
+  Baseline (WarpX)        -> deposit_scatter, shuffled attribute order
+  Baseline+IncrSort       -> deposit_scatter, cell-sorted attributes
+  Rhocell (auto-vec)      -> deposit_rhocell, shuffled
+  Rhocell+IncrSort        -> deposit_rhocell, sorted
+  MatrixPIC (FullOpt)     -> deposit_matrix (binned MXU contraction), sorted
+
+Times are CPU wall-clock of the jitted XLA program (relative speedups are
+the comparable quantity; absolute TPU projections live in §Roofline).
+"""
+
+from functools import partial
+
+from benchmarks.common import emit, make_workload, time_fn
+from repro.core import deposit_current_matrix_fused, deposit_matrix, deposit_rhocell, deposit_scatter
+
+ORDER = 1
+
+
+def _deposit_all(fn_kind, wl, order):
+    grid_shape = wl["grid"].shape
+    out = []
+    for comp, stagger in enumerate(((True, False, False), (False, True, False), (False, False, True))):
+        values = wl["qw"] * wl["v"][:, comp]
+        if fn_kind == "scatter":
+            out.append(deposit_scatter(wl["pos"], values, grid_shape=grid_shape, order=order, stagger=stagger))
+        elif fn_kind == "rhocell":
+            out.append(deposit_rhocell(wl["pos"], values, wl["cells"], grid_shape=grid_shape, order=order, stagger=stagger))
+        else:
+            out.append(deposit_matrix(wl["pos"], values, wl["layout"], grid_shape=grid_shape, order=order, stagger=stagger))
+    return out
+
+
+def run(order: int = ORDER, label: str = "table1_cic", ppc: int = 8, grid=(16, 16, 16)):
+    rows = [
+        ("baseline", "scatter", False),
+        ("baseline_incrsort", "scatter", True),
+        ("rhocell", "rhocell", False),
+        ("rhocell_incrsort", "rhocell", True),
+        ("matrixpic_fullopt", "matrix", True),
+    ]
+    base_time = None
+    for name, kind, sorted_attrs in rows:
+        wl = make_workload(grid_shape=grid, ppc=ppc, sorted_attrs=sorted_attrs)
+        t = time_fn(partial(_deposit_all, kind), wl, order)
+        if base_time is None:
+            base_time = t
+        emit(f"{label}/{name}", t, f"speedup={base_time / t:.2f}x n={wl['n']}")
+
+    # beyond-paper iterations (EXPERIMENTS.md §Perf): fused 3-component
+    # stage-1 (P2) + tight bin capacity (P1)
+    def fused(wl, order_):
+        return deposit_current_matrix_fused(
+            wl["pos"], wl["v"], wl["qw"], wl["layout"], grid_shape=wl["grid"].shape, order=order_
+        )
+
+    wl = make_workload(grid_shape=grid, ppc=ppc, sorted_attrs=True)
+    t = time_fn(fused, wl, order)
+    emit(f"{label}/matrixpic_fused", t, f"speedup={base_time / t:.2f}x cap={wl['cap']}")
+    wl = make_workload(grid_shape=grid, ppc=ppc, sorted_attrs=True, headroom=1.0)
+    t = time_fn(fused, wl, order)
+    emit(f"{label}/matrixpic_fused_tightcap", t, f"speedup={base_time / t:.2f}x cap={wl['cap']}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Paper Table 2: third-order (QSP) deposition kernel breakdown.
+
+Same configuration set as Table 1 at shape order 3 (64 nodes/particle,
+where the paper reports its 8.7x). The arithmetic-density argument carries
+over: the per-bin contraction has 4x16 output tiles instead of 2x4."""
+
+from benchmarks.table1_cic import run
+
+
+def main():
+    run(order=3, label="table2_qsp")
+
+
+if __name__ == "__main__":
+    main()

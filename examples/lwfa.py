@@ -1,0 +1,56 @@
+"""Laser-Wakefield Acceleration workload (paper Fig. 9 scenario, reduced):
+gaussian pulse drives a wake in a density-profiled plasma; the dense bunches
+and strong migration exercise the GPMA sorter + adaptive resort policy.
+
+    PYTHONPATH=src python examples/lwfa.py [--steps 60]
+"""
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.pic import (  # noqa: E402
+    FieldState, GridSpec, LaserSpec, PICConfig, Simulation, inject_laser, profiled_plasma,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    grid = GridSpec(shape=(8, 8, 64))
+    density = lambda z: jnp.where(z > 20.0, 1.0, 0.0)
+    particles = profiled_plasma(
+        jax.random.PRNGKey(0), grid, ppc_each_dim=(2, 2, 2), density_fn=density, u_thermal=0.01
+    )
+    laser = LaserSpec(a0=2.0, wavelength=8.0, waist=6.0, duration=8.0, z_center=10.0)
+    fields = inject_laser(FieldState.zeros(grid.shape), grid, laser)
+
+    cfg = PICConfig(grid=grid, dt=0.35, order=1, deposition="matrix", gather="matrix",
+                    sort_mode="incremental", capacity=48)
+    sim = Simulation(fields, particles, cfg)
+    print(f"LWFA: grid {grid.shape}, {int(jnp.sum(particles.alive))} plasma particles, a0={laser.a0}")
+
+    for step in range(args.steps):
+        sim.run(1)
+        if step % 10 == 0:
+            d = sim.diagnostics()
+            # wake diagnostic: on-axis longitudinal field
+            ez = np.asarray(sim.state.fields.ez)[4, 4, :]
+            print(
+                f"step {d['step']:4d}  E_field={d['field_energy']:.3e}  E_kin={d['kinetic_energy']:.3e}"
+                f"  max|Ez_axis|={np.abs(ez).max():.3e}  sorts={sim.sorts} rebuilds={sim.rebuilds}"
+            )
+
+    umax = float(jnp.max(jnp.linalg.norm(sim.state.particles.u, axis=-1)))
+    print(f"\nmax particle momentum u/mc = {umax:.3f} (wake acceleration signature)")
+
+
+if __name__ == "__main__":
+    main()

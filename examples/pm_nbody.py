@@ -1,0 +1,106 @@
+"""Appendix-B generalization: Particle-Mesh N-body gravity with the SAME
+Matrix-PIC deposition kernels (source = mass instead of charge).
+
+Mass deposition (binned outer-product) -> Poisson solve in Fourier space ->
+force gather (binned matrix gather) -> kick/drift. Demonstrates the paper's
+claim that the co-design transfers to the PM method unchanged.
+
+    PYTHONPATH=src python examples/pm_nbody.py [--steps 40]
+"""
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    build_bins, cell_index, choose_capacity, deposit_matrix, fold_guards, gather_matrix,
+    gpma_update, max_guard, unfold_guards,
+)
+from repro.pic.grid import GridSpec  # noqa: E402
+
+ORDER = 1
+
+
+def poisson_fft(rho, grid: GridSpec):
+    """Solve nabla^2 phi = rho (G=1/4pi absorbed) with periodic FFT."""
+    nx, ny, nz = grid.shape
+    k = [jnp.fft.fftfreq(n) * 2 * jnp.pi for n in (nx, ny, nz)]
+    kx, ky, kz = jnp.meshgrid(*k, indexing="ij")
+    k2 = kx**2 + ky**2 + kz**2
+    rho_k = jnp.fft.fftn(rho)
+    phi_k = jnp.where(k2 > 0, -rho_k / jnp.maximum(k2, 1e-12), 0.0)
+    return jnp.real(jnp.fft.ifftn(phi_k))
+
+
+def gradient(phi, axis):
+    return (jnp.roll(phi, -1, axis) - jnp.roll(phi, 1, axis)) / 2.0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--n", type=int, default=4096)
+    args = ap.parse_args()
+
+    grid = GridSpec(shape=(16, 16, 16))
+    g = max_guard(ORDER)
+    key = jax.random.PRNGKey(0)
+    # two gaussian clumps -> merger dynamics
+    k1, k2, k3 = jax.random.split(key, 3)
+    c1 = jnp.asarray([5.0, 8.0, 8.0])
+    c2 = jnp.asarray([11.0, 8.0, 8.0])
+    pos = jnp.concatenate([
+        c1 + 1.2 * jax.random.normal(k1, (args.n // 2, 3)),
+        c2 + 1.2 * jax.random.normal(k2, (args.n // 2, 3)),
+    ]) % jnp.asarray(grid.shape, jnp.float32)
+    vel = 0.02 * jax.random.normal(k3, (args.n, 3))
+    mass = jnp.full((args.n,), 1.0 / args.n)
+
+    cap = choose_capacity(int(np.max(np.bincount(np.asarray(cell_index(pos, grid.shape)), minlength=grid.n_cells))), headroom=2.5)
+    layout, of = build_bins(cell_index(pos, grid.shape), jnp.ones(args.n, bool), n_cells=grid.n_cells, capacity=cap)
+    assert int(of) == 0
+    dt = 0.5
+
+    @jax.jit
+    def step(pos, vel, layout):
+        # 1. mass deposition — Matrix-PIC binned outer-product kernel
+        rho = fold_guards(
+            deposit_matrix(pos, mass, layout, grid_shape=grid.shape, order=ORDER), g
+        ) / grid.cell_volume
+        # 2. field solve
+        phi = poisson_fft(rho - jnp.mean(rho), grid)
+        # 3. force gather — binned matrix gather of -grad phi
+        acc = jnp.stack(
+            [
+                gather_matrix(pos, unfold_guards(-gradient(phi, ax), g), layout, grid_shape=grid.shape, order=ORDER)
+                for ax in range(3)
+            ],
+            axis=-1,
+        )
+        # 4. kick-drift + incremental re-sort (GPMA)
+        vel2 = vel + dt * acc
+        pos2 = jnp.mod(pos + dt * vel2, jnp.asarray(grid.shape, jnp.float32))
+        layout2, stats = gpma_update(layout, cell_index(pos2, grid.shape), jnp.ones(pos.shape[0], bool))
+        return pos2, vel2, layout2, stats, rho
+
+    for i in range(args.steps):
+        pos, vel, layout, stats, rho = step(pos, vel, layout)
+        if int(stats.n_overflow) > 0:
+            layout, of = build_bins(cell_index(pos, grid.shape), jnp.ones(args.n, bool), n_cells=grid.n_cells, capacity=cap)
+            assert int(of) == 0, "grow capacity"
+        if i % 10 == 0:
+            com = jnp.mean(pos, axis=0)
+            print(
+                f"step {i:3d}  max_rho={float(jnp.max(rho)):.3f}  moved={int(stats.n_moved)}"
+                f"  com=({com[0]:.2f},{com[1]:.2f},{com[2]:.2f})"
+            )
+    print("\nPM N-body with Matrix-PIC deposition/gather kernels: OK")
+
+
+if __name__ == "__main__":
+    main()

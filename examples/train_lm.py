@@ -1,0 +1,72 @@
+"""End-to-end LM training driver: trains a reduced model of any assigned
+architecture on the synthetic pipeline with checkpointing + fault-tolerant
+supervision.
+
+    PYTHONPATH=src python examples/train_lm.py --arch starcoder2-7b --steps 200
+    PYTHONPATH=src python examples/train_lm.py --arch deepseek-moe-16b --steps 50 --inject-failure 20
+"""
+
+import argparse
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.checkpoint import CheckpointManager  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_smoke_config  # noqa: E402
+from repro.data import DataConfig, global_batch_at  # noqa: E402
+from repro.distributed import FailureInjector, Supervisor  # noqa: E402
+from repro.optim import AdamWConfig, ScheduleConfig  # noqa: E402
+from repro.train import TrainConfig, init_train_state, make_train_step  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="starcoder2-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--inject-failure", type=int, default=None, help="simulate a node failure at this step")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    print(f"arch={args.arch} (reduced: {cfg.total_layers}L d{cfg.d_model}, {cfg.param_count()/1e6:.1f}M params)")
+
+    data = DataConfig(vocab_size=cfg.vocab_size, global_batch=args.batch, seq_len=args.seq, seed=0)
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        schedule=ScheduleConfig(warmup_steps=10, total_steps=args.steps),
+    )
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    jit_step = jax.jit(make_train_step(cfg, tcfg))
+
+    def make_batch(cfg_model, step):
+        batch = global_batch_at(step, data)
+        if cfg_model.encoder_layers:
+            key = jax.random.fold_in(jax.random.PRNGKey(1), step)
+            batch["frames"] = jax.random.normal(key, (args.batch, cfg_model.encoder_frames, cfg_model.d_model), cfg_model.dtype)
+        if cfg_model.prefix_tokens:
+            key = jax.random.fold_in(jax.random.PRNGKey(2), step)
+            batch["prefix_embeddings"] = jax.random.normal(key, (args.batch, cfg_model.prefix_tokens, cfg_model.d_model), cfg_model.dtype)
+        return batch
+
+    def step_fn(st, i):
+        return jit_step(st, make_batch(cfg, i))
+
+    injector = FailureInjector((args.inject_failure,)) if args.inject_failure else None
+    sup = Supervisor(step_fn, CheckpointManager(args.ckpt_dir, keep=2), save_every=25, injector=injector)
+    state, _ = sup.run(state, args.steps)
+
+    losses = [m["loss"] for m in sup.metrics_log]
+    for i in range(0, len(losses), max(1, len(losses) // 10)):
+        print(f"step {sup.metrics_log[i]['step']:5d}  loss {float(losses[i]):.4f}  "
+              f"{'<- straggler' if sup.metrics_log[i]['straggler'] else ''}")
+    print(f"final loss {float(losses[-1]):.4f} (start {float(losses[0]):.4f}); restarts={sup.restarts}")
+    assert float(losses[-1]) < float(losses[0]), "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: Matrix-PIC on TPU — JAX + Pallas reproduction framework.
+
+Layers:
+  repro.core        — the paper's contribution (deposition, rhocell, GPMA sort)
+  repro.pic         — PIC substrate (Yee/Maxwell, Boris, plasma, sim loop)
+  repro.kernels     — Pallas TPU kernels (+ jnp oracles)
+  repro.models      — assigned LM architectures
+  repro.optim/.data/.checkpoint/.distributed — training substrate
+  repro.configs     — arch + workload configs
+  repro.launch      — mesh / dryrun / train / serve / pic_run entrypoints
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,127 @@
+"""Sharded, atomic, async checkpointing (pure numpy/JSON, no orbax).
+
+Layout:  <dir>/step_<N>/
+            manifest.json        step, names, shapes, dtypes, tree structure
+            arrays.npz           all leaves (host-gathered)
+         <dir>/LATEST            text file with the newest step number
+
+Guarantees:
+  * atomic: written to step_<N>.tmp-<pid> then os.rename (POSIX atomic)
+  * keep-k garbage collection
+  * mesh-agnostic restore: arrays are saved unsharded (host view) and
+    re-device_put with the *restore-time* sharding, so the same checkpoint
+    restores onto a different device count (elastic scaling)
+  * async: save() can run on a background thread; wait() joins.
+
+On a real multi-host pod each host would save only its addressable shards
+(process-local npz + a shared manifest); the single-process layout here is
+the degenerate case of that scheme and the API (save/restore/latest_step)
+is identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = True) -> None:
+        names, leaves, _ = _flatten_with_names(tree)
+        # host-gather (works for sharded global arrays too)
+        host_leaves = [np.asarray(x) for x in leaves]
+
+        if blocking:
+            self._write(step, names, host_leaves)
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=self._write, args=(step, names, host_leaves), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, names, host_leaves) -> None:
+        final = os.path.join(self.directory, f"step_{step:09d}")
+        tmp = final + f".tmp-{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **{f"a{i}": a for i, a in enumerate(host_leaves)})
+        manifest = {
+            "step": step,
+            "names": names,
+            "shapes": [list(a.shape) for a in host_leaves],
+            "dtypes": [str(a.dtype) for a in host_leaves],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.directory, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.directory, "LATEST.tmp"), os.path.join(self.directory, "LATEST"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(tuple([".tmp-%d" % os.getpid()])) and ".tmp" not in name:
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        path = os.path.join(self.directory, "LATEST")
+        if not os.path.exists(path):
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+        with open(path) as f:
+            return int(f.read().strip())
+
+    def restore(self, tree_like, step: int | None = None, *, shardings=None):
+        """Restore into the structure of `tree_like` (arrays or
+        ShapeDtypeStructs). `shardings`: optional matching tree of
+        jax.sharding.Sharding to place leaves onto the current mesh."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        arrays = [data[f"a{i}"] for i in range(len(manifest["names"]))]
+
+        names, leaves, treedef = _flatten_with_names(tree_like)
+        assert names == manifest["names"], "checkpoint/model structure mismatch"
+        out = []
+        shard_leaves = jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
+        for arr, like, shard in zip(arrays, leaves, shard_leaves):
+            assert tuple(arr.shape) == tuple(like.shape), (arr.shape, like.shape)
+            arr = arr.astype(like.dtype)
+            out.append(jax.device_put(arr, shard) if shard is not None else jax.numpy.asarray(arr))
+        return treedef.unflatten(out), step

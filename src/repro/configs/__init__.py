@@ -1,0 +1,1 @@
+"""Architecture + workload configs (one module per assigned arch)."""

@@ -1,0 +1,92 @@
+"""Architecture registry: --arch <id> resolution + dry-run input specs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    deepseek_moe_16b,
+    gemma3_27b,
+    jamba_v0p1_52b,
+    llava_next_mistral_7b,
+    mixtral_8x22b,
+    phi3_mini_3p8b,
+    starcoder2_15b,
+    starcoder2_7b,
+    whisper_tiny,
+    xlstm_1p3b,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_supported  # noqa: F401
+from repro.models import ModelConfig
+
+_MODULES = {
+    m.ARCH_ID: m
+    for m in (
+        deepseek_moe_16b,
+        mixtral_8x22b,
+        xlstm_1p3b,
+        whisper_tiny,
+        starcoder2_15b,
+        starcoder2_7b,
+        gemma3_27b,
+        phi3_mini_3p8b,
+        jamba_v0p1_52b,
+        llava_next_mistral_7b,
+    )
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, *, dtype=jnp.bfloat16) -> ModelConfig:
+    return _MODULES[arch_id].config(dtype=dtype)
+
+
+def get_smoke_config(arch_id: str, *, dtype=jnp.float32) -> ModelConfig:
+    return _MODULES[arch_id].smoke_config(dtype=dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell
+    (weak-type-correct, shardable, no device allocation).
+
+    train:   token batch (+ stub frames / patch embeddings)
+    prefill: token batch
+    decode:  one-token batch + the KV/state caches at shape.seq_len
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda n: jax.ShapeDtypeStruct((b, n), i32)
+
+    if shape.kind == "train":
+        specs = {"inputs": tok(s), "targets": tok(s)}
+        if cfg.encoder_layers:
+            # audio stub: precomputed frame embeddings, decoder trains on s
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+        if cfg.prefix_tokens:
+            # vlm stub: patch embeddings occupy the sequence prefix
+            specs["inputs"] = tok(s - cfg.prefix_tokens)
+            specs["targets"] = tok(s - cfg.prefix_tokens)
+            specs["prefix_embeddings"] = jax.ShapeDtypeStruct((b, cfg.prefix_tokens, cfg.d_model), cfg.dtype)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"inputs": tok(s)}
+        if cfg.encoder_layers:
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+        if cfg.prefix_tokens:
+            specs["inputs"] = tok(s - cfg.prefix_tokens)
+            specs["prefix_embeddings"] = jax.ShapeDtypeStruct((b, cfg.prefix_tokens, cfg.d_model), cfg.dtype)
+        return specs
+
+    if shape.kind == "decode":
+        from repro.models.transformer import init_decode_state
+
+        state = jax.eval_shape(lambda: init_decode_state(cfg, b, s, cfg.dtype))
+        specs = {"tokens": tok(1), "state": state}
+        if cfg.encoder_layers:
+            specs["enc_out"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+        return specs
+
+    raise ValueError(shape.kind)

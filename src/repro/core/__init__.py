@@ -1,0 +1,30 @@
+"""Matrix-PIC core: the paper's contribution as composable JAX modules."""
+
+from repro.core.binning import (  # noqa: F401
+    INVALID,
+    BinnedLayout,
+    build_bins,
+    cell_coords,
+    cell_index,
+    choose_capacity,
+    sort_permutation,
+)
+from repro.core.deposition import (  # noqa: F401
+    CURRENT_STAGGER,
+    NO_STAGGER,
+    STAGGER_X,
+    STAGGER_Y,
+    STAGGER_Z,
+    binned_shape_factors,
+    deposit_current,
+    deposit_current_matrix_fused,
+    deposit_matrix,
+    deposit_rhocell,
+    deposit_scatter,
+)
+from repro.core.gather import gather_matrix, gather_scatter  # noqa: F401
+from repro.core.gpma import GPMAStats, gpma_update  # noqa: F401
+from repro.core.matrix_scatter import matrix_scatter_add, scatter_add_ref  # noqa: F401
+from repro.core.resort_policy import ResortPolicy, SortPolicyConfig  # noqa: F401
+from repro.core.rhocell import fold_guards, reduce_rhocell, reduce_rhocell_separable, unfold_guards  # noqa: F401
+from repro.core.shape_functions import bspline, max_guard, shape_weights, support  # noqa: F401

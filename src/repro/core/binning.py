@@ -1,0 +1,110 @@
+"""Cell binning: the paper's ``GlobalSortParticlesByCell`` (counting sort).
+
+The binned layout mirrors the paper's GPMA storage:
+
+  slots:          (n_cells, capacity) int32 — particle index or INVALID (-1)
+  particle_slot:  (n_particles,)       int32 — flat slot of each particle
+                                               (INVALID if dead / overflowed)
+
+Bins are rows; gaps (INVALID entries) are the GPMA's interspersed empty
+slots. After a global sort the valid entries of row ``c`` are packed at the
+front of the row and the particle *attribute arrays themselves* are permuted
+into cell order (memory coherence, paper §4.4). Incremental updates
+(gpma.py) only touch the index structure, never the attribute arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BinnedLayout:
+    """Functional GPMA index state (pytree)."""
+
+    slots: jax.Array          # (n_cells, capacity) int32, particle id or -1
+    particle_slot: jax.Array  # (n_particles,) int32, flat slot id or -1
+
+    @property
+    def n_cells(self) -> int:
+        return self.slots.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.slots.shape[1]
+
+    def valid_mask(self) -> jax.Array:
+        return self.slots >= 0
+
+    def n_empty(self) -> jax.Array:
+        return jnp.sum(self.slots < 0)
+
+
+def cell_index(pos, grid_shape) -> jax.Array:
+    """Flattened cell id for positions in grid units. pos: (..., 3)."""
+    nx, ny, nz = grid_shape
+    ix = jnp.clip(jnp.floor(pos[..., 0]).astype(jnp.int32), 0, nx - 1)
+    iy = jnp.clip(jnp.floor(pos[..., 1]).astype(jnp.int32), 0, ny - 1)
+    iz = jnp.clip(jnp.floor(pos[..., 2]).astype(jnp.int32), 0, nz - 1)
+    return (ix * ny + iy) * nz + iz
+
+
+def cell_coords(n_cells: int, grid_shape) -> jax.Array:
+    """(n_cells, 3) integer coordinates of each flattened cell id."""
+    nx, ny, nz = grid_shape
+    c = jnp.arange(n_cells, dtype=jnp.int32)
+    iz = c % nz
+    iy = (c // nz) % ny
+    ix = c // (ny * nz)
+    return jnp.stack([ix, iy, iz], axis=-1)
+
+
+@partial(jax.jit, static_argnames=("n_cells", "capacity"))
+def build_bins(cell_ids, alive, *, n_cells: int, capacity: int):
+    """Counting-sort rebuild of the binned layout.
+
+    Dead particles (alive == False) get particle_slot = -1. Particles whose
+    within-cell rank exceeds `capacity` overflow: they are left unslotted and
+    counted, so the caller can grow capacity and retry (host-side).
+
+    Returns (layout, overflow_count).
+    """
+    n = cell_ids.shape[0]
+    key = jnp.where(alive, cell_ids, n_cells)  # dead -> sentinel bin
+    order = jnp.argsort(key, stable=True)
+    sorted_key = key[order]
+    # rank within cell = position - first position of this cell id
+    first = jnp.searchsorted(sorted_key, sorted_key, side="left")
+    rank = jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+
+    in_range = (sorted_key < n_cells) & (rank < capacity)
+    overflow = jnp.sum((sorted_key < n_cells) & (rank >= capacity))
+
+    flat_slot = jnp.where(in_range, sorted_key.astype(jnp.int32) * capacity + rank, n_cells * capacity)
+    slots = jnp.full((n_cells * capacity + 1,), INVALID)
+    slots = slots.at[flat_slot].set(order.astype(jnp.int32))[:-1]
+    particle_slot = jnp.full((n,), INVALID)
+    particle_slot = particle_slot.at[order].set(jnp.where(in_range, flat_slot, INVALID).astype(jnp.int32))
+
+    return BinnedLayout(slots=slots.reshape(n_cells, capacity), particle_slot=particle_slot), overflow
+
+
+def sort_permutation(cell_ids, alive) -> jax.Array:
+    """Permutation putting alive particles in cell order (the global sort's
+    attribute permutation). Apply with tree_map(lambda a: a[perm], attrs)."""
+    n = cell_ids.shape[0]
+    key = jnp.where(alive, cell_ids, jnp.int32(2**30))
+    return jnp.argsort(key, stable=True)
+
+
+def choose_capacity(max_ppc: int, headroom: float = 1.5, multiple: int = 8) -> int:
+    """Bin capacity with GPMA gap headroom, rounded to a lane-friendly multiple."""
+    cap = int(max(1, max_ppc) * headroom) + 1
+    return ((cap + multiple - 1) // multiple) * multiple

@@ -1,0 +1,97 @@
+"""Field gather (grid -> particles), the inverse of deposition.
+
+The paper lists gather optimization as future work; we implement it with the
+same co-design (beyond-paper, DESIGN.md §7): per-cell the (Tx,Ty,Tz) node
+neighbourhood is extracted ONCE with dense shifted slices (shared by all
+particles in the bin — the locality the sorter establishes), then each
+particle's value is a small contraction against its tap weights:
+
+    E_p = sum_{m,n} wx_p[m] * (B_p[n] * G_c[m, n])     (B = wy (x) wz)
+
+which is again a batched matmul over the bin axis.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shape_functions as sf
+from repro.core.binning import BinnedLayout, cell_coords
+from repro.core.deposition import NO_STAGGER, Stagger, _per_dim_weights, _taps_and_bases
+
+
+@partial(jax.jit, static_argnames=("order", "stagger", "guard"))
+def gather_scatter(pos, grid_padded, *, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None):
+    """Baseline per-particle gather from a guard-padded grid. (Np,) values."""
+    g = sf.max_guard(order) if guard is None else guard
+    cells = jnp.floor(pos).astype(jnp.int32)
+    wx, wy, wz = _per_dim_weights(pos, cells, order, stagger)
+    (tx, ty, tz), (bx, by, bz) = _taps_and_bases(order, stagger)
+
+    nxp, nyp, nzp = grid_padded.shape
+    ix = cells[:, 0, None] + (bx + g) + jnp.arange(tx)
+    iy = cells[:, 1, None] + (by + g) + jnp.arange(ty)
+    iz = cells[:, 2, None] + (bz + g) + jnp.arange(tz)
+    flat = ((ix[:, :, None, None] * nyp + iy[:, None, :, None]) * nzp + iz[:, None, None, :])
+    vals = grid_padded.reshape(-1)[flat]  # (Np, tx, ty, tz)
+    w3 = wx[:, :, None, None] * wy[:, None, :, None] * wz[:, None, None, :]
+    return jnp.sum(vals * w3, axis=(1, 2, 3))
+
+
+def extract_neighborhoods(grid_padded, grid_shape, *, taps, bases, guard: int):
+    """Dense per-cell tap neighbourhoods: (n_cells, Tx, Ty, Tz).
+
+    Pure shifted slicing — the dual of reduce_rhocell."""
+    nx, ny, nz = grid_shape
+    g = guard
+    tx, ty, tz = taps
+    bx, by, bz = bases
+    blocks = []
+    for a in range(tx):
+        for b in range(ty):
+            for c in range(tz):
+                blocks.append(
+                    grid_padded[
+                        g + bx + a : g + bx + a + nx,
+                        g + by + b : g + by + b + ny,
+                        g + bz + c : g + bz + c + nz,
+                    ]
+                )
+    stacked = jnp.stack(blocks, axis=-1)  # (nx, ny, nz, tx*ty*tz)
+    return stacked.reshape(nx * ny * nz, tx, ty, tz)
+
+
+@partial(jax.jit, static_argnames=("grid_shape", "order", "stagger", "guard"))
+def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None):
+    """Binned matrix gather. Returns (Np,) values (0 for unslotted particles).
+    """
+    g = sf.max_guard(order) if guard is None else guard
+    taps, bases = _taps_and_bases(order, stagger)
+    tx, ty, tz = taps
+    n_cells, cap = layout.slots.shape
+
+    neigh = extract_neighborhoods(grid_padded, grid_shape, taps=taps, bases=bases, guard=g)
+    neigh = neigh.reshape(n_cells, tx, ty * tz)
+
+    slots = layout.slots
+    p = jnp.maximum(slots, 0)
+    valid = slots >= 0
+    pos_b = pos[p]
+    cells = cell_coords(n_cells, grid_shape)
+    d = pos_b - cells[:, None, :].astype(pos.dtype)
+    wx = sf.shape_weights(d[..., 0], order, stagger[0])
+    wy = sf.shape_weights(d[..., 1], order, stagger[1])
+    wz = sf.shape_weights(d[..., 2], order, stagger[2])
+    byz = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, ty * tz)
+
+    # H[c,p,m] = sum_n B[c,p,n] G[c,m,n]; E[c,p] = sum_m wx[c,p,m] H[c,p,m]
+    h = jnp.einsum("cpn,cmn->cpm", byz, neigh)
+    e_bins = jnp.sum(wx * h, axis=-1) * valid
+
+    # scatter back to particle order via the slot map
+    e_flat = e_bins.reshape(-1)
+    pslot = layout.particle_slot
+    return jnp.where(pslot >= 0, e_flat[jnp.maximum(pslot, 0)], jnp.zeros((), e_flat.dtype))

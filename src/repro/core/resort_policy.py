@@ -1,0 +1,89 @@
+"""Adaptive global re-sorting policy (paper §4.4, Table 4 parameters).
+
+Host-side driver logic: consumes GPMAStats scalars from the jitted step and
+decides when to run the full counting sort (GlobalSortParticlesByCell). The
+five prioritized strategies are implemented verbatim:
+
+  1. Minimum interval   — never sort within `min_sort_interval` steps.
+  2. Fixed interval     — always sort every `sort_interval` steps.
+  3. Local rebuilds     — sort when cumulative GPMA rebuilds exceed
+                          `sort_trigger_rebuild_count`.
+  4. Empty-slot ratio   — sort when the gap ratio leaves the
+                          [`sort_trigger_empty_ratio`, `sort_trigger_full_ratio`]
+                          band (too few gaps -> imminent overflow; too many ->
+                          fragmented, wasted bandwidth).
+  5. Performance        — (optional) sort when the step-time EMA degrades
+                          below `sort_trigger_perf_degrad` x baseline.
+
+Defaults mirror the paper's Table 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class SortPolicyConfig:
+    sort_interval: int = 50
+    min_sort_interval: int = 10
+    sort_trigger_rebuild_count: int = 100
+    sort_trigger_empty_ratio: float = 0.15
+    sort_trigger_full_ratio: float = 0.85
+    sort_trigger_perf_enable: bool = True
+    sort_trigger_perf_degrad: float = 0.80
+
+
+@dataclasses.dataclass
+class SortPolicyState:
+    steps_since_sort: int = 0
+    rebuilds_since_sort: int = 0
+    baseline_perf: float | None = None  # particles/sec right after a sort
+    perf_ema: float | None = None
+
+
+class ResortPolicy:
+    """ShouldPerformGlobalSort / ResetRankSortCounters (paper Alg. 1)."""
+
+    def __init__(self, config: SortPolicyConfig | None = None):
+        self.config = config or SortPolicyConfig()
+        self.state = SortPolicyState()
+
+    def record_step(self, *, rebuilt: bool, perf: float | None = None) -> None:
+        st = self.state
+        st.steps_since_sort += 1
+        if rebuilt:
+            st.rebuilds_since_sort += 1
+        if perf is not None:
+            st.perf_ema = perf if st.perf_ema is None else 0.8 * st.perf_ema + 0.2 * perf
+            if st.baseline_perf is None:
+                st.baseline_perf = perf
+
+    def should_sort(self, *, empty_ratio: float, overflowed: bool = False) -> tuple[bool, str]:
+        """Returns (do_sort, reason). Overflow forces a sort (correctness)."""
+        cfg, st = self.config, self.state
+        if overflowed:
+            return True, "overflow (mandatory rebuild)"
+        if st.steps_since_sort < cfg.min_sort_interval:
+            return False, "min_interval"
+        if st.steps_since_sort >= cfg.sort_interval:
+            return True, "fixed_interval"
+        if st.rebuilds_since_sort >= cfg.sort_trigger_rebuild_count:
+            return True, "rebuild_count"
+        if empty_ratio < cfg.sort_trigger_empty_ratio:
+            return True, "empty_ratio_low"
+        if empty_ratio > cfg.sort_trigger_full_ratio:
+            return True, "empty_ratio_high"
+        if (
+            cfg.sort_trigger_perf_enable
+            and st.baseline_perf is not None
+            and st.perf_ema is not None
+            and st.perf_ema < cfg.sort_trigger_perf_degrad * st.baseline_perf
+        ):
+            return True, "perf_degradation"
+        return False, "no_trigger"
+
+    def reset(self) -> None:
+        """ResetRankSortCounters: called right after a global sort."""
+        perf = self.state.perf_ema
+        self.state = SortPolicyState(baseline_perf=None, perf_ema=perf)

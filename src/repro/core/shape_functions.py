@@ -1,0 +1,101 @@
+"""B-spline particle shape functions (CIC / TSC / QSP) with fixed-support taps.
+
+Conventions
+-----------
+Positions are in *grid units*: a particle at ``x`` lives in cell
+``c = floor(x)`` with fractional offset ``d = x - c in [0, 1)``.
+
+Unstaggered nodes sit at integer coordinates ``i``; staggered nodes (Yee
+half-grid, used for current components along their own axis) sit at
+``i + 1/2``.
+
+The paper's deposition orders map to B-spline orders (WarpX
+``algo.particle_shape``):
+
+  order 1  CIC   (linear,   support 2)
+  order 2  TSC   (quadratic, support 3)
+  order 3  QSP   (cubic,     support 4)   -- the paper's "third-order QSP"
+
+TPU adaptation (DESIGN.md §2): to keep the per-cell rhocell reduction a
+*fixed-offset dense shifted add* we use a fixed tap window per
+``(order, staggered)`` wide enough to cover the support for every
+``d in [0,1)``; taps outside the true support evaluate to exactly 0 through
+the piecewise B-spline. The window is ``SUPPORT[(order, staggered)]``:
+``(n_taps, base_offset)`` with node offsets ``base .. base+n_taps-1``
+relative to the particle's cell index.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# (order, staggered) -> (n_taps, base_offset)
+SUPPORT: dict[tuple[int, bool], tuple[int, int]] = {
+    (1, False): (2, 0),
+    (2, False): (4, -1),   # widened: true support 3, base depends on d
+    (3, False): (4, -1),
+    (1, True): (3, -1),    # widened: true support 2
+    (2, True): (3, -1),
+    (3, True): (5, -2),    # widened: true support 4
+}
+
+ORDERS = (1, 2, 3)
+
+# FLOPs of the canonical *scalar* deposition algorithm per particle (one
+# current component = (o+1)^3 fma*2 + 1D factor math), used for the paper's
+# "effective computational work" metric (419 FLOPs/particle for QSP, 3 comps).
+CANONICAL_FLOPS_PER_PARTICLE = {1: 61, 2: 190, 3: 419}
+
+
+def bspline(order: int, u):
+    """Centered B-spline of given order evaluated at (signed) distance u."""
+    a = jnp.abs(u)
+    if order == 1:
+        return jnp.maximum(jnp.asarray(0.0, a.dtype), 1.0 - a)
+    if order == 2:
+        inner = 0.75 - a * a
+        outer = 0.5 * (1.5 - a) ** 2
+        zero = jnp.zeros_like(a)
+        return jnp.where(a < 0.5, inner, jnp.where(a < 1.5, outer, zero))
+    if order == 3:
+        inner = 2.0 / 3.0 - a * a + 0.5 * a * a * a
+        outer = (2.0 - a) ** 3 / 6.0
+        zero = jnp.zeros_like(a)
+        return jnp.where(a < 1.0, inner, jnp.where(a < 2.0, outer, zero))
+    raise ValueError(f"unsupported shape order {order}")
+
+
+def shape_weights(d, order: int, staggered: bool):
+    """1-D shape factors for fractional in-cell position ``d``.
+
+    Args:
+      d: (...,) array, fractional position in [0, 1) relative to the cell.
+      order: 1 | 2 | 3.
+      staggered: whether target nodes sit on the half-grid (i + 1/2).
+
+    Returns:
+      (..., T) weights at node offsets ``base .. base+T-1`` (see SUPPORT).
+      Rows sum to 1 (partition of unity) for any d in [0, 1).
+    """
+    n_taps, base = SUPPORT[(order, staggered)]
+    shift = 0.5 if staggered else 0.0
+    offs = jnp.arange(n_taps, dtype=d.dtype) + (base + shift)
+    return bspline(order, d[..., None] - offs)
+
+
+def support(order: int, staggered: bool) -> tuple[int, int]:
+    """(n_taps, base_offset) for the fixed tap window."""
+    return SUPPORT[(order, staggered)]
+
+
+def max_guard(order: int) -> int:
+    """Guard-cell width needed so every tap of every stagger stays in-range.
+
+    Tap node index range relative to cell c: [c+base, c+base+T-1]. With cells
+    in [0, n), node indices span [base, n-1+base+T-1]; a guard of
+    g = max(-base, base+T-1-1) + 1 is safe; we return a simple conservative
+    bound.
+    """
+    lo = min(SUPPORT[(order, s)][1] for s in (False, True))
+    hi = max(SUPPORT[(order, s)][0] + SUPPORT[(order, s)][1] for s in (False, True))
+    return max(-lo, hi - 1)

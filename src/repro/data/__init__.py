@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, DataIterator, global_batch_at, shard_batch_at  # noqa: F401

@@ -1,0 +1,80 @@
+"""Deterministic, stateless-resumable synthetic LM data pipeline.
+
+Design requirements for 1000-node runs:
+  * stateless: batch(step) is a pure function of (seed, step, shard), so
+    restart-from-checkpoint needs no data-iterator state, and elastic
+    re-sharding (different data-parallel width) re-partitions the SAME
+    global batch deterministically.
+  * structured: tokens follow a k-th order Markov-ish recurrence so models
+    have signal to fit (loss decreases — used by the convergence tests and
+    the end-to-end example).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+
+def _synth_tokens(key, batch: int, seq: int, vocab: int, seed: int):
+    """Learnable pseudo-language: x_{t+1} = (a*x_t + b*x_{t-1} + 1 + noise) % V
+    with DATASET-global (a, b) derived from the seed — a second-order Markov
+    structure a model can fit (up to the 5% noise floor)."""
+    a = seed % 5 + 2
+    b = (seed // 5) % 3
+    k3, k4 = jax.random.split(key)
+    x0 = jax.random.randint(k3, (batch, 2), 0, vocab)
+    noise = (jax.random.uniform(k4, (batch, seq)) < 0.05).astype(jnp.int32)
+
+    def step(carry, t):
+        x_prev2, x_prev1 = carry
+        nxt = (a * x_prev1 + b * x_prev2 + noise[:, t] + 1) % vocab
+        return (x_prev1, nxt), nxt
+
+    _, toks = jax.lax.scan(step, (x0[:, 0], x0[:, 1]), jnp.arange(seq))
+    return toks.T  # (batch, seq)
+
+
+def global_batch_at(step: int, cfg: DataConfig):
+    """The full (global_batch, seq_len+1) token block for a step."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    toks = _synth_tokens(key, cfg.global_batch, cfg.seq_len + 1, cfg.vocab_size, cfg.seed)
+    return {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def shard_batch_at(step: int, cfg: DataConfig, shard: int, n_shards: int):
+    """Deterministic shard of the global batch (elastic re-sharding safe)."""
+    assert cfg.global_batch % n_shards == 0
+    per = cfg.global_batch // n_shards
+    full = global_batch_at(step, cfg)
+    return jax.tree.map(lambda x: x[shard * per : (shard + 1) * per], full)
+
+
+class DataIterator:
+    """Thin stateful convenience over the stateless functions."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+
+    def __next__(self):
+        batch = global_batch_at(self.step, self.cfg)
+        self.step += 1
+        return batch
+
+    def state(self) -> dict:
+        return {"step": self.step}
+
+    @classmethod
+    def restore(cls, cfg: DataConfig, state: dict) -> "DataIterator":
+        return cls(cfg, start_step=state["step"])

@@ -1,0 +1,2 @@
+from repro.distributed.fault import FailureInjector, StragglerMonitor, Supervisor  # noqa: F401
+from repro.distributed.sharding import Rules, constrain, decode_rules, train_rules, tree_specs, use_rules  # noqa: F401

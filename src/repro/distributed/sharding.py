@@ -1,0 +1,169 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+launchers install a rules table mapping logical names to mesh axes.
+
+Without an installed rules table (unit tests, single device) every
+annotation is a no-op, so model code is identical on 1 chip and 512.
+
+Logical axes used across the stack:
+  batch       global batch                    -> ('pod','data') / ('data',)
+  seq         sequence (activations)          -> 'model' (sequence parallel)
+  kv_seq      KV-cache sequence               -> shape-strategy dependent
+  heads       attention heads                 -> 'model'
+  embed       residual stream features        -> usually None (replicated)
+  mlp         FFN hidden                      -> 'model'
+  experts     MoE expert dim                  -> 'model' (EP)
+  vocab       vocabulary                      -> 'model'
+  fsdp        parameter sharding dim          -> 'data' (ZeRO-3)
+  stack       scan-stacked layer dim          -> None
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+class Rules:
+    """Mapping logical axis name -> mesh axis (str | tuple | None)."""
+
+    def __init__(self, table: dict, mesh=None):
+        self.table = dict(table)
+        self.mesh = mesh
+
+    def spec(self, axes: tuple) -> P:
+        out = []
+        for ax in axes:
+            m = self.table.get(ax) if ax is not None else None
+            out.append(m)
+        return P(*out)
+
+
+def current_rules() -> Rules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_spec(axes: tuple) -> P | None:
+    r = current_rules()
+    return r.spec(axes) if r is not None else None
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes; no-op without rules."""
+    r = current_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.spec(axes))
+
+
+def tree_specs(logical_tree, rules: Rules):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+# ------------------------------------------------------------------
+# standard rule tables per run mode (see DESIGN.md §5)
+# ------------------------------------------------------------------
+
+def train_rules(multi_pod: bool, *, expert_parallel: bool = True) -> dict:
+    """expert_parallel: EP shards MoE experts over 'model' (needs
+    n_experts % model_axis == 0); otherwise TP shards the expert FFN width
+    (mixtral: 8 experts < 16-way model axis)."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": "model",        # sequence-parallel residual stream
+        "kv_seq": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "embed": None,
+        "mlp": "model",
+        "experts": "model" if expert_parallel else None,
+        "expert_mlp": None if expert_parallel else "model",
+        "vocab": "model",
+        "fsdp": batch,         # ZeRO param/optimizer sharding
+        "stack": None,
+    }
+
+
+def rules_for(cfg, *, mode: str, multi_pod: bool, data_axis: int = 16, model_axis: int = 16, shard_batch: bool = True) -> dict:
+    """Arch-aware rule table: every logical axis falls back to replication
+    when the corresponding tensor dimension doesn't divide the mesh axis
+    (whisper's 6 heads, starcoder2-7b's 36 heads, mixtral's 8 experts, ...).
+
+    mode: "train" | "decode". For decode, if kv heads can't shard over
+    'model' the KV-cache *sequence* is sharded there instead
+    (flash-decode-style partial-softmax reduction, handled by XLA).
+    """
+    batch = ("pod", "data") if multi_pod else ("data",)
+    div = lambda n, m: (n % m == 0) and n >= m
+
+    # uneven sharding (GSPMD pads) is fine when the dim exceeds the axis:
+    # starcoder2-7b's 36 heads pad to 48 (33% attn overhead << replication)
+    heads = "model" if cfg.n_heads >= model_axis else None
+    kv_heads = "model" if div(cfg.n_kv_heads, model_axis) else None
+    vocab = "model"  # always worth sharding; pad <= 1 row per shard
+    mlp = "model"
+    ep = cfg.moe is not None and div(cfg.moe.n_experts, model_axis)
+
+    table = {
+        "batch": batch if shard_batch else None,
+        "seq": "model" if mode == "train" else None,
+        "kv_seq": None,
+        "heads": heads,
+        "kv_heads": kv_heads,
+        "embed": None,
+        "mlp": mlp,
+        "experts": "model" if ep else None,
+        "expert_mlp": None if (ep or cfg.moe is None) else "model",
+        "vocab": vocab,
+        "fsdp": batch,
+        "stack": None,
+    }
+    if mode == "decode":
+        if kv_heads is None:
+            table["kv_seq"] = "model"
+        if not shard_batch:
+            # batch=1 long-context decode: shard KV sequence over everything
+            table["kv_seq"] = batch + ("model",) if kv_heads is None else batch
+    if cfg.name.startswith("whisper"):
+        # tiny model: sequence parallelism not worth it / 1500-frame encoder
+        table["seq"] = None
+    return table
+
+
+def decode_rules(multi_pod: bool, *, shard_batch: bool = True, expert_parallel: bool = True) -> dict:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch if shard_batch else None,
+        "seq": None,
+        # batch=1 long-context decode shards the KV sequence instead
+        "kv_seq": None if shard_batch else batch,
+        "heads": "model",
+        "kv_heads": "model",
+        "embed": None,
+        "mlp": "model",
+        "experts": "model" if expert_parallel else None,
+        "expert_mlp": None if expert_parallel else "model",
+        "vocab": "model",
+        "fsdp": batch,
+        "stack": None,
+    }

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the Matrix-PIC hot spots.
+
+Each kernel family ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).
+"""

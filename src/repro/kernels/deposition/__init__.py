@@ -1,0 +1,2 @@
+from repro.kernels.deposition.ops import bin_outer_product  # noqa: F401
+from repro.kernels.deposition.ref import bin_outer_product_ref  # noqa: F401

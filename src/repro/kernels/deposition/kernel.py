@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: binned outer-product deposition (the MOPA analogue).
+
+Computes  out[c] = A_c^T @ B_c  for every cell bin c:
+
+    A: (n_cells, cap, M)   w_p * s_x shape factors (gaps are zero rows)
+    B: (n_cells, cap, N)   s_y (x) s_z factors
+    out: (n_cells, M, N)   the rhocell tiles
+
+TPU mapping (DESIGN.md §2): the per-cell sum of outer products IS the MPU
+tile accumulation — on TPU it is a contraction over the bin capacity axis,
+executed as a batched dot on the MXU. The grid tiles the cell axis; each
+grid step holds a (block_cells, cap, ·) slab in VMEM, so the "tile stays
+resident while the cell's particles stream" property of the paper holds
+block-wise. Capacity should be a multiple of 8 (lane alignment; 128 for
+full MXU depth utilization — see choose_capacity()).
+
+Two kernel bodies:
+  * mxu:  jax.lax.dot_general batched over cells, contracting cap — the
+          matrix-unit path (the paper's MPU kernel).
+  * vpu:  broadcast-multiply + reduce over cap — the vector-unit fallback
+          used for very small tiles (paper's low-density hybrid fallback).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mxu_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def _vpu_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]  # (CB, cap, M)
+    b = b_ref[...]  # (CB, cap, N)
+    o_ref[...] = jnp.sum(a[:, :, :, None] * b[:, :, None, :], axis=1, dtype=o_ref.dtype)
+
+
+def bin_outer_product_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_cells: int | None = None,
+    mode: str = "mxu",
+    interpret: bool = True,
+    vmem_budget_bytes: int = 4 * 1024 * 1024,
+) -> jax.Array:
+    """Batched per-bin contraction via pl.pallas_call.
+
+    a: (C, cap, M), b: (C, cap, N) -> (C, M, N) float32.
+    """
+    c, cap, m = a.shape
+    n = b.shape[2]
+    assert b.shape[:2] == (c, cap)
+
+    if block_cells is None:
+        per_cell = cap * (m + n) * 4 + m * n * 4
+        block_cells = max(1, min(c, vmem_budget_bytes // max(per_cell, 1)))
+    cb = min(block_cells, c)
+
+    kernel = _mxu_kernel if mode == "mxu" else _vpu_kernel
+    grid = (pl.cdiv(c, cb),)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cb, cap, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb, cap, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((cb, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the deposition kernel.
+
+`bin_outer_product` routes to the Pallas kernel (interpret=True on CPU —
+the kernel body executes exactly as written; compiled Mosaic on real TPU)
+and is what `PICConfig(use_pallas=True)` plugs into deposit_matrix as
+`bin_matmul`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.deposition.kernel import bin_outer_product_pallas
+from repro.kernels.deposition.ref import bin_outer_product_ref  # noqa: F401
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("mode", "block_cells"))
+def bin_outer_product(a, b, *, mode: str = "mxu", block_cells: int | None = None):
+    return bin_outer_product_pallas(a, b, mode=mode, block_cells=block_cells, interpret=_on_cpu())

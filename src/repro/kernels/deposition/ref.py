@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the binned outer-product deposition kernel."""
+
+import jax.numpy as jnp
+
+
+def bin_outer_product_ref(a, b):
+    """out[c] = A_c^T @ B_c. a: (C, cap, M), b: (C, cap, N) -> (C, M, N)."""
+    return jnp.einsum("cpm,cpn->cmn", a, b, preferred_element_type=jnp.float32)

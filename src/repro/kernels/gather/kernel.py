@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: binned field gather (inverse of the deposition kernel).
+
+Per cell, the (Tx, Ty*Tz) node neighbourhood G_c is shared by every particle
+in the bin (the locality the GPMA sorter establishes); each particle's value
+is
+
+    e[c, p] = sum_m wx[c, p, m] * (sum_n byz[c, p, n] * G[c, m, n])
+
+i.e. one batched matmul (contract the tap product axis on the MXU) plus a
+small VPU reduction over the Tx taps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(wx_ref, byz_ref, g_ref, o_ref):
+    wx = wx_ref[...]    # (CB, cap, M)
+    byz = byz_ref[...]  # (CB, cap, N)
+    g = g_ref[...]      # (CB, M, N)
+    # H[c,p,m] = sum_n byz[c,p,n] * G[c,m,n]   (MXU batched matmul)
+    h = jax.lax.dot_general(
+        byz, g, dimension_numbers=(((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    # e[c,p] = sum_m wx * H                    (VPU reduction)
+    o_ref[...] = jnp.sum(wx * h, axis=-1)
+
+
+def bin_gather_pallas(
+    wx: jax.Array,
+    byz: jax.Array,
+    g: jax.Array,
+    *,
+    block_cells: int | None = None,
+    interpret: bool = True,
+    vmem_budget_bytes: int = 4 * 1024 * 1024,
+) -> jax.Array:
+    """wx: (C, cap, M); byz: (C, cap, N); g: (C, M, N) -> (C, cap) values."""
+    c, cap, m = wx.shape
+    n = byz.shape[2]
+    if block_cells is None:
+        per_cell = cap * (m + n + 1) * 4 + m * n * 4
+        block_cells = max(1, min(c, vmem_budget_bytes // max(per_cell, 1)))
+    cb = min(block_cells, c)
+
+    grid = (pl.cdiv(c, cb),)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cb, cap, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb, cap, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb, m, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((cb, cap), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, cap), jnp.float32),
+        interpret=interpret,
+    )(wx, byz, g)

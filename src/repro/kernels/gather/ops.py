@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the binned gather kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.gather.kernel import bin_gather_pallas
+from repro.kernels.gather.ref import bin_gather_ref  # noqa: F401
+
+
+@partial(jax.jit, static_argnames=("block_cells",))
+def bin_gather(wx, byz, g, *, block_cells: int | None = None):
+    return bin_gather_pallas(wx, byz, g, block_cells=block_cells, interpret=jax.default_backend() == "cpu")

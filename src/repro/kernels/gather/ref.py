@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the binned gather kernel."""
+
+import jax.numpy as jnp
+
+
+def bin_gather_ref(wx, byz, g):
+    """e[c,p] = sum_{m,n} wx[c,p,m] byz[c,p,n] g[c,m,n]."""
+    h = jnp.einsum("cpn,cmn->cpm", byz, g, preferred_element_type=jnp.float32)
+    return jnp.sum(wx * h, axis=-1)

@@ -1,0 +1,2 @@
+from repro.kernels.scatter_matrix.ops import segment_accumulate  # noqa: F401
+from repro.kernels.scatter_matrix.ref import segment_accumulate_ref  # noqa: F401

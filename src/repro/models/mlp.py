@@ -1,0 +1,41 @@
+"""Dense FFN: SwiGLU (llama-family) or GELU (whisper/starcoder-family)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ModelConfig, dense_init
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": dense_init(k1, (cfg.d_model, d_ff), cfg.dtype),
+            "w_up": dense_init(k2, (cfg.d_model, d_ff), cfg.dtype),
+            "w_down": dense_init(k3, (d_ff, cfg.d_model), cfg.dtype),
+        }
+    return {
+        "w_up": dense_init(k1, (cfg.d_model, d_ff), cfg.dtype),
+        "w_down": dense_init(k2, (d_ff, cfg.d_model), cfg.dtype),
+    }
+
+
+def mlp_axes(cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        return {"w_gate": ("fsdp", "mlp"), "w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")}
+    return {"w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")}
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"])) * jnp.einsum(
+            "bsd,df->bsf", x, params["w_up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_up"]))
+    h = constrain(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts with Matrix-PIC sorted dispatch.
+
+This layer is the LM-side instantiation of the paper's co-design
+(DESIGN.md §4): token->expert assignments are the "particles", experts the
+"cells", and the capacity-slot buffer the gapped binned layout:
+
+  stage 1 (sort):    counting-sort assignments by expert id (key-only
+                     argsort + rank-within-expert == core/binning.build_bins)
+  stage 2 (matrix):  per-expert dense FFN on the (E, C, d) buffer — batched
+                     MXU contractions over capacity slots; gap slots are
+                     zero rows, exactly like the zeroed MPU lanes
+  stage 3 (combine): each token gathers its top-k slot outputs weighted by
+                     the router gate (the rhocell -> grid reduction analogue)
+
+Covers: Mixtral (8e top-2), DeepSeek-MoE (shared + 64 fine-grained top-6),
+Jamba (16e top-2). Expert dim is sharded over 'model' (EP) via logical
+constraints.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ModelConfig, MoEConfig, dense_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d_e = m.d_expert or cfg.d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(k1, (cfg.d_model, m.n_experts), jnp.float32),
+        "w_gate": dense_init(k2, (m.n_experts, cfg.d_model, d_e), cfg.dtype),
+        "w_up": dense_init(k3, (m.n_experts, cfg.d_model, d_e), cfg.dtype),
+        "w_down": dense_init(k4, (m.n_experts, d_e, cfg.d_model), cfg.dtype),
+    }
+    if m.n_shared:
+        ks = jax.random.split(k5, 3)
+        params["shared"] = {
+            "w_gate": dense_init(ks[0], (cfg.d_model, d_e * m.n_shared), cfg.dtype),
+            "w_up": dense_init(ks[1], (cfg.d_model, d_e * m.n_shared), cfg.dtype),
+            "w_down": dense_init(ks[2], (d_e * m.n_shared, cfg.d_model), cfg.dtype),
+        }
+    return params
+
+
+def moe_axes(cfg: ModelConfig):
+    # 'experts' and 'expert_mlp' are resolved by the launch rules: EP shards
+    # experts over 'model' (expert_mlp=None) when divisible, else TP shards
+    # the expert FFN width (experts=None, expert_mlp='model').
+    ax = {
+        "router": ("fsdp", None),
+        "w_gate": ("experts", "fsdp", "expert_mlp"),
+        "w_up": ("experts", "fsdp", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "fsdp"),
+    }
+    if cfg.moe and cfg.moe.n_shared:
+        ax["shared"] = {"w_gate": ("fsdp", "mlp"), "w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")}
+    return ax
+
+
+def _capacity(n_tokens: int, m: MoEConfig) -> int:
+    # multiple of 256 so the capacity axis can shard over ('pod','data')
+    c = int(n_tokens * m.top_k / m.n_experts * m.capacity_factor) + 1
+    return max(8, ((c + 255) // 256) * 256) if c > 256 else max(8, ((c + 7) // 8) * 8)
+
+
+def _dispatch_row(expert_ids_k, *, n_experts: int, cap: int, s: int, k: int):
+    """Counting-sort dispatch for ONE sequence's S*k assignments.
+
+    Returns (slot_token (E*cap,), a_slot (S*k,), fits (S*k,)). Pure index
+    math — vmapped over the batch so every gather/scatter stays local to the
+    token's data shard (the per-rank dispatch of real EP systems; a global
+    sort would force GSPMD to all-gather the token stream — measured in
+    EXPERIMENTS.md §Perf)."""
+    a_expert = expert_ids_k.reshape(-1)                     # (S*k,)
+    a_token = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+
+    order = jnp.argsort(a_expert, stable=True)              # key-only sort
+    se = a_expert[order]
+    first = jnp.searchsorted(se, se, side="left")
+    rank = (jnp.arange(s * k) - first).astype(jnp.int32)
+    fits_sorted = rank < cap
+
+    dump = n_experts * cap
+    dst = jnp.where(fits_sorted, se * cap + rank, dump)
+
+    slot_token = jnp.full((n_experts * cap + 1,), s, jnp.int32)
+    slot_token = slot_token.at[dst].set(a_token[order])[:-1]
+    a_slot = jnp.zeros((s * k,), jnp.int32).at[order].set(jnp.where(fits_sorted, dst, dump).astype(jnp.int32))
+    fits = jnp.zeros((s * k,), bool).at[order].set(fits_sorted)
+    return slot_token, a_slot, fits
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y (B, S, d), aux (load_balance, dropped_frac)).
+    Sorted-dispatch, capacity-dropped MoE; dispatch is per-sequence
+    (data-shard local), expert compute is batched over (B, E, C)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    k = m.top_k
+    cap = _capacity(s, m)
+
+    # --- router (per token)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(gates_all, k)  # (B, S, k)
+    if m.router_scale:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- stage 1: per-sequence counting sort into gapped expert bins
+    slot_token, a_slot, fits = jax.vmap(
+        lambda e: _dispatch_row(e, n_experts=m.n_experts, cap=cap, s=s, k=k)
+    )(expert_ids)
+
+    # --- stage 2: gather into the binned buffer, dense per-expert FFN
+    x_ext = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(x_ext, slot_token[..., None], axis=1)
+    buf = buf.reshape(b, m.n_experts, cap, d)
+    buf = constrain(buf, "batch", "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", buf, params["w_up"]
+    )
+    h = constrain(h, "batch", "experts", None, "expert_mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    out_buf = constrain(out_buf, "batch", "experts", None, None)
+
+    # --- stage 3: weighted combine (token gathers its k slots)
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(b, m.n_experts * cap, d), jnp.zeros((b, 1, d), out_buf.dtype)], axis=1
+    )
+    picked = jnp.take_along_axis(out_flat, a_slot[..., None], axis=1).reshape(b, s, k, d)
+    y = jnp.sum(picked * gate_vals[..., None].astype(picked.dtype), axis=2)
+
+    # --- shared experts (DeepSeek): dense path, always active
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sh["w_gate"])) * jnp.einsum(
+            "bsd,df->bsf", x, sh["w_up"]
+        )
+        y = y + jnp.einsum("bsf,fd->bsd", hs, sh["w_down"])
+
+    # load-balance metrics (Switch-style aux loss ingredients)
+    me = jnp.mean(gates_all, axis=(0, 1))
+    ce = (
+        jnp.bincount(expert_ids.reshape(-1), length=m.n_experts) / (b * s * k)
+    ).astype(jnp.float32)
+    load_balance = m.n_experts * jnp.sum(me * ce)
+    dropped = 1.0 - jnp.sum(fits) / (b * s * k)
+
+    return y, (load_balance, dropped)

@@ -1,0 +1,436 @@
+"""Model assembly: scan-over-layer-periods decoder (+ optional encoder).
+
+One code path covers all 10 assigned architectures via the config's
+repeating `pattern` of LayerSpecs:
+
+  dense (starcoder2, phi3, llava-backbone):  (attn|mlp,)
+  MoE (deepseek-moe, mixtral):               (attn|moe,) [+ SWA window]
+  gemma3:                                    5x(swa|mlp) + 1x(attn|mlp)
+  jamba:                                     8-period attn/mamba x moe/mlp
+  xlstm:                                     7x(mlstm|none) + 1x(slstm|none)
+  whisper:                                   encoder stack + (attn+cross|mlp)
+
+Layer parameters are stacked over periods and executed with jax.lax.scan
+(compile time ~ O(period), not O(n_layers)); the period body is rematerialized
+(jax.checkpoint) in training. Decode carries per-position stacked caches
+through the same scan.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import xlstm as xl
+from repro.models.common import (
+    LayerSpec,
+    ModelConfig,
+    embed_lookup,
+    embedding_axes,
+    embedding_init,
+    rmsnorm,
+    rmsnorm_axes,
+    rmsnorm_init,
+    softcap,
+)
+from repro.models.mlp import mlp_apply, mlp_axes, mlp_init
+from repro.models.moe import moe_apply, moe_axes, moe_init
+
+# ---------------------------------------------------------------------------
+# per-layer init / axes
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, spec: LayerSpec, *, cross: bool):
+    keys = jax.random.split(key, 6)
+    p = {"norm1": rmsnorm_init(cfg)}
+    if spec.mixer in ("attn", "swa"):
+        p["mixer"] = attn.attn_init(keys[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mb.mamba_init(keys[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xl.mlstm_init(keys[0], cfg)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xl.slstm_init(keys[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["norm_cross"] = rmsnorm_init(cfg)
+        p["cross"] = attn.attn_init(keys[1], cfg, cross=True)
+    if spec.ffn == "mlp":
+        p["norm2"] = rmsnorm_init(cfg)
+        p["ffn"] = mlp_init(keys[2], cfg)
+    elif spec.ffn == "moe":
+        p["norm2"] = rmsnorm_init(cfg)
+        p["ffn"] = moe_init(keys[2], cfg)
+    return p
+
+
+def _layer_axes(cfg: ModelConfig, spec: LayerSpec, *, cross: bool):
+    ax = {"norm1": rmsnorm_axes()}
+    if spec.mixer in ("attn", "swa"):
+        ax["mixer"] = attn.attn_axes()
+    elif spec.mixer == "mamba":
+        ax["mixer"] = mb.mamba_axes()
+    elif spec.mixer == "mlstm":
+        ax["mixer"] = xl.mlstm_axes()
+    elif spec.mixer == "slstm":
+        ax["mixer"] = xl.slstm_axes()
+    if cross:
+        ax["norm_cross"] = rmsnorm_axes()
+        ax["cross"] = attn.attn_axes()
+    if spec.ffn == "mlp":
+        ax["norm2"] = rmsnorm_axes()
+        ax["ffn"] = mlp_axes(cfg)
+    elif spec.ffn == "moe":
+        ax["norm2"] = rmsnorm_axes()
+        ax["ffn"] = moe_axes(cfg)
+    return ax
+
+
+def _stack_axes(tree):
+    """Prepend the scan 'stack' axis to every logical-axis tuple."""
+    return jax.tree.map(
+        lambda axes: ("stack",) + axes,
+        tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# model init / axes
+# ---------------------------------------------------------------------------
+
+
+def _unembed_table(params):
+    return params["lm_head"] if "lm_head" in params else params["embed"]["table"]
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_layers, k_enc, k_final = jax.random.split(key, 4)
+    cross = cfg.encoder_layers > 0
+    params = {"embed": embedding_init(k_embed, cfg), "final_norm": rmsnorm_init(cfg)}
+    if not cfg.tie_embeddings:
+        from repro.models.common import dense_init
+
+        params["lm_head"] = dense_init(k_final, (cfg.vocab_size, cfg.d_model), cfg.dtype, scale=0.02)
+
+    # decoder stack: one stacked param tree per pattern position
+    layer_keys = jax.random.split(k_layers, len(cfg.pattern) + len(cfg.tail))
+    stacked = []
+    for i, spec in enumerate(cfg.pattern):
+        period_keys = jax.random.split(layer_keys[i], cfg.n_periods)
+        stacked.append(jax.vmap(lambda k: _layer_init(k, cfg, spec, cross=cross))(period_keys))
+    params["layers"] = tuple(stacked)
+    if cfg.tail:
+        params["tail"] = tuple(
+            _layer_init(layer_keys[len(cfg.pattern) + j], cfg, spec, cross=cross)
+            for j, spec in enumerate(cfg.tail)
+        )
+
+    if cross:
+        enc_spec = LayerSpec("attn", "mlp")
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _layer_init(k, cfg, enc_spec, cross=False))(enc_keys),
+            "norm": rmsnorm_init(cfg),
+        }
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    cross = cfg.encoder_layers > 0
+    ax = {"embed": embedding_axes(), "final_norm": rmsnorm_axes()}
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("vocab", "embed")
+    ax["layers"] = tuple(_stack_axes(_layer_axes(cfg, spec, cross=cross)) for spec in cfg.pattern)
+    if cfg.tail:
+        ax["tail"] = tuple(_layer_axes(cfg, spec, cross=cross) for spec in cfg.tail)
+    if cross:
+        ax["encoder"] = {
+            "layers": _stack_axes(_layer_axes(cfg, LayerSpec("attn", "mlp"), cross=False)),
+            "norm": rmsnorm_axes(),
+        }
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+
+def _mixer_apply(p, x, spec: LayerSpec, cfg: ModelConfig, *, positions, cache, cache_index, causal):
+    if spec.mixer in ("attn", "swa"):
+        return attn.attention_apply(
+            p,
+            x,
+            cfg=cfg,
+            positions=positions,
+            causal=causal,
+            window=spec.window,
+            rope_theta=spec.rope_theta,
+            cache=cache,
+            cache_index=cache_index,
+        )
+    if spec.mixer == "mamba":
+        return mb.mamba_apply(p, x, cfg, state=cache)
+    if spec.mixer == "mlstm":
+        return xl.mlstm_apply(p, x, cfg, state=cache)
+    if spec.mixer == "slstm":
+        return xl.slstm_apply(p, x, cfg, state=cache)
+    raise ValueError(spec.mixer)
+
+
+_ZERO_AUX = (jnp.float32(0.0), jnp.float32(0.0))
+
+
+def _block_apply(p, x, spec: LayerSpec, cfg: ModelConfig, *, positions, cache, cache_index, causal, enc_out):
+    """Returns (x, new_cache, aux) with aux = (load_balance, dropped_frac)."""
+    aux = _ZERO_AUX
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    mixer_out, new_cache = _mixer_apply(
+        p["mixer"], h, spec, cfg, positions=positions, cache=cache, cache_index=cache_index, causal=causal
+    )
+    x = x + mixer_out
+    if "cross" in p:
+        hc = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        cross_out, _ = attn.attention_apply(
+            p["cross"], hc, cfg=cfg, positions=positions, causal=False, kv_source=enc_out, use_rope=False
+        )
+        x = x + cross_out
+    if "ffn" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            y, aux = moe_apply(p["ffn"], h2, cfg)
+            x = x + y
+        else:
+            x = x + mlp_apply(p["ffn"], h2, cfg)
+    x = constrain(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill / encode)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """Whisper-style encoder over stub frame embeddings (B, F, d)."""
+    b, f, _ = frames.shape
+    pos = jnp.arange(f)
+    x = frames + _sinusoidal(f, cfg.d_model, frames.dtype)
+    spec = LayerSpec("attn", "mlp")
+
+    def body(x, lp):
+        x, _, _ = _block_apply(
+            lp, x, spec, cfg, positions=pos, cache=None, cache_index=None, causal=False, enc_out=None
+        )
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def _sinusoidal(length, dim, dtype):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)[None]
+
+
+def forward(
+    params,
+    tokens,
+    cfg: ModelConfig,
+    *,
+    prefix_embeddings=None,
+    frames=None,
+    remat: bool = True,
+    aux: dict | None = None,
+):
+    """Training/prefill forward -> logits (B, S_total, V).
+
+    prefix_embeddings: (B, P, d) multimodal stub prefix (llava patches).
+    frames: (B, F, d) encoder stub input (whisper).
+    """
+    x = embed_lookup(params["embed"]["table"], tokens).astype(cfg.dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    if prefix_embeddings is not None:
+        x = jnp.concatenate([prefix_embeddings.astype(cfg.dtype), x], axis=1)
+    x = constrain(x, "batch", "seq", "embed")
+
+    enc_out = encode(params, frames, cfg) if frames is not None else None
+    positions = jnp.arange(x.shape[1])
+
+    def period_body(x, stacked_slice):
+        period_aux = (jnp.float32(0.0), jnp.float32(0.0))
+        for i, spec in enumerate(cfg.pattern):
+            x, _, a = _block_apply(
+                stacked_slice[i], x, spec, cfg,
+                positions=positions, cache=None, cache_index=None,
+                causal=True, enc_out=enc_out,
+            )
+            period_aux = (period_aux[0] + a[0], period_aux[1] + a[1])
+        return x, period_aux
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    x, aux_per_period = jax.lax.scan(body, x, params["layers"])
+    tail_aux = (jnp.float32(0.0), jnp.float32(0.0))
+    for j, spec in enumerate(cfg.tail):
+        x, _, a = _block_apply(
+            params["tail"][j], x, spec, cfg,
+            positions=positions, cache=None, cache_index=None, causal=True, enc_out=enc_out,
+        )
+        tail_aux = (tail_aux[0] + a[0], tail_aux[1] + a[1])
+    if aux is not None:
+        n_moe = max(
+            1,
+            sum(1 for s in cfg.pattern if s.ffn == "moe") * cfg.n_periods
+            + sum(1 for s in cfg.tail if s.ffn == "moe"),
+        )
+        aux["moe_load_balance"] = (jnp.sum(aux_per_period[0]) + tail_aux[0]) / n_moe
+        aux["moe_dropped_frac"] = (jnp.sum(aux_per_period[1]) + tail_aux[1]) / n_moe
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _unembed_table(params))
+    logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(spec: LayerSpec, max_len: int) -> int:
+    if spec.mixer == "swa" and spec.window:
+        return min(max_len, spec.window)
+    return max_len
+
+
+def _one_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, dtype):
+    if spec.mixer in ("attn", "swa"):
+        return attn.make_cache(cfg, batch, _cache_len(spec, max_len), dtype)
+    if spec.mixer == "mamba":
+        return mb.mamba_state_init(cfg, batch)
+    if spec.mixer == "mlstm":
+        return xl.mlstm_state_init(cfg, batch)
+    if spec.mixer == "slstm":
+        return xl.slstm_state_init(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Per-pattern-position stacked caches (leading dim = n_periods),
+    plus unstacked caches for the tail layers."""
+    caches = []
+    for spec in cfg.pattern:
+        one = _one_cache(cfg, spec, batch, max_len, dtype)
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), one))
+    state = {"caches": tuple(caches), "index": jnp.int32(0)}
+    if cfg.tail:
+        state["tail_caches"] = tuple(_one_cache(cfg, spec, batch, max_len, dtype) for spec in cfg.tail)
+    return state
+
+
+def decode_state_axes(cfg: ModelConfig):
+    """Logical-axis tree mirroring init_decode_state (for dry-run shardings)."""
+    caches = []
+    for spec in cfg.pattern:
+        if spec.mixer in ("attn", "swa"):
+            one = {
+                "k": ("stack", "batch", "kv_seq", "kv_heads", None),
+                "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+                "pos": ("stack", "kv_seq"),
+            }
+        elif spec.mixer == "mamba":
+            one = {"conv": ("stack", "batch", None, "mlp"), "ssm": ("stack", "batch", "mlp", None)}
+        elif spec.mixer == "mlstm":
+            one = {
+                "c": ("stack", "batch", None, None, "mlp"),
+                "n": ("stack", "batch", None, "mlp"),
+                "m": ("stack", "batch", None),
+                "conv": ("stack", "batch", None, "mlp"),
+            }
+        elif spec.mixer == "slstm":
+            one = {k: ("stack", "batch", "mlp") for k in ("c", "n", "m", "h")}
+        else:
+            raise ValueError(spec.mixer)
+        caches.append(one)
+    out = {"caches": tuple(caches), "index": ()}
+    if cfg.tail:
+        strip = lambda tree: jax.tree.map(
+            lambda axes: axes[1:],
+            tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+        )
+        tail_axes = []
+        for spec in cfg.tail:
+            # same mapping as above, without the stack axis
+            if spec.mixer in ("attn", "swa"):
+                tail_axes.append({
+                    "k": ("batch", "kv_seq", "kv_heads", None),
+                    "v": ("batch", "kv_seq", "kv_heads", None),
+                    "pos": ("kv_seq",),
+                })
+            elif spec.mixer == "mamba":
+                tail_axes.append({"conv": ("batch", None, "mlp"), "ssm": ("batch", "mlp", None)})
+            elif spec.mixer == "mlstm":
+                tail_axes.append({
+                    "c": ("batch", None, None, "mlp"),
+                    "n": ("batch", None, "mlp"),
+                    "m": ("batch", None),
+                    "conv": ("batch", None, "mlp"),
+                })
+            else:
+                tail_axes.append({k: ("batch", "mlp") for k in ("c", "n", "m", "h")})
+        out["tail_caches"] = tuple(tail_axes)
+    return out
+
+
+def decode_step(params, state, tokens, cfg: ModelConfig, *, enc_out=None):
+    """One decode step. tokens: (B, s) with s typically 1. Returns
+    (logits (B, s, V), new state). Layer order is period-major, matching
+    forward(): scan over periods, pattern positions unrolled inside."""
+    index = state["index"]
+    x = embed_lookup(params["embed"]["table"], tokens).astype(cfg.dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    positions = index + jnp.arange(tokens.shape[1])
+
+    def period_body(x, xs):
+        lps, caches = xs
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            x, nc, _ = _block_apply(
+                lps[i], x, spec, cfg,
+                positions=positions, cache=caches[i], cache_index=index,
+                causal=True, enc_out=enc_out,
+            )
+            new_caches.append(nc if nc is not None else caches[i])
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(period_body, x, (params["layers"], state["caches"]))
+
+    new_state = {"caches": new_caches, "index": index + tokens.shape[1]}
+    if cfg.tail:
+        tail_caches = []
+        for j, spec in enumerate(cfg.tail):
+            x, nc, _ = _block_apply(
+                params["tail"][j], x, spec, cfg,
+                positions=positions, cache=state["tail_caches"][j], cache_index=index,
+                causal=True, enc_out=enc_out,
+            )
+            tail_caches.append(nc if nc is not None else state["tail_caches"][j])
+        new_state["tail_caches"] = tuple(tail_caches)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, _unembed_table(params))
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, new_state

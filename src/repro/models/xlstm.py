@@ -1,0 +1,225 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent), with exponential gating and
+the max-state stabilizer.
+
+Faithful cell math; block plumbing follows the paper's pre-up-projection
+(mLSTM, pf=2) and post-up-projection (sLSTM, pf=4/3) structure in a reduced
+form (single proj in/out, causal conv on mLSTM q/k path). The 1.3B config
+uses the paper's 7:1 mLSTM:sLSTM interleave.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import ModelConfig, chunked_scan, dense_init
+
+MLSTM_PF = 2.0
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_inner = int(MLSTM_PF * cfg.d_model)
+    hd = d_inner // cfg.n_heads
+    return d_inner, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    d_inner, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    # q/k/v are per-head block-diagonal projections (heads don't mix),
+    # as in the xLSTM reference implementation
+    return {
+        "up_proj": dense_init(ks[0], (cfg.d_model, 2 * d_inner), cfg.dtype),
+        "conv_w": dense_init(ks[1], (4, d_inner), cfg.dtype, scale=0.5),
+        "wq": dense_init(ks[2], (cfg.n_heads, hd, hd), cfg.dtype, scale=hd**-0.5),
+        "wk": dense_init(ks[3], (cfg.n_heads, hd, hd), cfg.dtype, scale=hd**-0.5),
+        "wv": dense_init(ks[4], (cfg.n_heads, hd, hd), cfg.dtype, scale=hd**-0.5),
+        "w_igate": dense_init(ks[5], (d_inner, cfg.n_heads), jnp.float32, scale=0.01),
+        "b_igate": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "w_fgate": dense_init(ks[6], (d_inner, cfg.n_heads), jnp.float32, scale=0.01),
+        "b_fgate": jnp.full((cfg.n_heads,), 3.0, jnp.float32),  # forget ~ on
+        "down_proj": dense_init(ks[7], (d_inner, cfg.d_model), cfg.dtype),
+    }
+
+
+def mlstm_axes():
+    return {
+        "up_proj": ("fsdp", "mlp"),
+        "conv_w": (None, "mlp"),
+        "wq": ("heads", None, None),
+        "wk": ("heads", None, None),
+        "wv": ("heads", None, None),
+        "w_igate": ("mlp", "heads"),
+        "b_igate": ("heads",),
+        "w_fgate": ("mlp", "heads"),
+        "b_fgate": ("heads",),
+        "down_proj": ("mlp", "fsdp"),
+    }
+
+
+def _causal_conv4(w, x, conv_state=None):
+    """Depthwise causal conv (K=4) with carried state for decode.
+    Returns (y, new_conv_state (B, 3, D))."""
+    prev = conv_state.astype(x.dtype) if conv_state is not None else jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w.astype(x.dtype)[i] for i in range(4))
+    return y, xp[:, -3:, :]
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, *, state=None):
+    """x: (B,S,d). state: {"c": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)}.
+    Recurrent scan with stabilized exponential gating. Returns (y, state)."""
+    b, s, _ = x.shape
+    d_inner, hd = _mlstm_dims(cfg)
+    h_heads = cfg.n_heads
+
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    xi = constrain(xi, "batch", None, "mlp")
+    xc, new_conv = _causal_conv4(params["conv_w"], xi, state["conv"] if state is not None else None)
+    xc = jax.nn.silu(xc)
+
+    xc_h = xc.reshape(b, s, h_heads, hd)
+    xi_h = xi.reshape(b, s, h_heads, hd)
+    q = jnp.einsum("bshe,hef->bshf", xc_h, params["wq"]) * hd**-0.5
+    k = jnp.einsum("bshe,hef->bshf", xc_h, params["wk"])
+    v = jnp.einsum("bshe,hef->bshf", xi_h, params["wv"])
+
+    xf = xc.astype(jnp.float32)
+    i_pre = jnp.einsum("bsd,dh->bsh", xf, params["w_igate"]) + params["b_igate"]
+    f_pre = jnp.einsum("bsd,dh->bsh", xf, params["w_fgate"]) + params["b_fgate"]
+
+    if state is None:
+        c0 = jnp.zeros((b, h_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h_heads, hd), jnp.float32)
+        m0 = jnp.full((b, h_heads), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inp):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp  # (B,H,hd) x3, (B,H) x2
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        f_eff = jnp.exp(log_f + m - m_new)
+        i_eff = jnp.exp(i_t - m_new)
+        kf = k_t.astype(jnp.float32)
+        vf = v_t.astype(jnp.float32)
+        c = f_eff[..., None, None] * c + i_eff[..., None, None] * (kf[..., :, None] * vf[..., None, :])
+        # the (B, H, hd, hd) matrix memory is the big state: keep it
+        # value-dim-sharded across 'model' (EXPERIMENTS.md §Perf)
+        c = constrain(c, "batch", None, None, "mlp")
+        n = f_eff[..., None] * n + i_eff[..., None] * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkv->bhv", qf, c)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+        y = num / den[..., None]
+        return (c, n, m_new), y
+
+    xs = (
+        jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(f_pre, 1, 0),
+    )
+    if s > 1:
+        # sqrt-remat chunking bounds the per-step saved matrix-memory
+        # carries to O(S/chunk + chunk) instead of O(S)
+        (c_f, n_f, m_f), ys = chunked_scan(step, (c0, n0, m0), xs, chunk=64)
+    else:
+        (c_f, n_f, m_f), ys = jax.lax.scan(step, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d_inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["down_proj"])
+    return out, {"c": c_f, "n": n_f, "m": m_f, "conv": new_conv}
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    d_inner, hd = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_inner), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), cfg.dtype),          # i,f,z,o pre-acts
+        "r_in": dense_init(ks[1], (d, 4 * d), cfg.dtype, scale=d**-0.5),
+        "bias": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "up_gate": dense_init(ks[2], (d, int(4 * d / 3)), cfg.dtype),
+        "up": dense_init(ks[3], (d, int(4 * d / 3)), cfg.dtype),
+        "down": dense_init(ks[4], (int(4 * d / 3), d), cfg.dtype),
+    }
+
+
+def slstm_axes():
+    return {
+        "w_in": ("fsdp", "mlp"),
+        "r_in": (None, "mlp"),
+        "bias": ("mlp",),
+        "up_gate": ("fsdp", "mlp"),
+        "up": ("fsdp", "mlp"),
+        "down": ("mlp", "fsdp"),
+    }
+
+
+def slstm_apply(params, x, cfg: ModelConfig, *, state=None):
+    """Scalar-memory LSTM with exponential gating + stabilizer, followed by
+    the post-up-projection GLU FFN. state: {"c","n","m","h"} each (B,d)."""
+    b, s, d = x.shape
+    pre = jnp.einsum("bsd,de->bse", x, params["w_in"])
+
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        c0, n0, m0, h0 = zeros, zeros, jnp.full((b, d), -1e30, jnp.float32), zeros
+    else:
+        c0, n0, m0, h0 = state["c"], state["n"], state["m"], state["h"]
+
+    r_w = params["r_in"]
+    bias = params["bias"]
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        gates = pre_t.astype(jnp.float32) + jnp.einsum("bd,de->be", h.astype(x.dtype), r_w).astype(jnp.float32) + bias
+        i_t, f_t, z_t, o_t = jnp.split(gates, 4, axis=-1)
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        f_eff = jnp.exp(log_f + m - m_new)
+        i_eff = jnp.exp(i_t - m_new)
+        c = f_eff * c + i_eff * jnp.tanh(z_t)
+        n = f_eff * n + i_eff
+        h_new = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    if s > 1:
+        (c_f, n_f, m_f, h_f), hs = chunked_scan(step, (c0, n0, m0, h0), jnp.moveaxis(pre, 1, 0), chunk=128)
+    else:
+        (c_f, n_f, m_f, h_f), hs = jax.lax.scan(step, (c0, n0, m0, h0), jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+
+    # post-up-projection (pf = 4/3) GLU
+    h_up = jax.nn.gelu(jnp.einsum("bsd,de->bse", y, params["up_gate"])) * jnp.einsum("bsd,de->bse", y, params["up"])
+    out = jnp.einsum("bse,ed->bsd", h_up, params["down"])
+    return out, {"c": c_f, "n": n_f, "m": m_f, "h": h_f}
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"c": zeros, "n": zeros, "m": jnp.full((batch, d), -1e30, jnp.float32), "h": zeros}

@@ -1,0 +1,125 @@
+"""FDTD Maxwell solver on the Yee grid (periodic core) with optional CKC
+(Cole-Karkkainen-Cowan) stencil — the solver the paper's experiments use.
+
+Normalized units: dE/dt = curl B - J ; dB/dt = -curl E.
+
+All difference operators are jnp.roll-based (periodic); domain-decomposed
+runs exchange guards instead (pic/distributed.py) and call the same kernels
+on guard-extended arrays.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.pic.grid import FieldState
+
+
+def _d_down(f, axis, d):
+    """Backward difference (f[i] - f[i-1])/d — for curls landing on E."""
+    return (f - jnp.roll(f, 1, axis=axis)) / d
+
+
+def _d_up(f, axis, d):
+    """Forward difference (f[i+1] - f[i])/d — for curls landing on B."""
+    return (jnp.roll(f, -1, axis=axis) - f) / d
+
+
+def curl_b(fields: FieldState, dx):
+    """curl B evaluated at E locations."""
+    bx, by, bz = fields.b()
+    cx = _d_down(bz, 1, dx[1]) - _d_down(by, 2, dx[2])
+    cy = _d_down(bx, 2, dx[2]) - _d_down(bz, 0, dx[0])
+    cz = _d_down(by, 0, dx[0]) - _d_down(bx, 1, dx[1])
+    return cx, cy, cz
+
+
+def curl_e(fields: FieldState, dx):
+    """curl E evaluated at B locations."""
+    ex, ey, ez = fields.e()
+    cx = _d_up(ez, 1, dx[1]) - _d_up(ey, 2, dx[2])
+    cy = _d_up(ex, 2, dx[2]) - _d_up(ez, 0, dx[0])
+    cz = _d_up(ey, 0, dx[0]) - _d_up(ex, 1, dx[1])
+    return cx, cy, cz
+
+
+def _ckc_smooth(f, axes, dx, beta):
+    """CKC transverse smoothing of a difference field: (1-2b) f + b (f+ + f-)
+    applied along each transverse axis. beta=0 reduces to plain Yee."""
+    for ax in axes:
+        f = (1 - 2 * beta) * f + beta * (jnp.roll(f, 1, axis=ax) + jnp.roll(f, -1, axis=ax))
+    return f
+
+
+@partial(jax.jit, static_argnames=("dx", "dt", "ckc_beta"))
+def push_b(fields: FieldState, *, dx, dt: float, ckc_beta: float = 0.0) -> FieldState:
+    """Half/full B update: B -= dt * curl E (CKC smooths the curl)."""
+    cx, cy, cz = curl_e(fields, dx)
+    if ckc_beta:
+        cx = _ckc_smooth(cx, (1, 2), dx, ckc_beta)
+        cy = _ckc_smooth(cy, (0, 2), dx, ckc_beta)
+        cz = _ckc_smooth(cz, (0, 1), dx, ckc_beta)
+    return FieldState(
+        ex=fields.ex, ey=fields.ey, ez=fields.ez,
+        bx=fields.bx - dt * cx, by=fields.by - dt * cy, bz=fields.bz - dt * cz,
+    )
+
+
+@partial(jax.jit, static_argnames=("dx", "dt"))
+def push_e(fields: FieldState, j, *, dx, dt: float) -> FieldState:
+    """E += dt * (curl B - J)."""
+    cx, cy, cz = curl_b(fields, dx)
+    jx, jy, jz = j
+    return FieldState(
+        ex=fields.ex + dt * (cx - jx),
+        ey=fields.ey + dt * (cy - jy),
+        ez=fields.ez + dt * (cz - jz),
+        bx=fields.bx, by=fields.by, bz=fields.bz,
+    )
+
+
+def maxwell_step(fields: FieldState, j, *, dx, dt: float, ckc_beta: float = 0.0) -> FieldState:
+    """Leapfrog step: half-B, full-E, half-B (fields end co-timed)."""
+    fields = push_b(fields, dx=dx, dt=0.5 * dt, ckc_beta=ckc_beta)
+    fields = push_e(fields, j, dx=dx, dt=dt)
+    fields = push_b(fields, dx=dx, dt=0.5 * dt, ckc_beta=ckc_beta)
+    return fields
+
+
+# ---------------------------------------------------------------------------
+# Guard-extended (slice-based) curls for domain-decomposed runs: identical
+# math, but neighbor data comes from exchanged halos instead of jnp.roll.
+# Arrays are padded with g >= 1 guard cells on every axis.
+# ---------------------------------------------------------------------------
+
+def _core(f, g, shape):
+    nx, ny, nz = shape
+    return f[g : g + nx, g : g + ny, g : g + nz]
+
+
+def _shift(f, g, shape, axis, delta):
+    nx, ny, nz = shape
+    sl = [slice(g, g + nx), slice(g, g + ny), slice(g, g + nz)]
+    sl[axis] = slice(g + delta, g + delta + shape[axis])
+    return f[tuple(sl)]
+
+
+def curl_b_padded(bx, by, bz, g: int, shape, dx):
+    """curl B at E locations from guard-padded B arrays (backward diffs)."""
+    d = lambda f, ax: (_core(f, g, shape) - _shift(f, g, shape, ax, -1)) / dx[ax]
+    cx = d(bz, 1) - d(by, 2)
+    cy = d(bx, 2) - d(bz, 0)
+    cz = d(by, 0) - d(bx, 1)
+    return cx, cy, cz
+
+
+def curl_e_padded(ex, ey, ez, g: int, shape, dx):
+    """curl E at B locations from guard-padded E arrays (forward diffs)."""
+    d = lambda f, ax: (_shift(f, g, shape, ax, 1) - _core(f, g, shape)) / dx[ax]
+    cx = d(ez, 1) - d(ey, 2)
+    cy = d(ex, 2) - d(ez, 0)
+    cz = d(ey, 0) - d(ex, 1)
+    return cx, cy, cz

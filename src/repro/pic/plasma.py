@@ -1,0 +1,95 @@
+"""Particle initialization: species, uniform plasma, profiled plasma."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.pic.grid import GridSpec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ParticleState:
+    """SoA particle container (single species; constants live in the config)."""
+
+    pos: jax.Array    # (Np, 3) grid units
+    u: jax.Array      # (Np, 3) relativistic momentum / c
+    w: jax.Array      # (Np,) macro-particle weight
+    alive: jax.Array  # (Np,) bool
+
+    @property
+    def n(self) -> int:
+        return self.pos.shape[0]
+
+
+def _lattice_in_cell(ppc_each_dim):
+    """Evenly spaced sub-cell offsets, (prod(ppc), 3), like WarpX's
+    num_particles_per_cell_each_dim placement."""
+    px, py, pz = ppc_each_dim
+    ox = (jnp.arange(px) + 0.5) / px
+    oy = (jnp.arange(py) + 0.5) / py
+    oz = (jnp.arange(pz) + 0.5) / pz
+    grid = jnp.stack(jnp.meshgrid(ox, oy, oz, indexing="ij"), axis=-1)
+    return grid.reshape(-1, 3)
+
+
+def uniform_plasma(
+    key,
+    grid: GridSpec,
+    *,
+    ppc_each_dim=(2, 2, 2),
+    density: float = 1.0,
+    u_thermal: float = 0.0,
+    jitter: float = 0.0,
+    dtype=jnp.float32,
+) -> ParticleState:
+    """Uniform plasma filling the box. Weight set so the deposited number
+    density equals `density` (normalized units: omega_p = sqrt(density) for
+    electrons)."""
+    nx, ny, nz = grid.shape
+    offsets = _lattice_in_cell(ppc_each_dim)  # (P, 3)
+    ppc = offsets.shape[0]
+
+    cx, cy, cz = jnp.meshgrid(jnp.arange(nx), jnp.arange(ny), jnp.arange(nz), indexing="ij")
+    cells = jnp.stack([cx, cy, cz], axis=-1).reshape(-1, 1, 3)  # (C,1,3)
+    pos = (cells + offsets[None]).reshape(-1, 3).astype(dtype)
+
+    n = pos.shape[0]
+    k1, k2 = jax.random.split(key)
+    if jitter > 0:
+        pos = pos + jitter * (jax.random.uniform(k1, pos.shape, dtype) - 0.5) / jnp.asarray(ppc_each_dim, dtype)
+        pos = jnp.mod(pos, jnp.asarray(grid.shape, dtype))
+    u = u_thermal * jax.random.normal(k2, (n, 3), dtype) if u_thermal > 0 else jnp.zeros((n, 3), dtype)
+
+    w = jnp.full((n,), density * grid.cell_volume / ppc, dtype)
+    return ParticleState(pos=pos, u=u, w=w, alive=jnp.ones((n,), bool))
+
+
+def profiled_plasma(
+    key,
+    grid: GridSpec,
+    *,
+    ppc_each_dim=(1, 1, 1),
+    density_fn,
+    u_thermal: float = 0.0,
+    dtype=jnp.float32,
+) -> ParticleState:
+    """Plasma with z-dependent density profile: particles everywhere, weights
+    scaled by density_fn(z_grid_units); zero-weight particles are marked dead
+    (LWFA vacuum region)."""
+    base = uniform_plasma(key, grid, ppc_each_dim=ppc_each_dim, density=1.0, u_thermal=u_thermal, dtype=dtype)
+    dens = density_fn(base.pos[:, 2]).astype(dtype)
+    w = base.w * dens
+    alive = w > 0
+    return ParticleState(pos=base.pos, u=base.u, w=w, alive=alive)
+
+
+def perturb_velocity(particles: ParticleState, *, axis: int, amplitude: float, mode: int, grid: GridSpec) -> ParticleState:
+    """Sinusoidal velocity perturbation along `axis` — Langmuir-wave seed."""
+    k = 2.0 * jnp.pi * mode / grid.shape[axis]
+    du = amplitude * jnp.sin(k * particles.pos[:, axis])
+    u = particles.u.at[:, axis].add(du)
+    return dataclasses.replace(particles, u=u)

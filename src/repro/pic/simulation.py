@@ -1,0 +1,260 @@
+"""The Matrix-PIC simulation loop (paper Algorithm 1).
+
+Per step (jitted `pic_step`):
+  1. gather E, B at particles         (matrix gather on current bins)
+  2. relativistic Boris push          (VPU-class elementwise work)
+  3. incremental sort preparation     (new cell ids -> gpma_update)
+  4. deposition                       (scatter | rhocell | matrix)
+  5. Maxwell field update             (Yee / CKC)
+
+The host-side `Simulation` driver wraps the jitted step with the paper's
+adaptive global re-sort policy (resort_policy): overflow -> mandatory
+rebuild; interval / rebuild-count / gap-ratio / perf triggers -> global
+counting sort INCLUDING the SoA attribute permutation (memory coherence).
+
+`sort_mode` gives the paper's ablation axes:
+  "incremental"  FullOpt: GPMA + adaptive policy
+  "rebuild"      Matrix-only: bins rebuilt from scratch every step (indices
+                 only — no attribute permutation)
+  "global"       Hybrid-GlobalSort: full sort (indices + attributes) each step
+  "none"         for scatter deposition paths that need no bins
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    build_bins,
+    cell_index,
+    choose_capacity,
+    deposit_matrix,
+    deposit_rhocell,
+    deposit_scatter,
+    fold_guards,
+    gather_matrix,
+    gather_scatter,
+    gpma_update,
+    max_guard,
+    sort_permutation,
+    unfold_guards,
+)
+from repro.core.binning import BinnedLayout
+from repro.core.gpma import GPMAStats
+from repro.core.resort_policy import ResortPolicy, SortPolicyConfig
+from repro.pic.grid import B_STAGGER, E_STAGGER, FieldState, GridSpec
+from repro.pic.maxwell import maxwell_step
+from repro.pic.plasma import ParticleState
+from repro.pic.pusher import advance_positions, boris_push, lorentz_gamma, wrap_periodic
+
+
+@dataclasses.dataclass(frozen=True)
+class PICConfig:
+    grid: GridSpec
+    dt: float
+    order: int = 1
+    deposition: str = "matrix"   # scatter | rhocell | matrix
+    gather: str = "matrix"       # scatter | matrix
+    sort_mode: str = "incremental"
+    charge: float = -1.0
+    mass: float = 1.0
+    ckc_beta: float = 0.0
+    capacity: int = 16
+    use_pallas: bool = False     # route bin contraction through the Pallas op
+
+    @property
+    def q_over_m(self) -> float:
+        return self.charge / self.mass
+
+    @property
+    def guard(self) -> int:
+        return max_guard(self.order)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PICState:
+    fields: FieldState
+    particles: ParticleState
+    layout: BinnedLayout
+    step: jax.Array
+
+
+def init_state(fields: FieldState, particles: ParticleState, config: PICConfig) -> tuple[PICState, int]:
+    """Global init (paper Alg. 1 lines 1-5): global sort + GPMA build."""
+    cells = cell_index(particles.pos, config.grid.shape)
+    perm = sort_permutation(cells, particles.alive)
+    particles = jax.tree.map(lambda a: a[perm], particles)
+    cells = cell_index(particles.pos, config.grid.shape)
+    layout, overflow = build_bins(cells, particles.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
+    return PICState(fields=fields, particles=particles, layout=layout, step=jnp.int32(0)), int(overflow)
+
+
+def _gather_fields(pos, fields: FieldState, layout, config: PICConfig):
+    g = config.guard
+    shape = config.grid.shape
+    comps_e, comps_b = [], []
+    for k in range(3):
+        pe = unfold_guards(fields.e()[k], g)
+        pb = unfold_guards(fields.b()[k], g)
+        if config.gather == "matrix":
+            comps_e.append(gather_matrix(pos, pe, layout, grid_shape=shape, order=config.order, stagger=E_STAGGER[k]))
+            comps_b.append(gather_matrix(pos, pb, layout, grid_shape=shape, order=config.order, stagger=B_STAGGER[k]))
+        else:
+            comps_e.append(gather_scatter(pos, pe, order=config.order, stagger=E_STAGGER[k]))
+            comps_b.append(gather_scatter(pos, pb, order=config.order, stagger=B_STAGGER[k]))
+    return jnp.stack(comps_e, -1), jnp.stack(comps_b, -1)
+
+
+def _deposit_current(pos, v, qw, layout, cells, config: PICConfig):
+    shape = config.grid.shape
+    inv_vol = 1.0 / config.grid.cell_volume
+    out = []
+    bin_matmul = None
+    if config.use_pallas:
+        from repro.kernels.deposition.ops import bin_outer_product
+
+        bin_matmul = bin_outer_product
+    for k, stagger in enumerate(((True, False, False), (False, True, False), (False, False, True))):
+        values = qw * v[:, k]
+        if config.deposition == "scatter":
+            j = deposit_scatter(pos, values, grid_shape=shape, order=config.order, stagger=stagger)
+        elif config.deposition == "rhocell":
+            j = deposit_rhocell(pos, values, cells, grid_shape=shape, order=config.order, stagger=stagger)
+        else:
+            j = deposit_matrix(pos, values, layout, grid_shape=shape, order=config.order, stagger=stagger, bin_matmul=bin_matmul)
+        out.append(fold_guards(j, config.guard) * inv_vol)
+    return out
+
+
+@partial(jax.jit, static_argnames=("config",))
+def pic_step(state: PICState, config: PICConfig) -> tuple[PICState, GPMAStats]:
+    p = state.particles
+    alive_f = p.alive.astype(p.pos.dtype)
+
+    # 1. field gather (bins are current w.r.t. pre-push positions)
+    e_p, b_p = _gather_fields(p.pos, state.fields, state.layout, config)
+
+    # 2. push
+    u_new = boris_push(p.u, e_p, b_p, config.q_over_m, config.dt)
+    u_new = jnp.where(p.alive[:, None], u_new, p.u)
+    pos_new = wrap_periodic(advance_positions(p.pos, u_new, config.dt, config.grid.dx), config.grid.shape)
+    pos_new = jnp.where(p.alive[:, None], pos_new, p.pos)
+
+    # 3. incremental sort / rebuild
+    new_cells = cell_index(pos_new, config.grid.shape)
+    if config.sort_mode in ("incremental",):
+        layout, stats = gpma_update(state.layout, new_cells, p.alive)
+    elif config.sort_mode in ("rebuild", "global"):
+        layout, overflow = build_bins(new_cells, p.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
+        stats = GPMAStats(
+            n_moved=jnp.sum(new_cells != cell_index(p.pos, config.grid.shape)),
+            n_overflow=overflow,
+            n_empty=layout.n_empty(),
+            n_alive=jnp.sum(p.alive),
+        )
+    else:  # none
+        layout = state.layout
+        stats = GPMAStats(
+            n_moved=jnp.int32(0), n_overflow=jnp.int32(0),
+            n_empty=jnp.int32(0), n_alive=jnp.sum(p.alive),
+        )
+
+    # 4. deposition at x^{n+1}, v^{n+1/2}
+    gamma = lorentz_gamma(u_new)
+    v = u_new / gamma[:, None]
+    qw = config.charge * p.w * alive_f
+    j = _deposit_current(pos_new, v, qw, layout, new_cells, config)
+
+    # 5. fields
+    fields = maxwell_step(state.fields, j, dx=config.grid.dx, dt=config.dt, ckc_beta=config.ckc_beta)
+
+    particles = dataclasses.replace(p, pos=pos_new, u=u_new)
+    return PICState(fields=fields, particles=particles, layout=layout, step=state.step + 1), stats
+
+
+def global_sort(state: PICState, config: PICConfig) -> tuple[PICState, int]:
+    """GlobalSortParticlesByCell: permute attributes + rebuild bins."""
+    cells = cell_index(state.particles.pos, config.grid.shape)
+    perm = sort_permutation(cells, state.particles.alive)
+    particles = jax.tree.map(lambda a: a[perm], state.particles)
+    cells = cell_index(particles.pos, config.grid.shape)
+    layout, overflow = build_bins(cells, particles.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
+    return dataclasses.replace(state, particles=particles, layout=layout), int(overflow)
+
+
+class Simulation:
+    """Host driver: jitted step + adaptive resort policy + diagnostics."""
+
+    def __init__(self, fields: FieldState, particles: ParticleState, config: PICConfig, policy: SortPolicyConfig | None = None):
+        self.config = config
+        state, overflow = init_state(fields, particles, config)
+        if overflow:
+            self.config = dataclasses.replace(config, capacity=choose_capacity(config.capacity * 2 // 3 * 2))
+            state, overflow = init_state(fields, particles, self.config)
+            assert overflow == 0, "initial binning overflow after capacity growth"
+        self.state = state
+        self.policy = ResortPolicy(policy)
+        self.sorts = 0
+        self.rebuilds = 0
+        self.history: list[dict] = []
+
+    def run(self, n_steps: int, *, diagnostics_every: int = 0) -> None:
+        needs_bins = self.config.deposition == "matrix" or self.config.gather == "matrix"
+        for _ in range(n_steps):
+            t0 = time.perf_counter()
+            self.state, stats = pic_step(self.state, self.config)
+            if self.config.sort_mode == "incremental":
+                n_overflow = int(stats.n_overflow)
+                n_empty = int(stats.n_empty)
+                n_slots = self.config.grid.n_cells * self.config.capacity
+                if needs_bins and n_overflow > 0:
+                    # mandatory rebuild (paper: overflow with low slots)
+                    self.state, of = global_sort(self.state, self.config)
+                    self.rebuilds += 1
+                    if of:
+                        self._grow_capacity()
+                    self.policy.reset()
+                else:
+                    dtep = time.perf_counter() - t0
+                    perf = float(int(stats.n_alive)) / max(dtep, 1e-9)
+                    self.policy.record_step(rebuilt=False, perf=perf)
+                    do, _reason = self.policy.should_sort(empty_ratio=n_empty / max(n_slots, 1))
+                    if do:
+                        self.state, of = global_sort(self.state, self.config)
+                        self.sorts += 1
+                        if of:
+                            self._grow_capacity()
+                        self.policy.reset()
+            elif self.config.sort_mode == "global":
+                # per-step full sort including attribute permutation
+                self.state, of = global_sort(self.state, self.config)
+                if of:
+                    self._grow_capacity()
+            elif self.config.sort_mode == "rebuild" and int(stats.n_overflow) > 0:
+                self._grow_capacity()
+            if diagnostics_every and int(self.state.step) % diagnostics_every == 0:
+                self.history.append(self.diagnostics())
+
+    def _grow_capacity(self) -> None:
+        self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
+        self.state, overflow = init_state(self.state.fields, self.state.particles, self.config)
+        assert overflow == 0, "binning overflow persists after capacity doubling"
+
+    def diagnostics(self) -> dict:
+        s = self.state
+        gamma = lorentz_gamma(s.particles.u)
+        kinetic = float(jnp.sum(s.particles.w * s.particles.alive * self.config.mass * (gamma - 1.0)))
+        em = float(s.fields.energy(self.config.grid.cell_volume))
+        return {
+            "step": int(s.step),
+            "field_energy": em,
+            "kinetic_energy": kinetic,
+            "total_energy": em + kinetic,
+            "n_alive": int(jnp.sum(s.particles.alive)),
+        }

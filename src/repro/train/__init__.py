@@ -1,0 +1,1 @@
+from repro.train.step import TrainConfig, init_train_state, make_train_step  # noqa: F401

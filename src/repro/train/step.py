@@ -1,0 +1,77 @@
+"""Train-step builder: loss -> grads -> clip -> AdamW, with MoE aux loss.
+
+The returned step is a pure function suitable for jax.jit with explicit
+in/out shardings (launch/train.py, launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, cross_entropy, forward, init_params
+from repro.optim import AdamWConfig, ScheduleConfig, adamw_init, adamw_update, lr_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    schedule: ScheduleConfig = ScheduleConfig()
+    moe_aux_weight: float = 0.01
+    z_loss: float = 1e-4
+    # gradient accumulation: activations scale with batch/microbatches while
+    # total compute is unchanged (the fits-in-HBM lever for the big train
+    # cells, EXPERIMENTS.md §Perf)
+    microbatches: int = 1
+
+
+def init_train_state(key, model_cfg: ModelConfig):
+    params = init_params(key, model_cfg)
+    return {"params": params, "opt": adamw_init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    def loss_fn(params, batch):
+        aux: dict = {}
+        kwargs = {}
+        if "frames" in batch:
+            kwargs["frames"] = batch["frames"]
+        if "prefix_embeddings" in batch:
+            kwargs["prefix_embeddings"] = batch["prefix_embeddings"]
+        logits = forward(params, batch["inputs"], model_cfg, aux=aux, **kwargs)
+        # multimodal prefix: loss only on the token positions (suffix)
+        if "prefix_embeddings" in batch:
+            logits = logits[:, batch["prefix_embeddings"].shape[1] :]
+        loss, metrics = cross_entropy(logits, batch["targets"], batch.get("mask"), z_loss=train_cfg.z_loss)
+        if "moe_load_balance" in aux:
+            loss = loss + train_cfg.moe_aux_weight * aux["moe_load_balance"]
+            metrics["moe_load_balance"] = aux["moe_load_balance"]
+            metrics["moe_dropped_frac"] = aux["moe_dropped_frac"]
+        return loss, metrics
+
+    def train_step(state, batch):
+        k = train_cfg.microbatches
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state["params"], batch)
+        else:
+            mb = jax.tree.map(lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+            def micro(acc, one):
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(state["params"], one)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32) / k, acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            grads, ms = jax.lax.scan(micro, zeros, mb)
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+
+        lr_scale = lr_schedule(state["step"], train_cfg.schedule)
+        params, opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], train_cfg.optimizer, lr_scale=lr_scale
+        )
+        metrics = dict(metrics, **opt_metrics, lr_scale=lr_scale)
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, metrics
+
+    return train_step

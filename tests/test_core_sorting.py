@@ -1,0 +1,193 @@
+"""GPMA incremental sorter + binning: structural invariants and equivalence
+with a full rebuild, including hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ResortPolicy,
+    SortPolicyConfig,
+    build_bins,
+    cell_index,
+    gpma_update,
+    matrix_scatter_add,
+    scatter_add_ref,
+    sort_permutation,
+)
+
+N_CELLS = 24
+CAP = 16
+
+
+def check_layout_invariants(layout, cell_ids, alive):
+    """Every alive, slotted particle sits in a slot of its own cell's bin;
+    slots and particle_slot are mutually consistent; no duplicates."""
+    slots = np.asarray(layout.slots)
+    pslot = np.asarray(layout.particle_slot)
+    cells = np.asarray(cell_ids)
+    alive = np.asarray(alive)
+
+    # slot -> particle consistency
+    flat = slots.reshape(-1)
+    filled = np.nonzero(flat >= 0)[0]
+    particles = flat[filled]
+    assert len(np.unique(particles)) == len(particles), "duplicate particle in slots"
+    np.testing.assert_array_equal(pslot[particles], filled)
+
+    # bin correctness
+    bin_of_slot = filled // slots.shape[1]
+    np.testing.assert_array_equal(bin_of_slot, cells[particles])
+
+    # alive particles with a slot are exactly the slotted set
+    slotted = pslot >= 0
+    assert not np.any(slotted & ~alive), "dead particle still slotted"
+
+
+def test_build_bins_basic():
+    cells = jnp.asarray([0, 0, 1, 3, 3, 3, 23], jnp.int32)
+    alive = jnp.ones(7, bool)
+    layout, overflow = build_bins(cells, alive, n_cells=N_CELLS, capacity=CAP)
+    assert int(overflow) == 0
+    check_layout_invariants(layout, cells, alive)
+    assert int(layout.n_empty()) == N_CELLS * CAP - 7
+
+
+def test_build_bins_overflow_detected():
+    cells = jnp.zeros(CAP + 3, jnp.int32)
+    layout, overflow = build_bins(cells, jnp.ones(CAP + 3, bool), n_cells=N_CELLS, capacity=CAP)
+    assert int(overflow) == 3
+    # the CAP slotted particles are valid
+    check_layout_invariants(layout, cells, jnp.asarray(np.asarray(layout.particle_slot) >= 0))
+
+
+def test_gpma_incremental_matches_rebuild():
+    rng = np.random.default_rng(0)
+    n = 120
+    cells0 = jnp.asarray(rng.integers(0, N_CELLS, n), jnp.int32)
+    alive = jnp.ones(n, bool)
+    layout, of = build_bins(cells0, alive, n_cells=N_CELLS, capacity=CAP)
+    assert int(of) == 0
+
+    # CFL-like motion: ~10% of particles move to a neighboring cell
+    move = rng.random(n) < 0.1
+    cells1 = np.asarray(cells0).copy()
+    cells1[move] = (cells1[move] + rng.integers(1, 3, move.sum())) % N_CELLS
+    cells1 = jnp.asarray(cells1)
+
+    new_layout, stats = gpma_update(layout, cells1, alive)
+    assert int(stats.n_overflow) == 0
+    assert int(stats.n_moved) == int(np.sum(np.asarray(cells0) != cells1))
+    check_layout_invariants(new_layout, cells1, alive)
+
+
+def test_gpma_deaths_free_slots():
+    rng = np.random.default_rng(1)
+    n = 60
+    cells = jnp.asarray(rng.integers(0, N_CELLS, n), jnp.int32)
+    layout, _ = build_bins(cells, jnp.ones(n, bool), n_cells=N_CELLS, capacity=CAP)
+    alive = jnp.asarray(rng.random(n) > 0.3)
+    new_layout, stats = gpma_update(layout, cells, alive)
+    check_layout_invariants(new_layout, cells, alive)
+    assert int(new_layout.n_empty()) == N_CELLS * CAP - int(alive.sum())
+
+
+def test_gpma_overflow_flagged_not_lost_silently():
+    """When a bin is full, inserts report overflow and unslot the particle."""
+    cells0 = jnp.asarray(list(range(CAP)) * 2, jnp.int32)  # spread
+    n = cells0.shape[0]
+    layout, _ = build_bins(cells0, jnp.ones(n, bool), n_cells=N_CELLS, capacity=CAP)
+    # move everyone into cell 0 (capacity CAP < n)
+    cells1 = jnp.zeros(n, jnp.int32)
+    new_layout, stats = gpma_update(layout, cells1, jnp.ones(n, bool))
+    assert int(stats.n_overflow) == n - CAP
+    pslot = np.asarray(new_layout.particle_slot)
+    assert np.sum(pslot >= 0) == CAP
+    check_layout_invariants(new_layout, cells1, jnp.asarray(pslot >= 0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(5, 80),
+    seed=st.integers(0, 2**16),
+    move_frac=st.floats(0.0, 1.0),
+)
+def test_gpma_property_random_motion(n, seed, move_frac):
+    """Property: after arbitrary motion, incremental update either slots a
+    particle in its correct bin or reports it in the overflow count."""
+    rng = np.random.default_rng(seed)
+    cells0 = jnp.asarray(rng.integers(0, N_CELLS, n), jnp.int32)
+    alive0 = jnp.ones(n, bool)
+    layout, of0 = build_bins(cells0, alive0, n_cells=N_CELLS, capacity=CAP)
+    if int(of0):
+        return  # initial overflow: host would regrow capacity
+    move = rng.random(n) < move_frac
+    cells1 = np.asarray(cells0).copy()
+    cells1[move] = rng.integers(0, N_CELLS, move.sum())
+    alive1 = jnp.asarray(rng.random(n) > 0.05)
+    new_layout, stats = gpma_update(layout, jnp.asarray(cells1), alive1)
+
+    pslot = np.asarray(new_layout.particle_slot)
+    slotted = pslot >= 0
+    check_layout_invariants(new_layout, jnp.asarray(cells1), jnp.asarray(slotted))
+    # alive = slotted + overflowed
+    assert int(np.asarray(alive1).sum()) == int(slotted.sum()) + int(stats.n_overflow)
+
+
+def test_sort_permutation_orders_cells():
+    rng = np.random.default_rng(3)
+    cells = jnp.asarray(rng.integers(0, N_CELLS, 50), jnp.int32)
+    perm = sort_permutation(cells, jnp.ones(50, bool))
+    sorted_cells = np.asarray(cells)[np.asarray(perm)]
+    assert np.all(np.diff(sorted_cells) >= 0)
+
+
+def test_resort_policy_triggers():
+    pol = ResortPolicy(SortPolicyConfig(sort_interval=50, min_sort_interval=10))
+    # min interval wins
+    pol.record_step(rebuilt=False)
+    assert pol.should_sort(empty_ratio=0.01)[0] is False
+    # overflow always wins
+    assert pol.should_sort(empty_ratio=0.5, overflowed=True)[0] is True
+    # empty-ratio trigger after min interval
+    for _ in range(10):
+        pol.record_step(rebuilt=False)
+    do, reason = pol.should_sort(empty_ratio=0.05)
+    assert do and reason == "empty_ratio_low"
+    # fixed interval
+    pol.reset()
+    for _ in range(50):
+        pol.record_step(rebuilt=False)
+    do, reason = pol.should_sort(empty_ratio=0.5)
+    assert do and reason == "fixed_interval"
+    # perf degradation
+    pol.reset()
+    for _ in range(12):
+        pol.record_step(rebuilt=False, perf=1.0)
+    for _ in range(20):
+        pol.record_step(rebuilt=False, perf=0.2)
+    do, reason = pol.should_sort(empty_ratio=0.5)
+    assert do and reason == "perf_degradation"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 200),
+    n_bins=st.integers(1, 40),
+    capacity=st.integers(1, 16),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+    weighted=st.booleans(),
+)
+def test_matrix_scatter_add_property(t, n_bins, capacity, d, seed, weighted):
+    """matrix_scatter_add == scatter oracle for ANY capacity (overflow path)."""
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(-1, n_bins, t), jnp.int32)
+    upd = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(t), jnp.float32) if weighted else None
+    out = matrix_scatter_add(idx, upd, n_bins=n_bins, capacity=capacity, weights=w)
+    ref = scatter_add_ref(idx, upd, n_bins=n_bins, weights=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)

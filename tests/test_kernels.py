@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
+plus end-to-end use inside deposit_matrix and hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import build_bins, cell_index, choose_capacity, deposit_matrix, deposit_scatter
+from repro.kernels.deposition import bin_outer_product, bin_outer_product_ref
+from repro.kernels.gather import bin_gather, bin_gather_ref
+from repro.kernels.scatter_matrix import segment_accumulate, segment_accumulate_ref
+
+# (n_cells, cap, M, N) sweep — CIC (2x4), QSP (4x16), staggered widths (3/5),
+# ragged cell counts that don't divide the block size.
+DEPOSITION_SHAPES = [
+    (8, 8, 2, 4),
+    (64, 16, 2, 4),
+    (100, 8, 3, 4),      # staggered CIC (widened taps), C % block != 0
+    (128, 32, 4, 16),    # QSP
+    (37, 8, 5, 16),      # staggered QSP
+    (1, 8, 2, 4),
+    (512, 128, 4, 16),   # MXU-depth capacity
+]
+
+
+@pytest.mark.parametrize("shape", DEPOSITION_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["mxu", "vpu"])
+def test_bin_outer_product_matches_ref(shape, dtype, mode):
+    c, cap, m, n = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(c * cap + m))
+    a = jax.random.normal(k1, (c, cap, m), dtype)
+    b = jax.random.normal(k2, (c, cap, n), dtype)
+    got = bin_outer_product(a, b, mode=mode)
+    want = bin_outer_product_ref(a, b)
+    # fp32 tolerance scales with the reduction depth (accumulation order
+    # differs between the batched dot and the broadcast-sum)
+    tol = cap * 2e-7 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", DEPOSITION_SHAPES)
+def test_bin_outer_product_block_boundaries(shape):
+    """Force a small block size so the grid has ragged final blocks."""
+    c, cap, m, n = shape
+    a = jax.random.normal(jax.random.PRNGKey(0), (c, cap, m))
+    b = jax.random.normal(jax.random.PRNGKey(1), (c, cap, n))
+    got = bin_outer_product(a, b, block_cells=7)
+    want = bin_outer_product_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+GATHER_SHAPES = [(16, 8, 2, 4), (100, 16, 3, 4), (64, 32, 4, 16), (37, 8, 5, 20)]
+
+
+@pytest.mark.parametrize("shape", GATHER_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_bin_gather_matches_ref(shape, dtype):
+    c, cap, m, n = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    wx = jax.random.normal(k1, (c, cap, m), dtype)
+    byz = jax.random.normal(k2, (c, cap, n), dtype)
+    g = jax.random.normal(k3, (c, m, n), dtype)
+    got = bin_gather(wx, byz, g)
+    want = bin_gather_ref(wx, byz, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+SEGMENT_SHAPES = [(16, 8, 32), (256, 16, 512), (100, 8, 64), (33, 4, 1000)]
+
+
+@pytest.mark.parametrize("shape", SEGMENT_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_accumulate_matches_ref(shape, dtype):
+    v, cap, d = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    w = jax.random.normal(k1, (v, cap), dtype)
+    u = jax.random.normal(k2, (v, cap, d), dtype)
+    got = segment_accumulate(w, u)
+    want = segment_accumulate_ref(w, u)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 64),
+    cap=st.sampled_from([8, 16, 24]),
+    m=st.integers(1, 5),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**16),
+)
+def test_bin_outer_product_property(c, cap, m, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (c, cap, m))
+    b = jax.random.normal(k2, (c, cap, n))
+    got = bin_outer_product(a, b)
+    want = bin_outer_product_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("order", [1, 3])
+def test_deposit_matrix_with_pallas_kernel(order):
+    """End-to-end: deposit_matrix with the Pallas bin contraction equals the
+    scatter oracle."""
+    grid_shape = (6, 5, 4)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    pos = jax.random.uniform(k1, (400, 3)) * jnp.asarray(grid_shape, jnp.float32)
+    values = jax.random.normal(k2, (400,))
+    cells = cell_index(pos, grid_shape)
+    n_cells = int(np.prod(grid_shape))
+    cap = choose_capacity(int(np.max(np.bincount(np.asarray(cells), minlength=n_cells))))
+    layout, _ = build_bins(cells, jnp.ones(400, bool), n_cells=n_cells, capacity=cap)
+
+    got = deposit_matrix(
+        pos, values, layout, grid_shape=grid_shape, order=order, bin_matmul=bin_outer_product
+    )
+    want = deposit_scatter(pos, values, grid_shape=grid_shape, order=order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

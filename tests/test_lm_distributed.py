@@ -1,0 +1,23 @@
+"""Distributed LM substrate (subprocess: needs the 8-device XLA override).
+
+Covers: sharded train step == single-device (FSDP+TP+SP+EP logical rules),
+GPipe pipeline parallelism, int8 error-feedback gradient compression."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_lm_checks():
+    script = Path(__file__).parent / "dist_lm_check.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    res = subprocess.run(
+        [sys.executable, str(script)], env=env, capture_output=True, text=True, timeout=1200
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "ALL OK" in res.stdout

@@ -1,0 +1,23 @@
+"""Distributed PIC: shard_map domain decomposition equals single-device.
+
+Runs in a subprocess because it needs XLA_FLAGS host-device override, which
+must not leak into the rest of the suite (smoke tests see 1 device)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_pic_matches_single_device():
+    script = Path(__file__).parent / "dist_pic_check.py"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    res = subprocess.run(
+        [sys.executable, str(script)], env=env, capture_output=True, text=True, timeout=900
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "OK" in res.stdout
