@@ -24,6 +24,22 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
     return float(np.median(times) * 1e6)
 
 
+def time_grid(fns: dict, *, rounds: int = 9, warmup: int = 2) -> dict:
+    """Interleaved timing of several thunks: each round times every thunk
+    once, medians are taken per-thunk across rounds. Robust to slow machine
+    drift (shared/throttled CPU), unlike timing each thunk back-to-back."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    times: dict = {name: [] for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(ts) * 1e6) for name, ts in times.items()}
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 

@@ -1,0 +1,112 @@
+"""Deposition kernel regression sweep -> BENCH_deposition.json.
+
+Times every deposition implementation (scatter / rhocell / per-component
+matrix / fused matrix, plus the Pallas megakernel route) at orders 1-3 on a
+table1_cic-style uniform-plasma workload, and emits machine-readable JSON so
+future PRs have a perf trajectory to compare against:
+
+    PYTHONPATH=src python -m benchmarks.run --only deposition_sweep \
+        --deposition-json BENCH_deposition.json
+
+Schema: {"meta": {...workload/backend...},
+         "results": {"order<k>": {"<kernel>": us_per_call}},
+         "speedup_fused_vs_matrix": {"order<k>": x}}
+"""
+
+from __future__ import annotations
+
+import json
+from functools import partial
+
+import jax
+
+from benchmarks.common import emit, make_workload, time_grid
+from repro.core import (
+    CURRENT_STAGGER,
+    deposit_current_matrix_fused,
+    deposit_matrix,
+    deposit_rhocell,
+    deposit_scatter,
+)
+
+ORDERS = (1, 2, 3)
+
+
+def _per_component(kind, wl, order, bin_matmul=None):
+    out = []
+    for comp in range(3):
+        values = wl["qw"] * wl["v"][:, comp]
+        stagger = CURRENT_STAGGER[comp]
+        if kind == "scatter":
+            out.append(deposit_scatter(wl["pos"], values, grid_shape=wl["grid"].shape, order=order, stagger=stagger))
+        elif kind == "rhocell":
+            out.append(deposit_rhocell(wl["pos"], values, wl["cells"], grid_shape=wl["grid"].shape, order=order, stagger=stagger))
+        else:
+            out.append(deposit_matrix(wl["pos"], values, wl["layout"], grid_shape=wl["grid"].shape, order=order, stagger=stagger, bin_matmul=bin_matmul))
+    return out
+
+
+def _fused(wl, order, fused_matmul=None):
+    return deposit_current_matrix_fused(
+        wl["pos"], wl["v"], wl["qw"], wl["layout"],
+        grid_shape=wl["grid"].shape, order=order, fused_matmul=fused_matmul,
+    )
+
+
+def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, label: str = "deposition_sweep"):
+    """Run the sweep, emit CSV rows, and return the JSON-able payload."""
+    from repro.kernels.deposition.ops import bin_outer_product, fused_bin_deposit
+
+    wl = make_workload(grid_shape=grid, ppc=ppc, sorted_attrs=True)
+    results: dict[str, dict[str, float]] = {}
+    speedups: dict[str, dict[str, float]] = {}
+    for order in ORDERS:
+        fns = {
+            "scatter": partial(_per_component, "scatter", wl, order),
+            "rhocell": partial(_per_component, "rhocell", wl, order),
+            "matrix": partial(_per_component, "matrix", wl, order),
+            "matrix_fused": partial(_fused, wl, order),
+        }
+        if with_pallas:
+            # apples-to-apples kernel comparison: both routes through Pallas
+            # (interpret mode off-TPU), per-component vs fused megakernel
+            fns["matrix_pallas"] = partial(_per_component, "matrix", wl, order, bin_matmul=bin_outer_product)
+            fns["matrix_fused_pallas"] = partial(_fused, wl, order, fused_matmul=fused_bin_deposit)
+        row = time_grid(fns)
+        results[f"order{order}"] = row
+        sp = {"fused_vs_matrix": row["matrix"] / row["matrix_fused"]}
+        if with_pallas:
+            sp["fused_vs_matrix_pallas"] = row["matrix_pallas"] / row["matrix_fused_pallas"]
+        speedups[f"order{order}"] = sp
+        for name, us in row.items():
+            emit(f"{label}/order{order}/{name}", us, f"fused_vs_matrix={sp['fused_vs_matrix']:.2f}x")
+    return {
+        "meta": {
+            "grid": list(grid),
+            "ppc": ppc,
+            "n_particles": wl["n"],
+            "capacity": wl["cap"],
+            "backend": jax.default_backend(),
+            "note": "us_per_call, per-kernel median over 9 interleaved rounds "
+                    "(time_grid: drift-robust on shared CPUs); pallas rows run the "
+                    "interpreter off-TPU and are NOT comparable to compiled rows there",
+        },
+        "results": results,
+        "speedup_fused_vs_matrix": speedups,
+    }
+
+
+def write_json(path: str, **kw) -> dict:
+    payload = collect(**kw)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return payload
+
+
+def main():
+    collect()
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table1_cic ...]
+    PYTHONPATH=src python -m benchmarks.run --only deposition_sweep \
+        --deposition-json BENCH_deposition.json
 """
 
 from __future__ import annotations
@@ -17,19 +19,39 @@ MODULES = [
     "fig9_lwfa",      # Fig 9: LWFA workload
     "fig10_ablation", # Fig 10: component ablation
     "table3_efficiency",  # Table 3: % of theoretical peak
+    "deposition_sweep",   # per-kernel deposition regression (see --deposition-json)
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument(
+        "--deposition-json",
+        metavar="PATH",
+        default=None,
+        help="also write the deposition kernel sweep as JSON (BENCH_deposition.json) "
+        "so future PRs have a perf trajectory to diff against",
+    )
     args = ap.parse_args()
 
     mods = args.only or MODULES
+    if args.deposition_json and "deposition_sweep" not in mods:
+        print(
+            "warning: --deposition-json has no effect unless deposition_sweep "
+            "is among the selected modules; not writing "
+            f"{args.deposition_json}",
+            file=sys.stderr,
+        )
     print("name,us_per_call,derived")
     failed = []
     for name in mods:
         try:
+            if name == "deposition_sweep" and args.deposition_json:
+                from benchmarks.deposition_sweep import write_json
+
+                write_json(args.deposition_json)
+                continue
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()
         except Exception:  # noqa: BLE001

@@ -1,0 +1,47 @@
+"""jax version-compat shims (cross-cutting, import-anywhere: no repro deps).
+
+The repo targets both the pinned CI jax (0.4.x) and current releases; these
+adapters paper over the renamed/moved APIs the distributed stack touches.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: `axis_types` (and
+    jax.sharding.AxisType itself) only exist on newer releases; Auto is the
+    default there, so omitting it on older jax is behavior-identical."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def axis_size_compat(axis_name):
+    """`lax.axis_size` where it exists; psum-of-ones (same value, traced
+    constant) on older jax. Call inside shard_map/pmap bodies only."""
+    from jax import lax
+
+    fn = getattr(lax, "axis_size", None)
+    return fn(axis_name) if fn is not None else lax.psum(1, axis_name)
+
+
+def shard_map_compat(f, **kw):
+    """`jax.shard_map` where it exists, `jax.experimental.shard_map` before
+    (whose replication-check kwarg is `check_rep`, not `check_vma`)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+    return sm(f, **kw)
+
+
+def set_mesh_compat(mesh):
+    """Context manager entering ``mesh``: `jax.set_mesh` where it exists,
+    the legacy ``with mesh:`` context on older releases."""
+    setter = getattr(jax, "set_mesh", None)
+    return setter(mesh) if setter is not None else mesh

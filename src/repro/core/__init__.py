@@ -21,10 +21,18 @@ from repro.core.deposition import (  # noqa: F401
     deposit_matrix,
     deposit_rhocell,
     deposit_scatter,
+    fused_bin_slab,
 )
 from repro.core.gather import gather_matrix, gather_scatter  # noqa: F401
 from repro.core.gpma import GPMAStats, gpma_update  # noqa: F401
 from repro.core.matrix_scatter import matrix_scatter_add, scatter_add_ref  # noqa: F401
 from repro.core.resort_policy import ResortPolicy, SortPolicyConfig  # noqa: F401
 from repro.core.rhocell import fold_guards, reduce_rhocell, reduce_rhocell_separable, unfold_guards  # noqa: F401
-from repro.core.shape_functions import bspline, max_guard, shape_weights, support  # noqa: F401
+from repro.core.shape_functions import (  # noqa: F401
+    bspline,
+    max_guard,
+    shape_weights,
+    shape_weights_window,
+    support,
+    unified_support,
+)

@@ -183,29 +183,18 @@ def deposit_matrix(
 CURRENT_STAGGER: tuple[Stagger, Stagger, Stagger] = (STAGGER_X, STAGGER_Y, STAGGER_Z)
 
 
-@partial(
-    jax.jit,
-    static_argnames=("grid_shape", "order", "guard", "bin_matmul", "separable_reduce"),
-)
-def deposit_current_matrix_fused(
-    pos,
-    vel,
-    qw,
-    layout: BinnedLayout,
-    *,
-    grid_shape,
-    order: int,
-    guard: int | None = None,
-    bin_matmul: Callable | None = None,
-    separable_reduce: bool = True,
-):
-    """All three Yee-staggered current components in one fused pass
-    (§Perf iteration P2): the bin gather of (pos, val) and the six 1-D
-    weight sets (staggered + unstaggered per axis) are computed ONCE and
-    shared across Jx/Jy/Jz — the naive path re-gathers and re-computes
-    2.5x of this work per component. Returns [Jx, Jy, Jz] guard-padded.
+def fused_bin_slab(pos, vel, qw, layout: BinnedLayout, *, grid_shape):
+    """One bin gather for all three current components (Alg. 2 stage 1).
+
+    Returns the two (n_cells, cap, 3) slabs the fused megakernel streams:
+      d:   fractional offsets pos - cell (gap slots: whatever particle 0
+           aliases to — harmless, the value slab carries the masking)
+      val: q*w*v per component, exactly 0 on gap/overflow slots.
+
+    Compare binned_shape_factors: that builds the full A:(C,cap,Tx) /
+    B:(C,cap,Ty*Tz) operand tensors per component in HBM; here only these
+    two thin slabs exist outside the kernel.
     """
-    g = sf.max_guard(order) if guard is None else guard
     slots = layout.slots
     n_cells, cap = slots.shape
     p = jnp.maximum(slots, 0)
@@ -216,13 +205,61 @@ def deposit_current_matrix_fused(
     qw_b = jnp.where(valid, qw[p], jnp.zeros((), qw.dtype))
     cells = cell_coords(n_cells, grid_shape)
     d = pos_b - cells[:, None, :].astype(pos.dtype)
+    val = qw_b[..., None] * jnp.where(valid[..., None], vel_b, jnp.zeros((), vel.dtype))
+    return d, val
 
-    # six weight sets, computed once
+
+@partial(
+    jax.jit,
+    static_argnames=("grid_shape", "order", "guard", "fused_matmul", "separable_reduce"),
+)
+def deposit_current_matrix_fused(
+    pos,
+    vel,
+    qw,
+    layout: BinnedLayout,
+    *,
+    grid_shape,
+    order: int,
+    guard: int | None = None,
+    fused_matmul: Callable | None = None,
+    separable_reduce: bool = True,
+):
+    """All three Yee-staggered current components in one fused pass — the
+    default `Simulation` deposition hot path (paper Alg. 2).
+
+    The bin gather happens ONCE (fused_bin_slab) and the six 1-D weight
+    sets (staggered + unstaggered per axis) are evaluated once and shared
+    across Jx/Jy/Jz on the order's unified tap window — the per-component
+    path re-gathers and re-computes 2.5x of this work, and materializes
+    full A/B operand tensors in HBM per component.
+
+    `fused_matmul` is the slab -> packed (C, 3, T, T*T) contraction:
+    kernels.deposition.fused_bin_deposit (the Pallas megakernel, in-kernel
+    operand build on the VPU + three shared-weight MXU contractions on the
+    unified tap window — the zero-padding to T is free on MXU tiles) or
+    None for the pure-XLA reference, which contracts each component on its
+    TRUE support (no padded FLOPs — XLA einsums pay for every zero) while
+    still sharing the slab gather and per-axis weights. Identical math
+    either way. Returns [Jx, Jy, Jz] guard-padded.
+    """
+    g = sf.max_guard(order) if guard is None else guard
+    d, val = fused_bin_slab(pos, vel, qw, layout, grid_shape=grid_shape)
+    n_cells, cap, _ = d.shape
+    reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
+
+    if fused_matmul is not None:
+        packed = fused_matmul(d, val, order=order)
+        t, base = sf.unified_support(order)
+        bases = (base, base, base)
+        return [
+            reduce(packed[:, comp].astype(val.dtype).reshape(-1, t, t, t), grid_shape, bases, g)
+            for comp in range(3)
+        ]
+
+    # six weight sets, computed once and shared across components
     w_u = [sf.shape_weights(d[..., k], order, False) for k in range(3)]  # unstaggered
     w_s = [sf.shape_weights(d[..., k], order, True) for k in range(3)]   # staggered
-
-    mm = bin_matmul or _default_bin_matmul
-    reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
     out = []
     for comp in range(3):
         stagger = CURRENT_STAGGER[comp]
@@ -230,10 +267,9 @@ def deposit_current_matrix_fused(
         wx = w_s[0] if stagger[0] else w_u[0]
         wy = w_s[1] if stagger[1] else w_u[1]
         wz = w_s[2] if stagger[2] else w_u[2]
-        val = qw_b * jnp.where(valid, vel_b[..., comp], jnp.zeros((), vel.dtype))
-        a = wx * val[..., None]
-        bmat = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, -1)
-        rho = mm(a, bmat).reshape(-1, tx, ty, tz)
+        a = wx * val[..., comp][..., None]
+        byz = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, -1)
+        rho = _default_bin_matmul(a, byz).reshape(-1, tx, ty, tz)
         out.append(reduce(rho, grid_shape, bases, g))
     return out
 
@@ -241,9 +277,20 @@ def deposit_current_matrix_fused(
 def deposit_current(pos, vel, qw, *, grid_shape, order: int, method: str = "matrix", layout: BinnedLayout | None = None, cell_ids=None, fold: bool = True, **kw):
     """Deposit all three Yee-staggered current components.
 
-    vel: (Np, 3); qw: (Np,) charge*weight. method in {scatter, rhocell, matrix}.
+    vel: (Np, 3); qw: (Np,) charge*weight. method in {scatter, rhocell,
+    matrix, matrix_unfused}; "matrix" is the fused megakernel path,
+    "matrix_unfused" the per-component comparison mode.
     Returns list [Jx, Jy, Jz], folded periodic grids if fold else padded.
     """
+    # fold with the guard the deposit actually used, not max_guard
+    # unconditionally — a caller-supplied guard= kwarg would otherwise fold
+    # interior current onto the wrong cells without an error
+    g = kw.get("guard")
+    g = sf.max_guard(order) if g is None else g
+    if method == "matrix":
+        assert layout is not None
+        out = deposit_current_matrix_fused(pos, vel, qw, layout, grid_shape=grid_shape, order=order, **kw)
+        return [fold_guards(j, g) if fold else j for j in out]
     out = []
     for comp in range(3):
         values = qw * vel[:, comp]
@@ -253,10 +300,10 @@ def deposit_current(pos, vel, qw, *, grid_shape, order: int, method: str = "matr
         elif method == "rhocell":
             assert cell_ids is not None
             j = deposit_rhocell(pos, values, cell_ids, grid_shape=grid_shape, order=order, stagger=stagger, **kw)
-        elif method == "matrix":
+        elif method == "matrix_unfused":
             assert layout is not None
             j = deposit_matrix(pos, values, layout, grid_shape=grid_shape, order=order, stagger=stagger, **kw)
         else:
             raise ValueError(f"unknown method {method}")
-        out.append(fold_guards(j, sf.max_guard(order)) if fold else j)
+        out.append(fold_guards(j, g) if fold else j)
     return out

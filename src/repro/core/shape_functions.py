@@ -65,6 +65,27 @@ def bspline(order: int, u):
     raise ValueError(f"unsupported shape order {order}")
 
 
+def shape_weights_window(d, order: int, staggered: bool, *, n_taps: int, base: int):
+    """1-D shape factors over an *explicit* tap window.
+
+    This is the single shape-weight evaluation shared by the pure-JAX
+    deposition reference AND the Pallas megakernel body (kernels/deposition):
+    it is pure elementwise jnp on ``d`` with the tap offsets baked in as a
+    numpy constant — no iota, so it traces cleanly inside a TPU kernel
+    (Mosaic rejects 1-D iota).
+
+    Taps outside the true B-spline support evaluate to exactly 0, so a
+    window wider than SUPPORT[(order, staggered)] (e.g. unified_support's,
+    shared across stagger variants) yields the same weights, zero-padded.
+
+    Each tap offset enters as a Python scalar (pallas_call rejects captured
+    array constants, and Mosaic rejects 1-D iota), then the taps stack.
+    """
+    shift = 0.5 if staggered else 0.0
+    taps = [bspline(order, d - float(base + shift + j)) for j in range(n_taps)]
+    return jnp.stack(taps, axis=-1)
+
+
 def shape_weights(d, order: int, staggered: bool):
     """1-D shape factors for fractional in-cell position ``d``.
 
@@ -78,14 +99,26 @@ def shape_weights(d, order: int, staggered: bool):
       Rows sum to 1 (partition of unity) for any d in [0, 1).
     """
     n_taps, base = SUPPORT[(order, staggered)]
-    shift = 0.5 if staggered else 0.0
-    offs = jnp.arange(n_taps, dtype=d.dtype) + (base + shift)
-    return bspline(order, d[..., None] - offs)
+    return shape_weights_window(d, order, staggered, n_taps=n_taps, base=base)
 
 
 def support(order: int, staggered: bool) -> tuple[int, int]:
     """(n_taps, base_offset) for the fixed tap window."""
     return SUPPORT[(order, staggered)]
+
+
+def unified_support(order: int) -> tuple[int, int]:
+    """(n_taps, base_offset) of the smallest window covering BOTH the
+    staggered and unstaggered supports of ``order``.
+
+    The fused three-component deposition evaluates every current component
+    on this one window (extra taps are exactly 0), so Jx/Jy/Jz share operand
+    shapes and pack into a single ``(n_cells, 3, T, T*T)`` rhocell tensor:
+    order 1 -> (3, -1), order 2 -> (4, -1), order 3 -> (5, -2).
+    """
+    base = min(SUPPORT[(order, s)][1] for s in (False, True))
+    hi = max(SUPPORT[(order, s)][0] + SUPPORT[(order, s)][1] for s in (False, True))
+    return hi - base, base
 
 
 def max_guard(order: int) -> int:

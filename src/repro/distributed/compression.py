@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size_compat
+
 
 def zeros_like_residual(grads):
     return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
@@ -30,7 +32,7 @@ def _compress_one(g, r, axis_name):
     q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
     deq = q.astype(jnp.float32) * scale
     new_r = g32 - deq
-    n = lax.axis_size(axis_name)
+    n = axis_size_compat(axis_name)
     summed = lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32) * scale / n
     return summed.astype(g.dtype), new_r
 

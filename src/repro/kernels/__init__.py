@@ -1,5 +1,19 @@
 """Pallas TPU kernels for the Matrix-PIC hot spots.
 
 Each kernel family ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
-ops.py (jit'd wrapper, interpret=True on CPU), ref.py (pure-jnp oracle).
+ops.py (jit'd wrapper, interpret auto-detected off-TPU), ref.py (pure-jnp
+oracle). Shared interpret detection and the VMEM-budget block autotuner
+live in kernels/common.py. See kernels/README.md for the design notes.
 """
+
+from repro.kernels.common import autodetect_interpret, choose_block_cells  # noqa: F401
+from repro.kernels.deposition.ops import (  # noqa: F401
+    bin_outer_product,
+    bin_outer_product_ref,
+    fused_bin_deposit,
+    fused_bin_deposit_ref,
+)
+from repro.kernels.gather.ops import bin_gather  # noqa: F401
+from repro.kernels.gather.ref import bin_gather_ref  # noqa: F401
+from repro.kernels.scatter_matrix.ops import segment_accumulate  # noqa: F401
+from repro.kernels.scatter_matrix.ref import segment_accumulate_ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Shared plumbing for the Pallas kernel packages.
+
+Two concerns every kernel family (deposition, gather, scatter_matrix) was
+solving with copy-pasted code:
+
+  * interpret-mode detection — the kernels are written for the TPU Mosaic
+    compiler; on any other backend (CPU CI, GPU dev boxes) they must run
+    under the Pallas interpreter, which executes the kernel body as written.
+  * block sizing — the grid tiles the leading (cell/bin) axis so each grid
+    step's working set fits VMEM. The autotuner picks the largest block
+    that fits a VMEM budget, rounded down to a sublane-friendly multiple.
+
+Callers describe their per-cell working set in bytes (inputs + operands
+built in-kernel + output tile) and get a block size back; `interpret=None`
+anywhere in the kernel APIs means "auto-detect".
+"""
+
+from __future__ import annotations
+
+import jax
+
+#: Default per-grid-step VMEM budget. Real TPU cores have ~16 MiB of VMEM;
+#: 4 MiB leaves room for double-buffered pipelining of ins/outs plus
+#: compiler temporaries.
+DEFAULT_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+#: Sublane-friendly rounding for the blocked (cell/bin) axis.
+BLOCK_MULTIPLE = 8
+
+#: Under the interpreter there is no physical VMEM and per-grid-step
+#: overhead dominates, so the autotuner widens its budget by this factor
+#: (fewer, larger blocks; the TPU-shaped budget still governs on hardware).
+INTERPRET_BUDGET_SCALE = 16
+
+
+def autodetect_interpret() -> bool:
+    """True when the Mosaic TPU compiler is unavailable for pallas_call."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None means auto-detect; an explicit bool is respected as-is."""
+    return autodetect_interpret() if interpret is None else bool(interpret)
+
+
+def choose_block_cells(
+    n_cells: int,
+    per_cell_bytes: int,
+    *,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+    multiple: int = BLOCK_MULTIPLE,
+    interpret: bool = False,
+) -> int:
+    """Largest leading-axis block whose working set fits the VMEM budget.
+
+    Args:
+      n_cells: extent of the blocked axis (upper bound for the block).
+      per_cell_bytes: bytes of VMEM one cell/bin of the block consumes —
+        count kernel inputs, in-kernel intermediates, and the output tile.
+      vmem_budget_bytes: soft per-grid-step budget.
+      multiple: round blocks >= this down to a multiple of it (sublane
+        alignment); smaller blocks are kept exact so tiny problems still run.
+      interpret: widen the budget by INTERPRET_BUDGET_SCALE (no physical
+        VMEM under the interpreter; per-step overhead dominates instead).
+    """
+    if interpret:
+        vmem_budget_bytes *= INTERPRET_BUDGET_SCALE
+    block = max(1, min(int(n_cells), vmem_budget_bytes // max(int(per_cell_bytes), 1)))
+    if block >= multiple:
+        block -= block % multiple
+    return block

@@ -1,2 +1,6 @@
-from repro.kernels.deposition.ops import bin_outer_product  # noqa: F401
-from repro.kernels.deposition.ref import bin_outer_product_ref  # noqa: F401
+from repro.kernels.deposition.ops import (  # noqa: F401
+    bin_outer_product,
+    bin_outer_product_ref,
+    fused_bin_deposit,
+    fused_bin_deposit_ref,
+)

@@ -1,24 +1,39 @@
-"""Pallas TPU kernel: binned outer-product deposition (the MOPA analogue).
+"""Pallas TPU kernels: binned outer-product deposition (the MOPA analogue).
 
-Computes  out[c] = A_c^T @ B_c  for every cell bin c:
+Two kernels live here.
 
-    A: (n_cells, cap, M)   w_p * s_x shape factors (gaps are zero rows)
-    B: (n_cells, cap, N)   s_y (x) s_z factors
-    out: (n_cells, M, N)   the rhocell tiles
+`bin_outer_product_pallas` — the original single-component contraction
+  out[c] = A_c^T @ B_c with the operand tensors A/B built *outside* the
+  kernel (they round-trip through HBM). Kept as a comparison mode and for
+  generic batched-contraction use.
+
+`fused_deposition_pallas` — the fused three-component megakernel
+(paper Alg. 2, "VPU preprocessing + MPU accumulation in one pipeline").
+Per cell-block it:
+
+  (a) loads the gathered binned particle slab: fractional offsets
+      ``d:(C, cap, 3)`` and per-component values ``val:(C, cap, 3)``
+      (val[c,p,k] = q*w*v_k, zeroed for gap slots);
+  (b) computes the six 1-D shape-weight sets (staggered + unstaggered per
+      axis) in-kernel on the VPU, on the order's *unified* tap window
+      (shape_functions.unified_support) so all components share shapes;
+  (c) runs the three MXU contractions for Jx/Jy/Jz against those shared
+      weights (component k uses the staggered set on axis k);
+  (d) writes one packed ``(C, 3, T, T*T)`` rhocell tensor.
+
+The A/B operand tensors therefore never exist in HBM — only the (C, cap, 3)
+slabs stream in and the packed rhocell tiles stream out, and the bin gather
+happens once for all three components instead of three times.
 
 TPU mapping (DESIGN.md §2): the per-cell sum of outer products IS the MPU
-tile accumulation — on TPU it is a contraction over the bin capacity axis,
-executed as a batched dot on the MXU. The grid tiles the cell axis; each
-grid step holds a (block_cells, cap, ·) slab in VMEM, so the "tile stays
-resident while the cell's particles stream" property of the paper holds
-block-wise. Capacity should be a multiple of 8 (lane alignment; 128 for
-full MXU depth utilization — see choose_capacity()).
+tile accumulation — a contraction over the bin-capacity axis executed as a
+batched dot on the MXU. The grid tiles the cell axis; block sizes come from
+the shared VMEM-budget autotuner (kernels/common.py). Capacity should be a
+multiple of 8 (lane alignment; 128 for full MXU depth — choose_capacity()).
 
-Two kernel bodies:
-  * mxu:  jax.lax.dot_general batched over cells, contracting cap — the
-          matrix-unit path (the paper's MPU kernel).
-  * vpu:  broadcast-multiply + reduce over cap — the vector-unit fallback
-          used for very small tiles (paper's low-density hybrid fallback).
+Weight evaluation is `shape_functions.shape_weights_window` — the same
+function the pure-JAX reference uses; tap offsets are numpy constants so it
+traces inside the kernel body (no iota).
 """
 
 from __future__ import annotations
@@ -26,6 +41,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.shape_functions import shape_weights_window, support, unified_support
+from repro.kernels.common import (
+    DEFAULT_VMEM_BUDGET_BYTES,
+    choose_block_cells,
+    resolve_interpret,
+)
 
 
 def _mxu_kernel(a_ref, b_ref, o_ref):
@@ -51,8 +73,8 @@ def bin_outer_product_pallas(
     *,
     block_cells: int | None = None,
     mode: str = "mxu",
-    interpret: bool = True,
-    vmem_budget_bytes: int = 4 * 1024 * 1024,
+    interpret: bool | None = None,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
 ) -> jax.Array:
     """Batched per-bin contraction via pl.pallas_call.
 
@@ -62,9 +84,12 @@ def bin_outer_product_pallas(
     n = b.shape[2]
     assert b.shape[:2] == (c, cap)
 
+    interpret = resolve_interpret(interpret)
     if block_cells is None:
         per_cell = cap * (m + n) * 4 + m * n * 4
-        block_cells = max(1, min(c, vmem_budget_bytes // max(per_cell, 1)))
+        block_cells = choose_block_cells(
+            c, per_cell, vmem_budget_bytes=vmem_budget_bytes, interpret=interpret
+        )
     cb = min(block_cells, c)
 
     kernel = _mxu_kernel if mode == "mxu" else _vpu_kernel
@@ -80,3 +105,113 @@ def bin_outer_product_pallas(
         out_shape=jax.ShapeDtypeStruct((c, m, n), jnp.float32),
         interpret=interpret,
     )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused three-component megakernel
+# ---------------------------------------------------------------------------
+
+
+def _make_fused_kernel(order: int):
+    t, base = unified_support(order)
+
+    def kernel(d_ref, val_ref, o_ref):
+        d = d_ref[...]      # (CB, cap, 3) fractional in-cell offsets
+        val = val_ref[...]  # (CB, cap, 3) q*w*v per component, gaps zeroed
+        cb, cap = d.shape[0], d.shape[1]
+
+        # (b) six 1-D weight sets on the VPU — unstaggered + staggered per
+        # axis, each on its TRUE support so the contractions below carry no
+        # padded FLOPs (matters under the interpreter; on the MXU the small
+        # dots pad to hardware tiles regardless).
+        w = {}
+        for axis in range(3):
+            da = d[..., axis]
+            for staggered in (False, True):
+                nt, b = support(order, staggered)
+                w[(axis, staggered)] = shape_weights_window(
+                    da, order, staggered, n_taps=nt, base=b
+                )
+
+        # (c) three shared-weight MXU contractions (component k staggered on
+        # axis k only), each (d) embedded at its static offset inside the
+        # packed (CB, 3, T, T*T) unified-window rhocell tile.
+        out = jnp.zeros((cb, 3, t, t, t), o_ref.dtype)
+        for comp in range(3):
+            wx = w[(0, comp == 0)]
+            wy = w[(1, comp == 1)]
+            wz = w[(2, comp == 2)]
+            (tx, bx) = support(order, comp == 0)
+            (ty, by) = support(order, comp == 1)
+            (tz, bz) = support(order, comp == 2)
+            a = wx * val[..., comp][..., None]                       # (CB, cap, tx)
+            byz = (wy[..., :, None] * wz[..., None, :]).reshape(cb, cap, ty * tz)
+            res = jax.lax.dot_general(
+                a,
+                byz,
+                dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=o_ref.dtype,
+            )
+            ox, oy, oz = bx - base, by - base, bz - base
+            out = out.at[:, comp, ox : ox + tx, oy : oy + ty, oz : oz + tz].set(
+                res.reshape(cb, tx, ty, tz)
+            )
+        o_ref[...] = out.reshape(cb, 3, t, t * t)
+
+    return kernel
+
+
+def fused_deposition_bytes_per_cell(cap: int, order: int) -> int:
+    """VMEM working set of one cell in the fused kernel, in bytes: the two
+    (cap, 3) input slabs, six (cap, T) weight sets, the (cap, T) and
+    (cap, T*T) operands of the live contraction, and the packed (3, T, T*T)
+    tile twice (the zero-padded accumulator plus the output block)."""
+    t, _ = unified_support(order)
+    n = t * t
+    return 4 * (2 * cap * 3 + 6 * cap * t + cap * (t + n) + 2 * 3 * t * n)
+
+
+def fused_deposition_pallas(
+    d: jax.Array,
+    val: jax.Array,
+    *,
+    order: int,
+    block_cells: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> jax.Array:
+    """Fused Jx/Jy/Jz deposition contraction.
+
+    d:   (C, cap, 3) fractional offsets pos - cell (gap slots: any value).
+    val: (C, cap, 3) q*w*v per component (gap slots MUST be zero — they
+         carry the masking, exactly like the zero rows of A in the
+         unfused kernel).
+    Returns (C, 3, T, T*T) float32 packed rhocell tiles on the unified
+    window of ``order`` (T, base = unified_support(order)).
+    """
+    c, cap, three = d.shape
+    assert three == 3 and val.shape == d.shape
+    t, _ = unified_support(order)
+
+    interpret = resolve_interpret(interpret)
+    if block_cells is None:
+        block_cells = choose_block_cells(
+            c,
+            fused_deposition_bytes_per_cell(cap, order),
+            vmem_budget_bytes=vmem_budget_bytes,
+            interpret=interpret,
+        )
+    cb = min(block_cells, c)
+
+    grid = (pl.cdiv(c, cb),)
+    return pl.pallas_call(
+        _make_fused_kernel(order),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cb, cap, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb, cap, 3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((cb, 3, t, t * t), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, 3, t, t * t), jnp.float32),
+        interpret=interpret,
+    )(d, val)

@@ -1,9 +1,14 @@
-"""Jit'd public wrapper for the deposition kernel.
+"""Jit'd public wrappers for the deposition kernels.
 
-`bin_outer_product` routes to the Pallas kernel (interpret=True on CPU —
-the kernel body executes exactly as written; compiled Mosaic on real TPU)
-and is what `PICConfig(use_pallas=True)` plugs into deposit_matrix as
-`bin_matmul`.
+Interpret-mode detection is the shared `kernels.common` auto-detect (the
+kernel bodies execute as written under the interpreter off-TPU; compiled
+Mosaic on real TPU).
+
+`bin_outer_product` is the single-component contraction that
+`deposit_matrix` plugs in as `bin_matmul` (comparison mode).
+`fused_bin_deposit` is the three-component megakernel that
+`deposit_current_matrix_fused` plugs in as `fused_matmul` — the default
+hot path of `PICConfig(use_pallas=True)`.
 """
 
 from __future__ import annotations
@@ -12,14 +17,21 @@ from functools import partial
 
 import jax
 
-from repro.kernels.deposition.kernel import bin_outer_product_pallas
-from repro.kernels.deposition.ref import bin_outer_product_ref  # noqa: F401
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+from repro.kernels.deposition.kernel import (
+    bin_outer_product_pallas,
+    fused_deposition_pallas,
+)
+from repro.kernels.deposition.ref import (  # noqa: F401
+    bin_outer_product_ref,
+    fused_bin_deposit_ref,
+)
 
 
 @partial(jax.jit, static_argnames=("mode", "block_cells"))
 def bin_outer_product(a, b, *, mode: str = "mxu", block_cells: int | None = None):
-    return bin_outer_product_pallas(a, b, mode=mode, block_cells=block_cells, interpret=_on_cpu())
+    return bin_outer_product_pallas(a, b, mode=mode, block_cells=block_cells)
+
+
+@partial(jax.jit, static_argnames=("order", "block_cells"))
+def fused_bin_deposit(d, val, *, order: int, block_cells: int | None = None):
+    return fused_deposition_pallas(d, val, order=order, block_cells=block_cells)

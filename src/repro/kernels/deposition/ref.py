@@ -1,8 +1,34 @@
-"""Pure-jnp oracle for the binned outer-product deposition kernel."""
+"""Pure-jnp oracles for the binned deposition kernels.
+
+Both oracles share their shape-weight evaluation with the Pallas kernel
+bodies through `shape_functions.shape_weights_window` — the kernel and the
+reference differ only in who runs the contraction (MXU dot vs einsum).
+"""
 
 import jax.numpy as jnp
+
+from repro.core.shape_functions import shape_weights_window, unified_support
 
 
 def bin_outer_product_ref(a, b):
     """out[c] = A_c^T @ B_c. a: (C, cap, M), b: (C, cap, N) -> (C, M, N)."""
     return jnp.einsum("cpm,cpn->cmn", a, b, preferred_element_type=jnp.float32)
+
+
+def fused_bin_deposit_ref(d, val, *, order: int):
+    """Oracle for the fused three-component megakernel.
+
+    d, val: (C, cap, 3) -> (C, 3, T, T*T) float32 packed rhocell tiles on
+    the unified tap window of ``order`` (component k staggered on axis k).
+    """
+    t, base = unified_support(order)
+    c, cap, _ = d.shape
+    packed = []
+    for comp in range(3):
+        wx = shape_weights_window(d[..., 0], order, comp == 0, n_taps=t, base=base)
+        wy = shape_weights_window(d[..., 1], order, comp == 1, n_taps=t, base=base)
+        wz = shape_weights_window(d[..., 2], order, comp == 2, n_taps=t, base=base)
+        a = wx * val[..., comp][..., None]
+        byz = (wy[..., :, None] * wz[..., None, :]).reshape(c, cap, t * t)
+        packed.append(jnp.einsum("cpm,cpn->cmn", a, byz, preferred_element_type=jnp.float32))
+    return jnp.stack(packed, axis=1)

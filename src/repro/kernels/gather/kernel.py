@@ -16,6 +16,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import (
+    DEFAULT_VMEM_BUDGET_BYTES,
+    choose_block_cells,
+    resolve_interpret,
+)
+
 
 def _gather_kernel(wx_ref, byz_ref, g_ref, o_ref):
     wx = wx_ref[...]    # (CB, cap, M)
@@ -35,15 +41,18 @@ def bin_gather_pallas(
     g: jax.Array,
     *,
     block_cells: int | None = None,
-    interpret: bool = True,
-    vmem_budget_bytes: int = 4 * 1024 * 1024,
+    interpret: bool | None = None,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
 ) -> jax.Array:
     """wx: (C, cap, M); byz: (C, cap, N); g: (C, M, N) -> (C, cap) values."""
     c, cap, m = wx.shape
     n = byz.shape[2]
+    interpret = resolve_interpret(interpret)
     if block_cells is None:
         per_cell = cap * (m + n + 1) * 4 + m * n * 4
-        block_cells = max(1, min(c, vmem_budget_bytes // max(per_cell, 1)))
+        block_cells = choose_block_cells(
+            c, per_cell, vmem_budget_bytes=vmem_budget_bytes, interpret=interpret
+        )
     cb = min(block_cells, c)
 
     grid = (pl.cdiv(c, cb),)

@@ -1,4 +1,4 @@
-"""Jit'd wrapper for the binned gather kernel."""
+"""Jit'd wrapper for the binned gather kernel (interpret auto-detected)."""
 
 from __future__ import annotations
 
@@ -12,4 +12,4 @@ from repro.kernels.gather.ref import bin_gather_ref  # noqa: F401
 
 @partial(jax.jit, static_argnames=("block_cells",))
 def bin_gather(wx, byz, g, *, block_cells: int | None = None):
-    return bin_gather_pallas(wx, byz, g, block_cells=block_cells, interpret=jax.default_backend() == "cpu")
+    return bin_gather_pallas(wx, byz, g, block_cells=block_cells)

@@ -16,6 +16,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import (
+    DEFAULT_VMEM_BUDGET_BYTES,
+    choose_block_cells,
+    resolve_interpret,
+)
+
 
 def _segment_accum_kernel(w_ref, u_ref, o_ref):
     w = w_ref[...]  # (VB, cap)
@@ -32,15 +38,22 @@ def segment_accumulate_pallas(
     w: jax.Array,
     u: jax.Array,
     *,
-    block_bins: int = 256,
+    block_bins: int | None = None,
     block_d: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
 ) -> jax.Array:
     """w: (V, cap), u: (V, cap, D) -> (V, D) in u.dtype accumulated fp32."""
     v, cap = w.shape
     d = u.shape[2]
-    vb = min(block_bins, v)
     db = min(block_d, d)
+    interpret = resolve_interpret(interpret)
+    if block_bins is None:
+        per_bin = (cap + cap * db + db) * 4
+        block_bins = choose_block_cells(
+            v, per_bin, vmem_budget_bytes=vmem_budget_bytes, interpret=interpret
+        )
+    vb = min(block_bins, v)
 
     grid = (pl.cdiv(v, vb), pl.cdiv(d, db))
     out = pl.pallas_call(

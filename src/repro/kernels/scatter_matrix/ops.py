@@ -1,4 +1,4 @@
-"""Jit'd wrapper for the segment accumulation kernel."""
+"""Jit'd wrapper for the segment accumulation kernel (interpret auto-detected)."""
 
 from __future__ import annotations
 
@@ -11,7 +11,5 @@ from repro.kernels.scatter_matrix.ref import segment_accumulate_ref  # noqa: F40
 
 
 @partial(jax.jit, static_argnames=("block_bins", "block_d"))
-def segment_accumulate(w, u, *, block_bins: int = 256, block_d: int = 512):
-    return segment_accumulate_pallas(
-        w, u, block_bins=block_bins, block_d=block_d, interpret=jax.default_backend() == "cpu"
-    )
+def segment_accumulate(w, u, *, block_bins: int | None = None, block_d: int = 512):
+    return segment_accumulate_pallas(w, u, block_bins=block_bins, block_d=block_d)

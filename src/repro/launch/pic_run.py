@@ -24,7 +24,7 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--ppc", type=int, default=2, help="particles per cell per dim")
     ap.add_argument("--order", type=int, default=1, choices=[1, 2, 3])
-    ap.add_argument("--deposition", choices=["scatter", "rhocell", "matrix"], default="matrix")
+    ap.add_argument("--deposition", choices=["scatter", "rhocell", "matrix", "matrix_unfused"], default="matrix")
     ap.add_argument("--sort", choices=["incremental", "rebuild", "global", "none"], default="incremental")
     ap.add_argument("--grid", type=int, nargs=3, default=None)
     args = ap.parse_args()
@@ -42,7 +42,7 @@ def main() -> None:
         parts = profiled_plasma(jax.random.PRNGKey(0), grid, ppc_each_dim=(args.ppc,) * 3, density_fn=density)
         fields = inject_laser(FieldState.zeros(grid.shape), grid, LaserSpec(z_center=shape[2] * 0.15))
 
-    gather = "matrix" if args.deposition == "matrix" else "scatter"
+    gather = "matrix" if args.deposition in ("matrix", "matrix_unfused") else "scatter"
     cfg = PICConfig(
         grid=grid, dt=grid.cfl_dt(0.5), order=args.order, deposition=args.deposition,
         gather=gather, sort_mode=args.sort, capacity=max(16, 4 * args.ppc**3),

@@ -38,6 +38,7 @@ from repro.pic.maxwell import curl_b_padded, curl_e_padded
 from repro.pic.plasma import ParticleState
 from repro.pic.pusher import advance_positions, boris_push, lorentz_gamma
 from repro.core.shape_functions import max_guard
+from repro.compat import axis_size_compat, shard_map_compat
 
 
 # ---------------------------------------------------------------------------
@@ -45,11 +46,11 @@ from repro.core.shape_functions import max_guard
 # ---------------------------------------------------------------------------
 
 def _axis_size(axis_name):
-    return lax.axis_size(axis_name)
+    return axis_size_compat(axis_name)
 
 
 def _ring(axis_name, shift):
-    n = lax.axis_size(axis_name)
+    n = axis_size_compat(axis_name)
     if shift == +1:
         return [(i, (i + 1) % n) for i in range(n)]
     return [((i + 1) % n, i) for i in range(n)]
@@ -314,7 +315,7 @@ def make_dist_step(mesh, cfg: DistConfig):
         ex = lambda a: a.reshape((1, 1) + a.shape)
         return fields, ex(pos), ex(u), ex(w), ex(alive), ex(slots), ex(pslot), stats
 
-    sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    sm = shard_map_compat(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(sm)
 
 

@@ -33,6 +33,7 @@ from repro.core import (
     build_bins,
     cell_index,
     choose_capacity,
+    deposit_current_matrix_fused,
     deposit_matrix,
     deposit_rhocell,
     deposit_scatter,
@@ -58,7 +59,7 @@ class PICConfig:
     grid: GridSpec
     dt: float
     order: int = 1
-    deposition: str = "matrix"   # scatter | rhocell | matrix
+    deposition: str = "matrix"   # scatter | rhocell | matrix (fused) | matrix_unfused
     gather: str = "matrix"       # scatter | matrix
     sort_mode: str = "incremental"
     charge: float = -1.0
@@ -114,6 +115,21 @@ def _gather_fields(pos, fields: FieldState, layout, config: PICConfig):
 def _deposit_current(pos, v, qw, layout, cells, config: PICConfig):
     shape = config.grid.shape
     inv_vol = 1.0 / config.grid.cell_volume
+
+    if config.deposition == "matrix":
+        # default hot path: fused three-component megakernel — one bin
+        # gather, shared shape weights, packed Jx/Jy/Jz contraction
+        fused_matmul = None
+        if config.use_pallas:
+            from repro.kernels.deposition.ops import fused_bin_deposit
+
+            fused_matmul = fused_bin_deposit
+        j3 = deposit_current_matrix_fused(
+            pos, v, qw, layout, grid_shape=shape, order=config.order, fused_matmul=fused_matmul
+        )
+        return [fold_guards(j, config.guard) * inv_vol for j in j3]
+
+    # comparison modes: scatter | rhocell | matrix_unfused (per component)
     out = []
     bin_matmul = None
     if config.use_pallas:
@@ -126,8 +142,10 @@ def _deposit_current(pos, v, qw, layout, cells, config: PICConfig):
             j = deposit_scatter(pos, values, grid_shape=shape, order=config.order, stagger=stagger)
         elif config.deposition == "rhocell":
             j = deposit_rhocell(pos, values, cells, grid_shape=shape, order=config.order, stagger=stagger)
-        else:
+        elif config.deposition == "matrix_unfused":
             j = deposit_matrix(pos, values, layout, grid_shape=shape, order=config.order, stagger=stagger, bin_matmul=bin_matmul)
+        else:
+            raise ValueError(f"unknown deposition method {config.deposition}")
         out.append(fold_guards(j, config.guard) * inv_vol)
     return out
 
@@ -205,7 +223,7 @@ class Simulation:
         self.history: list[dict] = []
 
     def run(self, n_steps: int, *, diagnostics_every: int = 0) -> None:
-        needs_bins = self.config.deposition == "matrix" or self.config.gather == "matrix"
+        needs_bins = self.config.deposition in ("matrix", "matrix_unfused") or self.config.gather == "matrix"
         for _ in range(n_steps):
             t0 = time.perf_counter()
             self.state, stats = pic_step(self.state, self.config)

@@ -17,6 +17,7 @@ import numpy as np  # noqa: E402
 
 from repro.pic import FieldState, GridSpec, PICConfig, Simulation, uniform_plasma  # noqa: E402
 from repro.pic.distributed import DistConfig, build_local_bins, make_dist_step, partition_particles  # noqa: E402
+from repro.compat import set_mesh_compat  # noqa: E402
 
 
 def main() -> None:
@@ -40,7 +41,7 @@ def main() -> None:
 
     fields = tuple(jnp.zeros(grid.shape, jnp.float32) for _ in range(6))
     step = make_dist_step(mesh, dcfg)
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         for _ in range(steps):
             fields, pos, u, w, alive, slots, pslot, stats = step(fields, pos, u, w, alive, slots, pslot)
     assert int(stats["migration_overflow"]) == 0

@@ -1,12 +1,8 @@
 """GPMA incremental sorter + binning: structural invariants and equivalence
-with a full rebuild, including hypothesis property tests."""
+with a full rebuild (hypothesis properties live in test_properties.py)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import (
     ResortPolicy,
@@ -14,8 +10,6 @@ from repro.core import (
     build_bins,
     cell_index,
     gpma_update,
-    matrix_scatter_add,
-    scatter_add_ref,
     sort_permutation,
 )
 
@@ -109,34 +103,6 @@ def test_gpma_overflow_flagged_not_lost_silently():
     check_layout_invariants(new_layout, cells1, jnp.asarray(pslot >= 0))
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    n=st.integers(5, 80),
-    seed=st.integers(0, 2**16),
-    move_frac=st.floats(0.0, 1.0),
-)
-def test_gpma_property_random_motion(n, seed, move_frac):
-    """Property: after arbitrary motion, incremental update either slots a
-    particle in its correct bin or reports it in the overflow count."""
-    rng = np.random.default_rng(seed)
-    cells0 = jnp.asarray(rng.integers(0, N_CELLS, n), jnp.int32)
-    alive0 = jnp.ones(n, bool)
-    layout, of0 = build_bins(cells0, alive0, n_cells=N_CELLS, capacity=CAP)
-    if int(of0):
-        return  # initial overflow: host would regrow capacity
-    move = rng.random(n) < move_frac
-    cells1 = np.asarray(cells0).copy()
-    cells1[move] = rng.integers(0, N_CELLS, move.sum())
-    alive1 = jnp.asarray(rng.random(n) > 0.05)
-    new_layout, stats = gpma_update(layout, jnp.asarray(cells1), alive1)
-
-    pslot = np.asarray(new_layout.particle_slot)
-    slotted = pslot >= 0
-    check_layout_invariants(new_layout, jnp.asarray(cells1), jnp.asarray(slotted))
-    # alive = slotted + overflowed
-    assert int(np.asarray(alive1).sum()) == int(slotted.sum()) + int(stats.n_overflow)
-
-
 def test_sort_permutation_orders_cells():
     rng = np.random.default_rng(3)
     cells = jnp.asarray(rng.integers(0, N_CELLS, 50), jnp.int32)
@@ -171,23 +137,3 @@ def test_resort_policy_triggers():
         pol.record_step(rebuilt=False, perf=0.2)
     do, reason = pol.should_sort(empty_ratio=0.5)
     assert do and reason == "perf_degradation"
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    t=st.integers(1, 200),
-    n_bins=st.integers(1, 40),
-    capacity=st.integers(1, 16),
-    d=st.integers(1, 8),
-    seed=st.integers(0, 2**16),
-    weighted=st.booleans(),
-)
-def test_matrix_scatter_add_property(t, n_bins, capacity, d, seed, weighted):
-    """matrix_scatter_add == scatter oracle for ANY capacity (overflow path)."""
-    rng = np.random.default_rng(seed)
-    idx = jnp.asarray(rng.integers(-1, n_bins, t), jnp.int32)
-    upd = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
-    w = jnp.asarray(rng.standard_normal(t), jnp.float32) if weighted else None
-    out = matrix_scatter_add(idx, upd, n_bins=n_bins, capacity=capacity, weights=w)
-    ref = scatter_add_ref(idx, upd, n_bins=n_bins, weights=w)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)

@@ -1,12 +1,11 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
-plus end-to-end use inside deposit_matrix and hypothesis properties."""
+plus end-to-end use inside deposit_matrix (hypothesis properties live in
+test_properties.py)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import build_bins, cell_index, choose_capacity, deposit_matrix, deposit_scatter
 from repro.kernels.deposition import bin_outer_product, bin_outer_product_ref
@@ -83,23 +82,6 @@ def test_segment_accumulate_matches_ref(shape, dtype):
     want = segment_accumulate_ref(w, u)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol)
-
-
-@settings(max_examples=15, deadline=None)
-@given(
-    c=st.integers(1, 64),
-    cap=st.sampled_from([8, 16, 24]),
-    m=st.integers(1, 5),
-    n=st.integers(1, 20),
-    seed=st.integers(0, 2**16),
-)
-def test_bin_outer_product_property(c, cap, m, n, seed):
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    a = jax.random.normal(k1, (c, cap, m))
-    b = jax.random.normal(k2, (c, cap, n))
-    got = bin_outer_product(a, b)
-    want = bin_outer_product_ref(a, b)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("order", [1, 3])

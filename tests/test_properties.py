@@ -1,0 +1,86 @@
+"""Hypothesis property tests (GPMA sorter, matrix scatter, deposition kernel).
+
+Kept in their own module behind importorskip: `hypothesis` is an optional
+dev dependency (requirements-dev.txt / pyproject `[dev]` extra) — the
+example-based coverage in test_core_sorting.py / test_kernels.py runs
+everywhere, and these properties run wherever hypothesis is installed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+from test_core_sorting import CAP, N_CELLS, check_layout_invariants  # noqa: E402
+
+from repro.core import build_bins, gpma_update, matrix_scatter_add, scatter_add_ref  # noqa: E402
+from repro.kernels.deposition import bin_outer_product, bin_outer_product_ref  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(5, 80),
+    seed=st.integers(0, 2**16),
+    move_frac=st.floats(0.0, 1.0),
+)
+def test_gpma_property_random_motion(n, seed, move_frac):
+    """Property: after arbitrary motion, incremental update either slots a
+    particle in its correct bin or reports it in the overflow count."""
+    rng = np.random.default_rng(seed)
+    cells0 = jnp.asarray(rng.integers(0, N_CELLS, n), jnp.int32)
+    alive0 = jnp.ones(n, bool)
+    layout, of0 = build_bins(cells0, alive0, n_cells=N_CELLS, capacity=CAP)
+    if int(of0):
+        return  # initial overflow: host would regrow capacity
+    move = rng.random(n) < move_frac
+    cells1 = np.asarray(cells0).copy()
+    cells1[move] = rng.integers(0, N_CELLS, move.sum())
+    alive1 = jnp.asarray(rng.random(n) > 0.05)
+    new_layout, stats = gpma_update(layout, jnp.asarray(cells1), alive1)
+
+    pslot = np.asarray(new_layout.particle_slot)
+    slotted = pslot >= 0
+    check_layout_invariants(new_layout, jnp.asarray(cells1), jnp.asarray(slotted))
+    # alive = slotted + overflowed
+    assert int(np.asarray(alive1).sum()) == int(slotted.sum()) + int(stats.n_overflow)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 200),
+    n_bins=st.integers(1, 40),
+    capacity=st.integers(1, 16),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+    weighted=st.booleans(),
+)
+def test_matrix_scatter_add_property(t, n_bins, capacity, d, seed, weighted):
+    """matrix_scatter_add == scatter oracle for ANY capacity (overflow path)."""
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(-1, n_bins, t), jnp.int32)
+    upd = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(t), jnp.float32) if weighted else None
+    out = matrix_scatter_add(idx, upd, n_bins=n_bins, capacity=capacity, weights=w)
+    ref = scatter_add_ref(idx, upd, n_bins=n_bins, weights=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 64),
+    cap=st.sampled_from([8, 16, 24]),
+    m=st.integers(1, 5),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**16),
+)
+def test_bin_outer_product_property(c, cap, m, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (c, cap, m))
+    b = jax.random.normal(k2, (c, cap, n))
+    got = bin_outer_product(a, b)
+    want = bin_outer_product_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
