@@ -32,8 +32,9 @@ def main():
     emit("fig9/baseline", t_base, f"alive={n}")
     emit("fig9/matrixpic", t_full, f"speedup={t_base / t_full:.2f}x")
 
-    # dynamics check: run 30 steps with the adaptive policy, report sorts
-    full.run(30)
+    # dynamics check: 30 steps with the adaptive policy running in-graph on
+    # the device-resident windowed driver, report sorts
+    full.run(30, window=10)
     d = full.diagnostics()
     emit("fig9/matrixpic_30steps", 0.0, f"sorts={full.sorts} rebuilds={full.rebuilds} field_energy={d['field_energy']:.3e}")
 

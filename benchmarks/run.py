@@ -20,6 +20,7 @@ MODULES = [
     "fig10_ablation", # Fig 10: component ablation
     "table3_efficiency",  # Table 3: % of theoretical peak
     "deposition_sweep",   # per-kernel deposition regression (see --deposition-json)
+    "sim_loop_sweep",     # host-driven vs device-resident loop (see --sim-json)
 ]
 
 
@@ -33,16 +34,26 @@ def main() -> None:
         help="also write the deposition kernel sweep as JSON (BENCH_deposition.json) "
         "so future PRs have a perf trajectory to diff against",
     )
+    ap.add_argument(
+        "--sim-json",
+        metavar="PATH",
+        default=None,
+        help="also write the simulation-loop driver sweep (host-driven vs "
+        "device-resident) as JSON (BENCH_sim.json)",
+    )
     args = ap.parse_args()
 
     mods = args.only or MODULES
-    if args.deposition_json and "deposition_sweep" not in mods:
-        print(
-            "warning: --deposition-json has no effect unless deposition_sweep "
-            "is among the selected modules; not writing "
-            f"{args.deposition_json}",
-            file=sys.stderr,
-        )
+    for flag, value, mod in (
+        ("--deposition-json", args.deposition_json, "deposition_sweep"),
+        ("--sim-json", args.sim_json, "sim_loop_sweep"),
+    ):
+        if value and mod not in mods:
+            print(
+                f"warning: {flag} has no effect unless {mod} is among the "
+                f"selected modules; not writing {value}",
+                file=sys.stderr,
+            )
     print("name,us_per_call,derived")
     failed = []
     for name in mods:
@@ -51,6 +62,11 @@ def main() -> None:
                 from benchmarks.deposition_sweep import write_json
 
                 write_json(args.deposition_json)
+                continue
+            if name == "sim_loop_sweep" and args.sim_json:
+                from benchmarks.sim_loop_sweep import write_json
+
+                write_json(args.sim_json)
                 continue
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()

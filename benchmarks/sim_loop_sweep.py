@@ -1,0 +1,160 @@
+"""Simulation-loop driver sweep: host-driven vs device-resident -> BENCH_sim.json.
+
+Times `Simulation.run` end-to-end on the uniform-plasma workload with the
+legacy host-driven per-step loop (several device->host syncs per step)
+against the device-resident windowed driver (`pic_run_window`: one compiled
+K-step `lax.scan`, one fetched bundle per window), across the paper's sort
+modes:
+
+    PYTHONPATH=src python -m benchmarks.run --only sim_loop_sweep \
+        --sim-json BENCH_sim.json
+
+Both drivers run the identical jitted step and identical policy thresholds;
+the wall-clock perf trigger is disabled so sort decisions (and hence work)
+match bit for bit — the measured delta is purely loop control flow:
+dispatch, host syncs, and host-side policy evaluation.
+
+Schema: {"meta": {...workload/backend...},
+         "results": {"<sort_mode>": {"host_us", "device_us", "speedup"}},
+         "acceptance": {"uniform_order2_incremental_speedup": x}}
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+from benchmarks.common import emit, time_grid
+from repro.core import ResortPolicy, SortPolicyConfig, policy_init
+from repro.pic import FieldState, GridSpec, PICConfig, Simulation, uniform_plasma
+
+# Small workload on purpose: this sweep measures LOOP CONTROL overhead
+# (python dispatch, device->host syncs, host-side policy) — the thing the
+# windowed driver eliminates — not kernel throughput (BENCH_deposition.json
+# covers that). On CPU the per-step sync cost is sub-millisecond, so it is
+# only visible against a small step; on a real accelerator the same syncs
+# stall the dispatch pipeline and dominate at any size.
+STEPS = 24
+WINDOW = 12
+ORDER = 2
+GRID = (4, 4, 4)
+PPC_EACH_DIM = (2, 2, 1)
+SORT_MODES = ("incremental", "rebuild", "global", "none")
+ROUNDS = 11
+
+
+def _make_sim(sort_mode: str) -> Simulation:
+    grid = GridSpec(shape=GRID)
+    parts = uniform_plasma(
+        jax.random.PRNGKey(0), grid, ppc_each_dim=PPC_EACH_DIM, density=1.0, u_thermal=0.05
+    )
+    if sort_mode == "none":
+        dep, gat = "rhocell", "scatter"  # binless path, as in the paper's ablation
+    else:
+        dep, gat = "matrix", "matrix"
+    cfg = PICConfig(
+        grid=grid, dt=grid.cfl_dt(0.5), order=ORDER, deposition=dep, gather=gat,
+        sort_mode=sort_mode, capacity=16,
+    )
+    # wall-clock trigger off: both drivers make identical sort decisions, so
+    # the timing delta is purely loop control flow
+    policy = SortPolicyConfig(sort_trigger_perf_enable=False)
+    return Simulation(FieldState.zeros(grid.shape), parts, cfg, policy=policy)
+
+
+def _loop_thunk(sim: Simulation, window: int | None, diagnostics_every: int = 0):
+    state0 = jax.tree.map(lambda a: a.copy(), sim.state)
+    cfg0 = sim.config
+    policy_cfg = sim.policy.config
+
+    def thunk():
+        # fresh run from the initial state each call (copy: the drivers
+        # donate state buffers); the reset cost is identical for both loops
+        sim.state = jax.tree.map(lambda a: a.copy(), state0)
+        sim.config = cfg0
+        sim.policy = ResortPolicy(policy_cfg)
+        sim.policy_state = policy_init()
+        sim.sorts = sim.rebuilds = 0
+        sim._host_step = 0
+        sim.history = []
+        sim.run(STEPS, window=window, diagnostics_every=diagnostics_every)
+        return sim.state.fields.ex
+
+    return thunk
+
+
+def collect(*, label: str = "sim_loop") -> dict:
+    """Run the sweep, emit CSV rows, and return the JSON-able payload."""
+    results: dict[str, dict[str, float]] = {}
+    for mode in SORT_MODES:
+        sim = _make_sim(mode)
+        row = time_grid({
+            "host": _loop_thunk(sim, None),
+            "device": _loop_thunk(sim, WINDOW),
+        }, rounds=ROUNDS)
+        speedup = row["host"] / row["device"]
+        results[mode] = {
+            "host_us": row["host"],
+            "device_us": row["device"],
+            "speedup": speedup,
+        }
+        emit(f"{label}/{mode}/host", row["host"], f"{STEPS} steps")
+        emit(f"{label}/{mode}/device", row["device"], f"window={WINDOW} speedup={speedup:.2f}x")
+
+    # per-step energy diagnostics: the legacy loop syncs diagnostics() every
+    # step, the windowed loop accumulates them in-graph and fetches one
+    # bundle — the on-device diagnostics path of the scan driver
+    sim = _make_sim("incremental")
+    row = time_grid({
+        "host": _loop_thunk(sim, None, diagnostics_every=1),
+        "device": _loop_thunk(sim, WINDOW, diagnostics_every=1),
+    }, rounds=ROUNDS)
+    speedup = row["host"] / row["device"]
+    results["incremental_diag_every_step"] = {
+        "host_us": row["host"],
+        "device_us": row["device"],
+        "speedup": speedup,
+    }
+    emit(f"{label}/incremental_diag/host", row["host"], f"{STEPS} steps, diagnostics_every=1")
+    emit(f"{label}/incremental_diag/device", row["device"], f"window={WINDOW} speedup={speedup:.2f}x")
+
+    n = GRID[0] * GRID[1] * GRID[2] * PPC_EACH_DIM[0] * PPC_EACH_DIM[1] * PPC_EACH_DIM[2]
+    return {
+        "meta": {
+            "grid": list(GRID),
+            "ppc_each_dim": list(PPC_EACH_DIM),
+            "n_particles": n,
+            "order": ORDER,
+            "steps": STEPS,
+            "window": WINDOW,
+            "backend": jax.default_backend(),
+            "note": (
+                f"us per {STEPS}-step run, median over {ROUNDS} interleaved rounds (time_grid: "
+                "drift-robust on shared CPUs); host = legacy per-step loop with "
+                "host-side policy + per-step syncs, device = pic_run_window scan "
+                "with in-graph policy + one fetched bundle per window; identical "
+                "jitted step and sort decisions (perf trigger disabled) on both"
+            ),
+        },
+        "results": results,
+        "acceptance": {
+            "uniform_order2_incremental_speedup": results["incremental"]["speedup"],
+            "uniform_order2_incremental_diag_speedup": results["incremental_diag_every_step"]["speedup"],
+        },
+    }
+
+
+def write_json(path: str) -> None:
+    payload = collect()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    collect()
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,8 @@ from repro.pic import (  # noqa: E402
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--window", type=int, default=10,
+                    help="steps per device-resident scan window; 0 = legacy host loop")
     args = ap.parse_args()
 
     grid = GridSpec(shape=(8, 8, 64))
@@ -37,16 +39,21 @@ def main() -> None:
     sim = Simulation(fields, particles, cfg)
     print(f"LWFA: grid {grid.shape}, {int(jnp.sum(particles.alive))} plasma particles, a0={laser.a0}")
 
-    for step in range(args.steps):
-        sim.run(1)
-        if step % 10 == 0:
-            d = sim.diagnostics()
-            # wake diagnostic: on-axis longitudinal field
-            ez = np.asarray(sim.state.fields.ez)[4, 4, :]
-            print(
-                f"step {d['step']:4d}  E_field={d['field_energy']:.3e}  E_kin={d['kinetic_energy']:.3e}"
-                f"  max|Ez_axis|={np.abs(ez).max():.3e}  sorts={sim.sorts} rebuilds={sim.rebuilds}"
-            )
+    # each print block runs as one device-resident scan window (no per-step
+    # host syncs); the field snapshot is read at the window boundary
+    block = args.window if args.window > 0 else 10
+    window = args.window if args.window > 0 else None
+    done = 0
+    while done < args.steps:
+        sim.run(min(block, args.steps - done), window=window)
+        done = int(sim.state.step)
+        d = sim.diagnostics()
+        # wake diagnostic: on-axis longitudinal field
+        ez = np.asarray(sim.state.fields.ez)[4, 4, :]
+        print(
+            f"step {d['step']:4d}  E_field={d['field_energy']:.3e}  E_kin={d['kinetic_energy']:.3e}"
+            f"  max|Ez_axis|={np.abs(ez).max():.3e}  sorts={sim.sorts} rebuilds={sim.rebuilds}"
+        )
 
     umax = float(jnp.max(jnp.linalg.norm(sim.state.particles.u, axis=-1)))
     print(f"\nmax particle momentum u/mc = {umax:.3f} (wake acceleration signature)")

@@ -26,7 +26,15 @@ from repro.core.deposition import (  # noqa: F401
 from repro.core.gather import gather_matrix, gather_scatter  # noqa: F401
 from repro.core.gpma import GPMAStats, gpma_update  # noqa: F401
 from repro.core.matrix_scatter import matrix_scatter_add, scatter_add_ref  # noqa: F401
-from repro.core.resort_policy import ResortPolicy, SortPolicyConfig  # noqa: F401
+from repro.core.resort_policy import (  # noqa: F401
+    REASON_NAMES,
+    ResortPolicy,
+    SortPolicyConfig,
+    SortPolicyState,
+    policy_init,
+    policy_reset,
+    policy_update,
+)
 from repro.core.rhocell import fold_guards, reduce_rhocell, reduce_rhocell_separable, unfold_guards  # noqa: F401
 from repro.core.shape_functions import (  # noqa: F401
     bspline,

@@ -1,8 +1,24 @@
 """Adaptive global re-sorting policy (paper §4.4, Table 4 parameters).
 
-Host-side driver logic: consumes GPMAStats scalars from the jitted step and
-decides when to run the full counting sort (GlobalSortParticlesByCell). The
-five prioritized strategies are implemented verbatim:
+Two implementations share ``SortPolicyConfig`` (thresholds mirror the
+paper's Table 4):
+
+* ``ResortPolicy`` — the host-side driver used by the legacy per-step loop
+  (``Simulation.run`` without a window). It consumes GPMAStats scalars that
+  were already synced to the host and keeps the paper's wall-clock
+  performance trigger (particles/sec EMA vs post-sort baseline).
+
+* ``policy_init`` / ``policy_update`` / ``policy_reset`` — pure,
+  jit-compatible functions over a registered-pytree ``SortPolicyState``,
+  evaluated *inside* the compiled scan window (``pic_run_window``) so the
+  sort decision never forces a device→host sync. Wall-clock time does not
+  exist in-graph, so the performance trigger is replaced by an on-device
+  proxy: an EMA of ``1 / (1 + moved_fraction)``, which degrades exactly when
+  GPMA churn (and hence memory incoherence) grows — the quantity the
+  wall-clock trigger was indirectly measuring.
+
+The five prioritized strategies are evaluated in the same order on both
+paths:
 
   1. Minimum interval   — never sort within `min_sort_interval` steps.
   2. Fixed interval     — always sort every `sort_interval` steps.
@@ -12,19 +28,28 @@ five prioritized strategies are implemented verbatim:
                           [`sort_trigger_empty_ratio`, `sort_trigger_full_ratio`]
                           band (too few gaps -> imminent overflow; too many ->
                           fragmented, wasted bandwidth).
-  5. Performance        — (optional) sort when the step-time EMA degrades
-                          below `sort_trigger_perf_degrad` x baseline.
+  5. Performance        — (optional) sort when the perf EMA (wall-clock on
+                          the host path, moved-fraction proxy on the device
+                          path) degrades below `sort_trigger_perf_degrad`
+                          x baseline.
 
-Defaults mirror the paper's Table 4.
+With the performance trigger disabled the two paths make bit-identical
+decisions (see tests/test_sim_loop.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(frozen=True)
 class SortPolicyConfig:
+    """Paper Table 4 thresholds. Frozen (hashable) so it can ride along as a
+    static argument of the jitted scan window."""
+
     sort_interval: int = 50
     min_sort_interval: int = 10
     sort_trigger_rebuild_count: int = 100
@@ -34,8 +59,154 @@ class SortPolicyConfig:
     sort_trigger_perf_degrad: float = 0.80
 
 
-@dataclasses.dataclass
+# Reason codes shared by both paths (device path reports the int32 code;
+# REASON_NAMES maps it back to the host-path reason strings).
+REASON_NONE = 0
+REASON_OVERFLOW = 1
+REASON_MIN_INTERVAL = 2
+REASON_FIXED_INTERVAL = 3
+REASON_REBUILD_COUNT = 4
+REASON_EMPTY_LOW = 5
+REASON_EMPTY_HIGH = 6
+REASON_PERF = 7
+
+REASON_NAMES = (
+    "no_trigger",
+    "overflow (mandatory rebuild)",
+    "min_interval",
+    "fixed_interval",
+    "rebuild_count",
+    "empty_ratio_low",
+    "empty_ratio_high",
+    "perf_degradation",
+)
+
+_EMA_DECAY = 0.8   # same smoothing as the host path
+_UNSET = -1.0      # sentinel for "no baseline/EMA seeded yet" (proxy is > 0)
+
+
+# ---------------------------------------------------------------------------
+# Device path: pure functions over a registered pytree, usable under jit/scan.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class SortPolicyState:
+    """In-graph policy counters (ShouldPerformGlobalSort state)."""
+
+    steps_since_sort: jax.Array    # int32
+    rebuilds_since_sort: jax.Array  # int32
+    baseline_proxy: jax.Array      # float32, _UNSET until seeded post-sort
+    proxy_ema: jax.Array           # float32, _UNSET until seeded post-sort
+
+
+def policy_init() -> SortPolicyState:
+    return SortPolicyState(
+        steps_since_sort=jnp.int32(0),
+        rebuilds_since_sort=jnp.int32(0),
+        baseline_proxy=jnp.float32(_UNSET),
+        proxy_ema=jnp.float32(_UNSET),
+    )
+
+
+def policy_reset(_state: SortPolicyState | None = None) -> SortPolicyState:
+    """ResetRankSortCounters, device flavor. Counters AND both perf seeds are
+    cleared together: the first post-sort step re-seeds baseline and EMA from
+    the same observation (see ResortPolicy.reset for why mixing a fresh
+    baseline with a stale EMA is wrong)."""
+    return policy_init()
+
+
+def perf_proxy(n_moved: jax.Array, n_alive: jax.Array) -> jax.Array:
+    """Device stand-in for particles/sec: 1 / (1 + moved_fraction).
+
+    Monotonically decreasing in the fraction of particles that changed cell
+    this step — the driver of GPMA churn, fragmentation, and (on real
+    hardware) gather/scatter incoherence. Equals 1.0 for a frozen plasma and
+    0.5 when every particle moved.
+    """
+    moved = n_moved.astype(jnp.float32)
+    alive = jnp.maximum(n_alive, 1).astype(jnp.float32)
+    return 1.0 / (1.0 + moved / alive)
+
+
+def policy_update(
+    state: SortPolicyState,
+    config: SortPolicyConfig,
+    *,
+    n_moved: jax.Array,
+    n_alive: jax.Array,
+    n_empty: jax.Array,
+    n_slots: int,
+) -> tuple[jax.Array, jax.Array, SortPolicyState]:
+    """record_step + should_sort fused into one traced evaluation.
+
+    Returns ``(do_sort, reason_code, recorded_state)``. ``recorded_state`` is
+    the state *as if no sort happens*; when the caller actually sorts (either
+    because ``do_sort`` or a mandatory overflow rebuild) it must swap in
+    ``policy_reset()`` instead — mirroring the host driver, where
+    ``record_step`` precedes ``should_sort`` and ``reset`` overrides both.
+
+    Strategy 3 (rebuild count) is evaluated for parity with the host path
+    but is structurally inert in this adaptation on BOTH paths: a GPMA
+    overflow rebuild *is* a global sort here (bin-borrowing was replaced by
+    rebuild-on-overflow), so the counter resets before it can accumulate.
+    """
+    steps = state.steps_since_sort + jnp.int32(1)
+    rebuilds = state.rebuilds_since_sort
+
+    proxy = perf_proxy(n_moved, n_alive)
+    ema = jnp.where(
+        state.proxy_ema > 0.0,
+        _EMA_DECAY * state.proxy_ema + (1.0 - _EMA_DECAY) * proxy,
+        proxy,
+    )
+    baseline = jnp.where(state.baseline_proxy > 0.0, state.baseline_proxy, proxy)
+    empty_ratio = n_empty.astype(jnp.float32) / jnp.float32(max(int(n_slots), 1))
+
+    trig_fixed = steps >= config.sort_interval
+    trig_rebuild = rebuilds >= config.sort_trigger_rebuild_count
+    trig_lo = empty_ratio < config.sort_trigger_empty_ratio
+    trig_hi = empty_ratio > config.sort_trigger_full_ratio
+    trig_perf = (
+        jnp.bool_(config.sort_trigger_perf_enable)
+        & (ema < config.sort_trigger_perf_degrad * baseline)
+    )
+
+    # first matching trigger, in the host path's priority order
+    cascade = jnp.where(
+        trig_fixed, REASON_FIXED_INTERVAL,
+        jnp.where(
+            trig_rebuild, REASON_REBUILD_COUNT,
+            jnp.where(
+                trig_lo, REASON_EMPTY_LOW,
+                jnp.where(
+                    trig_hi, REASON_EMPTY_HIGH,
+                    jnp.where(trig_perf, REASON_PERF, REASON_NONE),
+                ),
+            ),
+        ),
+    ).astype(jnp.int32)
+
+    gate = steps >= config.min_sort_interval  # strategy 1 blocks everything
+    do_sort = gate & (cascade != REASON_NONE)
+    reason = jnp.where(gate, cascade, REASON_MIN_INTERVAL).astype(jnp.int32)
+
+    recorded = SortPolicyState(
+        steps_since_sort=steps,
+        rebuilds_since_sort=rebuilds,
+        baseline_proxy=baseline,
+        proxy_ema=ema,
+    )
+    return do_sort, reason, recorded
+
+
+# ---------------------------------------------------------------------------
+# Host path: the legacy per-step driver (wall-clock performance trigger).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HostPolicyState:
     steps_since_sort: int = 0
     rebuilds_since_sort: int = 0
     baseline_perf: float | None = None  # particles/sec right after a sort
@@ -47,7 +218,7 @@ class ResortPolicy:
 
     def __init__(self, config: SortPolicyConfig | None = None):
         self.config = config or SortPolicyConfig()
-        self.state = SortPolicyState()
+        self.state = HostPolicyState()
 
     def record_step(self, *, rebuilt: bool, perf: float | None = None) -> None:
         st = self.state
@@ -55,7 +226,7 @@ class ResortPolicy:
         if rebuilt:
             st.rebuilds_since_sort += 1
         if perf is not None:
-            st.perf_ema = perf if st.perf_ema is None else 0.8 * st.perf_ema + 0.2 * perf
+            st.perf_ema = perf if st.perf_ema is None else _EMA_DECAY * st.perf_ema + (1.0 - _EMA_DECAY) * perf
             if st.baseline_perf is None:
                 st.baseline_perf = perf
 
@@ -63,27 +234,34 @@ class ResortPolicy:
         """Returns (do_sort, reason). Overflow forces a sort (correctness)."""
         cfg, st = self.config, self.state
         if overflowed:
-            return True, "overflow (mandatory rebuild)"
+            return True, REASON_NAMES[REASON_OVERFLOW]
         if st.steps_since_sort < cfg.min_sort_interval:
-            return False, "min_interval"
+            return False, REASON_NAMES[REASON_MIN_INTERVAL]
         if st.steps_since_sort >= cfg.sort_interval:
-            return True, "fixed_interval"
+            return True, REASON_NAMES[REASON_FIXED_INTERVAL]
         if st.rebuilds_since_sort >= cfg.sort_trigger_rebuild_count:
-            return True, "rebuild_count"
+            return True, REASON_NAMES[REASON_REBUILD_COUNT]
         if empty_ratio < cfg.sort_trigger_empty_ratio:
-            return True, "empty_ratio_low"
+            return True, REASON_NAMES[REASON_EMPTY_LOW]
         if empty_ratio > cfg.sort_trigger_full_ratio:
-            return True, "empty_ratio_high"
+            return True, REASON_NAMES[REASON_EMPTY_HIGH]
         if (
             cfg.sort_trigger_perf_enable
             and st.baseline_perf is not None
             and st.perf_ema is not None
             and st.perf_ema < cfg.sort_trigger_perf_degrad * st.baseline_perf
         ):
-            return True, "perf_degradation"
-        return False, "no_trigger"
+            return True, REASON_NAMES[REASON_PERF]
+        return False, REASON_NAMES[REASON_NONE]
 
     def reset(self) -> None:
-        """ResetRankSortCounters: called right after a global sort."""
-        perf = self.state.perf_ema
-        self.state = SortPolicyState(baseline_perf=None, perf_ema=perf)
+        """ResetRankSortCounters: called right after a global sort.
+
+        Clears the counters AND both performance seeds. Keeping the stale
+        pre-sort ``perf_ema`` while nulling ``baseline_perf`` (the old
+        behaviour) made the first post-sort step the new baseline judged
+        against pre-sort smoothed performance — whenever the sort *helped*,
+        the EMA sat below the fresh baseline and the perf trigger fired
+        spuriously as soon as the minimum interval elapsed.
+        """
+        self.state = HostPolicyState()

@@ -27,7 +27,13 @@ def main() -> None:
     ap.add_argument("--deposition", choices=["scatter", "rhocell", "matrix", "matrix_unfused"], default="matrix")
     ap.add_argument("--sort", choices=["incremental", "rebuild", "global", "none"], default="incremental")
     ap.add_argument("--grid", type=int, nargs=3, default=None)
+    ap.add_argument(
+        "--window", type=int, default=16,
+        help="device-resident loop: steps per compiled scan window (one host "
+        "sync per window); 0 = legacy host-driven per-step loop",
+    )
     args = ap.parse_args()
+    window = args.window if args.window > 0 else None
 
     if args.workload == "uniform":
         shape = tuple(args.grid) if args.grid else (16, 16, 16)
@@ -48,11 +54,18 @@ def main() -> None:
         gather=gather, sort_mode=args.sort, capacity=max(16, 4 * args.ppc**3),
     )
     sim = Simulation(fields, parts, cfg)
-    print(f"{args.workload}: grid {grid.shape}, {parts.n} particles, order {args.order}, {args.deposition}/{args.sort}")
+    loop = f"device-resident scan (window={window})" if window else "host-driven per-step loop"
+    print(f"{args.workload}: grid {grid.shape}, {parts.n} particles, order {args.order}, {args.deposition}/{args.sort}, {loop}")
 
-    sim.run(2)
+    # warmup compiles exactly the window lengths the timed run will use
+    # (each distinct length is a separate static-shape compile)
+    if window:
+        for k in sorted({min(window, args.steps), args.steps % window} - {0}):
+            sim.run(k, window=window)
+    else:
+        sim.run(2)
     t0 = time.perf_counter()
-    sim.run(args.steps)
+    sim.run(args.steps, window=window)
     dt = time.perf_counter() - t0
     d = sim.diagnostics()
     n_alive = d["n_alive"]

@@ -5,4 +5,14 @@ from repro.pic.laser import LaserSpec, inject_laser  # noqa: F401
 from repro.pic.maxwell import maxwell_step, push_b, push_e  # noqa: F401
 from repro.pic.plasma import ParticleState, perturb_velocity, profiled_plasma, uniform_plasma  # noqa: F401
 from repro.pic.pusher import advance_positions, boris_push, lorentz_gamma, wrap_periodic  # noqa: F401
-from repro.pic.simulation import PICConfig, PICState, Simulation, global_sort, init_state, pic_step  # noqa: F401
+from repro.pic.simulation import (  # noqa: F401
+    PICConfig,
+    PICState,
+    Simulation,
+    global_sort,
+    global_sort_device,
+    init_state,
+    pic_run_window,
+    pic_step,
+    pic_step_donated,
+)

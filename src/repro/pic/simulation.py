@@ -7,10 +7,28 @@ Per step (jitted `pic_step`):
   4. deposition                       (scatter | rhocell | matrix)
   5. Maxwell field update             (Yee / CKC)
 
-The host-side `Simulation` driver wraps the jitted step with the paper's
-adaptive global re-sort policy (resort_policy): overflow -> mandatory
-rebuild; interval / rebuild-count / gap-ratio / perf triggers -> global
-counting sort INCLUDING the SoA attribute permutation (memory coherence).
+Two drivers wrap the step:
+
+* Legacy host driver (`Simulation.run` with ``window=None``): one jitted
+  step per Python iteration, the adaptive re-sort policy evaluated on the
+  host from synced GPMAStats scalars (plus a wall-clock perf trigger). This
+  costs several device→host syncs per step, which serializes dispatch.
+
+* Device-resident windowed driver (`Simulation.run(..., window=K)` /
+  `pic_run_window`): a whole window of K steps runs as ONE compiled
+  `lax.scan` with donated buffers. The re-sort policy (core.resort_policy
+  device path), the mandatory overflow rebuild, and the global sort itself
+  (`global_sort_device` under `lax.cond`) all happen in-graph; per-step
+  diagnostics accumulate on device, and the host fetches exactly one bundle
+  per window. Capacity growth is the only host escape hatch: a persistent
+  post-sort overflow halts the remaining steps of the window (they become
+  no-ops), the host doubles the bin capacity and re-enters. See
+  docs/sim_loop.md.
+
+The host-side `Simulation` driver implements the paper's adaptive global
+re-sort policy (resort_policy): overflow -> mandatory rebuild; interval /
+rebuild-count / gap-ratio / perf triggers -> global counting sort INCLUDING
+the SoA attribute permutation (memory coherence).
 
 `sort_mode` gives the paper's ablation axes:
   "incremental"  FullOpt: GPMA + adaptive policy
@@ -28,8 +46,13 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import (
+    REASON_NAMES,
+    ResortPolicy,
+    SortPolicyConfig,
+    SortPolicyState,
     build_bins,
     cell_index,
     choose_capacity,
@@ -42,12 +65,15 @@ from repro.core import (
     gather_scatter,
     gpma_update,
     max_guard,
+    policy_init,
+    policy_reset,
+    policy_update,
     sort_permutation,
     unfold_guards,
 )
 from repro.core.binning import BinnedLayout
 from repro.core.gpma import GPMAStats
-from repro.core.resort_policy import ResortPolicy, SortPolicyConfig
+from repro.core.resort_policy import REASON_OVERFLOW
 from repro.pic.grid import B_STAGGER, E_STAGGER, FieldState, GridSpec
 from repro.pic.maxwell import maxwell_step
 from repro.pic.plasma import ParticleState
@@ -75,6 +101,10 @@ class PICConfig:
     @property
     def guard(self) -> int:
         return max_guard(self.order)
+
+    @property
+    def needs_bins(self) -> bool:
+        return self.deposition in ("matrix", "matrix_unfused") or self.gather == "matrix"
 
 
 @jax.tree_util.register_dataclass
@@ -150,8 +180,9 @@ def _deposit_current(pos, v, qw, layout, cells, config: PICConfig):
     return out
 
 
-@partial(jax.jit, static_argnames=("config",))
-def pic_step(state: PICState, config: PICConfig) -> tuple[PICState, GPMAStats]:
+def _pic_step(state: PICState, config: PICConfig) -> tuple[PICState, GPMAStats]:
+    """One simulation step (traceable; jitted as pic_step / pic_step_donated
+    and inlined into the scan window by pic_run_window)."""
     p = state.particles
     alive_f = p.alive.astype(p.pos.dtype)
 
@@ -196,21 +227,230 @@ def pic_step(state: PICState, config: PICConfig) -> tuple[PICState, GPMAStats]:
     return PICState(fields=fields, particles=particles, layout=layout, step=state.step + 1), stats
 
 
-def global_sort(state: PICState, config: PICConfig) -> tuple[PICState, int]:
-    """GlobalSortParticlesByCell: permute attributes + rebuild bins."""
+pic_step = partial(jax.jit, static_argnames=("config",))(_pic_step)
+
+# Same step with the input state's buffers donated: particle and field arrays
+# update in place instead of being copied every step. Used by the Simulation
+# drivers, which always replace their state reference with the result. Do NOT
+# use this variant when re-invoking on a saved state (benchmarks that time
+# the same state repeatedly must use `pic_step`).
+pic_step_donated = partial(jax.jit, static_argnames=("config",), donate_argnums=(0,))(_pic_step)
+
+
+def global_sort_device(state: PICState, config: PICConfig) -> tuple[PICState, jax.Array]:
+    """GlobalSortParticlesByCell, traceable: permute attributes + rebuild
+    bins, returning overflow as a traced int32 scalar so the sort can run
+    inside jit / under `lax.cond` in the scan window."""
     cells = cell_index(state.particles.pos, config.grid.shape)
     perm = sort_permutation(cells, state.particles.alive)
     particles = jax.tree.map(lambda a: a[perm], state.particles)
     cells = cell_index(particles.pos, config.grid.shape)
     layout, overflow = build_bins(cells, particles.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
-    return dataclasses.replace(state, particles=particles, layout=layout), int(overflow)
+    return dataclasses.replace(state, particles=particles, layout=layout), overflow.astype(jnp.int32)
+
+
+def global_sort(state: PICState, config: PICConfig) -> tuple[PICState, int]:
+    """Host-facing wrapper around `global_sort_device` (syncs the overflow)."""
+    state, overflow = global_sort_device(state, config)
+    return state, int(overflow)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident windowed driver: K steps as one lax.scan, zero per-step
+# host syncs. The host fetches a single diagnostics bundle per window.
+# ---------------------------------------------------------------------------
+
+
+def _energies(state: PICState, config: PICConfig) -> tuple[jax.Array, jax.Array]:
+    """(field, kinetic) energy in float32 — the ONE definition shared by
+    host-side Simulation.diagnostics() and the in-graph window diagnostics,
+    so the two drivers report identical values."""
+    gamma = lorentz_gamma(state.particles.u)
+    alive_f = state.particles.alive.astype(jnp.float32)
+    kinetic = jnp.sum(
+        state.particles.w.astype(jnp.float32) * alive_f * config.mass * (gamma.astype(jnp.float32) - 1.0)
+    ).astype(jnp.float32)
+    field_e = state.fields.energy(config.grid.cell_volume).astype(jnp.float32)
+    return field_e, kinetic
+
+
+def _zeros_diag():
+    f = jnp.zeros((), jnp.float32)
+    i = jnp.zeros((), jnp.int32)
+    return {
+        "active": jnp.zeros((), bool),
+        "sorted": jnp.zeros((), bool),
+        "reason": i,
+        "n_moved": i,
+        "n_alive": i,
+        "field_energy": f,
+        "kinetic_energy": f,
+    }
+
+
+def _window_active_step(state, pstate, sorts, rebuilds, config: PICConfig,
+                        policy: SortPolicyConfig, with_energies: bool):
+    """One live step of the scan window: pic_step + in-graph sort decision +
+    conditional global sort, mirroring the legacy host driver's control flow
+    step for step (see Simulation.run)."""
+    n_slots = config.grid.n_cells * config.capacity
+    state, stats = _pic_step(state, config)
+
+    no_sort = lambda s: (s, jnp.zeros((), jnp.int32))
+    do_sort = jnp.zeros((), bool)
+    reason = jnp.zeros((), jnp.int32)
+    overflow_after = jnp.zeros((), jnp.int32)
+
+    if config.sort_mode == "incremental":
+        mandatory = (stats.n_overflow > 0) if config.needs_bins else jnp.zeros((), bool)
+        do_pol, reason_pol, pstate_rec = policy_update(
+            pstate, policy,
+            n_moved=stats.n_moved, n_alive=stats.n_alive,
+            n_empty=stats.n_empty, n_slots=n_slots,
+        )
+        do_pol = do_pol & ~mandatory
+        do_sort = mandatory | do_pol
+        state, overflow_after = lax.cond(
+            do_sort, lambda s: global_sort_device(s, config), no_sort, state
+        )
+        # after a sort (mandatory or triggered) the counters reset; otherwise
+        # keep the recorded (post-record_step) state — exactly the host order
+        pstate = jax.tree.map(
+            lambda r, n: jnp.where(do_sort, r, n), policy_reset(), pstate_rec
+        )
+        sorts = sorts + do_pol.astype(jnp.int32)
+        rebuilds = rebuilds + mandatory.astype(jnp.int32)
+        reason = jnp.where(
+            mandatory, jnp.int32(REASON_OVERFLOW), reason_pol
+        ).astype(jnp.int32)
+    elif config.sort_mode == "global":
+        # per-step full sort including attribute permutation
+        state, overflow_after = global_sort_device(state, config)
+        do_sort = jnp.ones((), bool)
+    elif config.sort_mode == "rebuild":
+        # bins were rebuilt inside _pic_step; overflow -> capacity too small
+        overflow_after = stats.n_overflow.astype(jnp.int32)
+    # "none": nothing to decide
+
+    if with_energies:
+        field_e, kinetic = _energies(state, config)
+    else:
+        kinetic = jnp.zeros((), jnp.float32)
+        field_e = jnp.zeros((), jnp.float32)
+
+    diag = {
+        "active": jnp.ones((), bool),
+        "sorted": do_sort,
+        "reason": reason,
+        "n_moved": stats.n_moved.astype(jnp.int32),
+        "n_alive": stats.n_alive.astype(jnp.int32),
+        "field_energy": field_e,
+        "kinetic_energy": kinetic,
+    }
+    # persistent overflow (a bin fuller than `capacity` even after the sort)
+    # halts the window: the remaining steps become no-ops and the host grows
+    # the bin capacity — the single host escape hatch of the windowed driver
+    halted = overflow_after > 0
+    return state, pstate, halted, sorts, rebuilds, diag
+
+
+def _pic_run_window_impl(state, pstate, config: PICConfig, policy: SortPolicyConfig,
+                         n_steps: int, with_energies: bool):
+    def body(carry, _):
+        state, pstate, halted, sorts, rebuilds = carry
+        # The step always executes and its outputs are MASKED once the window
+        # is halted, rather than branching with lax.cond: on the CPU backend a
+        # conditional whose branch contains the whole step body costs ~2x the
+        # step itself, while the masking selects are nearly free. Post-halt
+        # steps therefore burn (discarded) FLOPs, but a halt ends the window
+        # at most once per capacity growth — a rare event.
+        new_state, new_pstate, halted_step, new_sorts, new_rebuilds, diag = _window_active_step(
+            state, pstate, sorts, rebuilds, config, policy, with_energies
+        )
+        keep = lambda old, new: jax.tree.map(lambda o, n: jnp.where(halted, o, n), old, new)
+        carry = (
+            keep(state, new_state),
+            keep(pstate, new_pstate),
+            halted | halted_step,
+            jnp.where(halted, sorts, new_sorts),
+            jnp.where(halted, rebuilds, new_rebuilds),
+        )
+        return carry, keep(_zeros_diag(), diag)
+
+    zero = jnp.zeros((), jnp.int32)
+    carry0 = (state, pstate, jnp.zeros((), bool), zero, zero)
+    (state, pstate, halted, sorts, rebuilds), per_step = lax.scan(
+        body, carry0, None, length=n_steps
+    )
+    bundle = {
+        "n_done": jnp.sum(per_step["active"]).astype(jnp.int32),
+        "n_sorts": sorts,
+        "n_rebuilds": rebuilds,
+        "overflow_pending": halted,
+        "per_step": per_step,
+    }
+    return state, pstate, bundle
+
+
+_WINDOW_STATICS = ("config", "policy", "n_steps", "with_energies")
+_pic_run_window_jit = partial(jax.jit, static_argnames=_WINDOW_STATICS)(_pic_run_window_impl)
+_pic_run_window_donated = partial(
+    jax.jit, static_argnames=_WINDOW_STATICS, donate_argnums=(0, 1)
+)(_pic_run_window_impl)
+
+# Module-level alias so tests can monkeypatch and count the (single) per-
+# window device->host transfer performed by the windowed driver.
+_fetch_bundle = jax.device_get
+
+
+def pic_run_window(
+    state: PICState,
+    policy_state: SortPolicyState,
+    config: PICConfig,
+    n_steps: int,
+    *,
+    policy: SortPolicyConfig | None = None,
+    with_energies: bool = True,
+    donate: bool = True,
+):
+    """Run a window of `n_steps` PIC steps as ONE compiled `lax.scan` with
+    zero per-step host syncs: step, in-graph re-sort policy, conditional
+    global sort, and per-step diagnostics all stay on device.
+
+    Returns ``(state, policy_state, bundle)`` — all device-resident. The
+    bundle holds window scalars (``n_done``, ``n_sorts``, ``n_rebuilds``,
+    ``overflow_pending``) plus per-step arrays (``active``, ``sorted``,
+    ``reason`` — see core.resort_policy.REASON_NAMES — ``n_moved``,
+    ``n_alive``, and, when `with_energies`, ``field_energy`` /
+    ``kinetic_energy``); fetch it with a single `jax.device_get`.
+
+    If a global sort cannot absorb an overflowing bin (capacity too small),
+    the remaining steps of the window become no-ops and
+    ``bundle["overflow_pending"]`` is set: the host must grow the capacity
+    and re-enter for the ``n_steps - n_done`` remaining steps.
+
+    With ``donate=True`` (default) the input state and policy-state buffers
+    are donated to the window — particle and field arrays update in place.
+    Keep a copy (or pass ``donate=False``) if you need the pre-window state
+    afterwards.
+    """
+    fn = _pic_run_window_donated if donate else _pic_run_window_jit
+    return fn(state, policy_state, config, policy or SortPolicyConfig(), n_steps, with_energies)
 
 
 class Simulation:
-    """Host driver: jitted step + adaptive resort policy + diagnostics."""
+    """Host driver: jitted step + adaptive resort policy + diagnostics.
+
+    ``run(n, window=K)`` uses the device-resident windowed driver (one
+    compiled K-step scan + one fetched bundle per window); ``window=None``
+    keeps the legacy per-step host loop.
+    """
 
     def __init__(self, fields: FieldState, particles: ParticleState, config: PICConfig, policy: SortPolicyConfig | None = None):
         self.config = config
+        # private copies: the drivers donate state buffers to the step, which
+        # would otherwise invalidate the caller's field arrays
+        fields = jax.tree.map(lambda a: jnp.asarray(a).copy(), fields)
         state, overflow = init_state(fields, particles, config)
         if overflow:
             self.config = dataclasses.replace(config, capacity=choose_capacity(config.capacity * 2 // 3 * 2))
@@ -218,15 +458,36 @@ class Simulation:
             assert overflow == 0, "initial binning overflow after capacity growth"
         self.state = state
         self.policy = ResortPolicy(policy)
+        self.policy_state = policy_init()
         self.sorts = 0
         self.rebuilds = 0
         self.history: list[dict] = []
+        self._host_step = 0  # host mirror of state.step (windowed path syncs nothing)
 
-    def run(self, n_steps: int, *, diagnostics_every: int = 0) -> None:
-        needs_bins = self.config.deposition in ("matrix", "matrix_unfused") or self.config.gather == "matrix"
+    def run(self, n_steps: int, *, diagnostics_every: int = 0, window: int | None = None) -> None:
+        """Advance `n_steps`. ``window=K`` uses the device-resident scan
+        driver; ``window=None`` the legacy host loop.
+
+        The two drivers keep INDEPENDENT policy counters (host
+        ``self.policy`` vs device ``self.policy_state``) — pick one driver
+        per Simulation. Switching mid-run restarts the sort cadence (both
+        policies behave as if freshly reset); physics is unaffected.
+        """
+        if window is None:
+            self._run_host(n_steps, diagnostics_every)
+        else:
+            self._run_windowed(n_steps, diagnostics_every, window)
+
+    # ------------------------------------------------------------------
+    # Legacy host-driven loop: one jitted step per Python iteration, policy
+    # evaluated on host (several device->host syncs per step).
+    # ------------------------------------------------------------------
+    def _run_host(self, n_steps: int, diagnostics_every: int) -> None:
+        needs_bins = self.config.needs_bins
         for _ in range(n_steps):
             t0 = time.perf_counter()
-            self.state, stats = pic_step(self.state, self.config)
+            self.state, stats = pic_step_donated(self.state, self.config)
+            self._host_step += 1
             if self.config.sort_mode == "incremental":
                 n_overflow = int(stats.n_overflow)
                 n_empty = int(stats.n_empty)
@@ -256,19 +517,73 @@ class Simulation:
                     self._grow_capacity()
             elif self.config.sort_mode == "rebuild" and int(stats.n_overflow) > 0:
                 self._grow_capacity()
-            if diagnostics_every and int(self.state.step) % diagnostics_every == 0:
+            # gate on the host mirror of state.step — fetching the device
+            # counter would cost a blocking sync on every step, not just the
+            # recorded ones
+            if diagnostics_every and self._host_step % diagnostics_every == 0:
                 self.history.append(self.diagnostics())
 
+    # ------------------------------------------------------------------
+    # Device-resident windowed loop: ONE host sync (the fetched bundle) per
+    # K-step window; capacity growth is the only other host intervention.
+    # ------------------------------------------------------------------
+    def _run_windowed(self, n_steps: int, diagnostics_every: int, window: int) -> None:
+        if window <= 0:
+            raise ValueError(f"window must be positive, got {window}")
+        done = 0
+        while done < n_steps:
+            k = min(window, n_steps - done)
+            state, pstate, bundle = pic_run_window(
+                self.state, self.policy_state, self.config, k,
+                policy=self.policy.config,
+                with_energies=bool(diagnostics_every),
+            )
+            self.state, self.policy_state = state, pstate
+            host = _fetch_bundle(bundle)  # the single device->host sync of this window
+            n_done = int(host["n_done"])
+            self.sorts += int(host["n_sorts"])
+            self.rebuilds += int(host["n_rebuilds"])
+            if diagnostics_every:
+                per = host["per_step"]
+                for i in range(n_done):
+                    step_abs = self._host_step + i + 1
+                    if step_abs % diagnostics_every == 0:
+                        fe = float(per["field_energy"][i])
+                        ke = float(per["kinetic_energy"][i])
+                        self.history.append({
+                            "step": step_abs,
+                            "field_energy": fe,
+                            "kinetic_energy": ke,
+                            "total_energy": fe + ke,
+                            "n_alive": int(per["n_alive"][i]),
+                        })
+            self._host_step += n_done
+            done += n_done
+            if bool(host["overflow_pending"]):
+                self._grow_capacity()
+            elif n_done < k:
+                raise RuntimeError("windowed driver made no progress without overflow")
+
     def _grow_capacity(self) -> None:
-        self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
-        self.state, overflow = init_state(self.state.fields, self.state.particles, self.config)
-        assert overflow == 0, "binning overflow persists after capacity doubling"
+        """Double the bin capacity and re-bin the CURRENT state in place.
+
+        Preserves the evolved fields, particle attributes, and step counter —
+        the old implementation re-ran `init_state`, which zeroed `state.step`
+        and replaced the fields mid-run (regression: tests/test_sim_loop.py).
+        """
+        n = self.state.particles.n
+        while True:
+            self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
+            self.state, overflow = global_sort(self.state, self.config)
+            if overflow == 0:
+                return
+            assert self.config.capacity <= 2 * max(n, 1), "binning overflow persists with capacity > n_particles"
 
     def diagnostics(self) -> dict:
         s = self.state
-        gamma = lorentz_gamma(s.particles.u)
-        kinetic = float(jnp.sum(s.particles.w * s.particles.alive * self.config.mass * (gamma - 1.0)))
-        em = float(s.fields.energy(self.config.grid.cell_volume))
+        field_e, kinetic_e = _energies(s, self.config)
+        kinetic = float(kinetic_e)
+        em = float(field_e)
         return {
             "step": int(s.step),
             "field_energy": em,
@@ -276,3 +591,8 @@ class Simulation:
             "total_energy": em + kinetic,
             "n_alive": int(jnp.sum(s.particles.alive)),
         }
+
+    def sort_reason_name(self, code: int) -> str:
+        """Map a per-step `reason` code from the window bundle to the host
+        policy's reason string."""
+        return REASON_NAMES[code]

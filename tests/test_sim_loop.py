@@ -1,0 +1,273 @@
+"""Device-resident windowed driver (pic_run_window) vs legacy host driver:
+bit-equivalence of sort decisions and final state, single-sync-per-window,
+capacity-growth state preservation, and host/device policy parity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.pic.simulation as simulation
+from repro.core import (
+    REASON_NAMES,
+    ResortPolicy,
+    SortPolicyConfig,
+    policy_init,
+    policy_reset,
+    policy_update,
+)
+from repro.core.resort_policy import REASON_PERF
+from repro.pic import (
+    FieldState,
+    GridSpec,
+    LaserSpec,
+    PICConfig,
+    Simulation,
+    inject_laser,
+    pic_run_window,
+    profiled_plasma,
+    uniform_plasma,
+)
+
+# The wall-clock perf trigger is inherently non-deterministic (and is
+# replaced by the moved-fraction proxy on the device path), so equivalence
+# tests disable it; every other trigger is evaluated identically in-graph.
+POLICY = SortPolicyConfig(sort_interval=20, sort_trigger_perf_enable=False)
+
+
+def _uniform_sim(*, capacity=16, u_thermal=0.05, shape=(8, 8, 8), order=2):
+    grid = GridSpec(shape=shape)
+    parts = uniform_plasma(
+        jax.random.PRNGKey(0), grid, ppc_each_dim=(2, 2, 2), density=1.0, u_thermal=u_thermal
+    )
+    cfg = PICConfig(
+        grid=grid, dt=0.2, order=order, deposition="matrix", gather="matrix",
+        sort_mode="incremental", capacity=capacity,
+    )
+    return Simulation(FieldState.zeros(grid.shape), parts, cfg, policy=POLICY)
+
+
+def _lwfa_sim(*, capacity=24):
+    grid = GridSpec(shape=(6, 6, 32))
+    density = lambda z: jnp.where(z > 10.0, 1.0, 0.0)
+    parts = profiled_plasma(
+        jax.random.PRNGKey(0), grid, ppc_each_dim=(2, 2, 2), density_fn=density, u_thermal=0.01
+    )
+    laser = LaserSpec(a0=1.5, wavelength=8.0, waist=4.0, duration=6.0, z_center=5.0)
+    fields = inject_laser(FieldState.zeros(grid.shape), grid, laser)
+    cfg = PICConfig(
+        grid=grid, dt=0.3, order=1, deposition="matrix", gather="matrix",
+        sort_mode="incremental", capacity=capacity,
+    )
+    return Simulation(fields, parts, cfg, policy=POLICY)
+
+
+def _assert_states_equal(a: Simulation, b: Simulation):
+    assert int(a.state.step) == int(b.state.step)
+    assert a.config.capacity == b.config.capacity
+    for name in ("ex", "ey", "ez", "bx", "by", "bz"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state.fields, name)),
+            np.asarray(getattr(b.state.fields, name)),
+            err_msg=f"field {name} diverged",
+        )
+    for name in ("pos", "u", "w", "alive"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state.particles, name)),
+            np.asarray(getattr(b.state.particles, name)),
+            err_msg=f"particle attr {name} diverged",
+        )
+    np.testing.assert_array_equal(np.asarray(a.state.layout.slots), np.asarray(b.state.layout.slots))
+
+
+@pytest.mark.parametrize("window", [8, 50])
+def test_windowed_matches_legacy_uniform(window):
+    """50 steps on the uniform workload: same sort decisions, same final
+    state, bit for bit — including an uneven final window (window=8)."""
+    host = _uniform_sim()
+    wind = _uniform_sim()
+    host.run(50, diagnostics_every=10)
+    wind.run(50, window=window, diagnostics_every=10)
+    assert (host.sorts, host.rebuilds) == (wind.sorts, wind.rebuilds)
+    assert host.sorts + host.rebuilds > 0, "workload never sorted — test is vacuous"
+    _assert_states_equal(host, wind)
+    # on-device diagnostics match the host-computed ones
+    assert [d["step"] for d in host.history] == [d["step"] for d in wind.history]
+    for dh, dw in zip(host.history, wind.history):
+        assert dh["n_alive"] == dw["n_alive"]
+        np.testing.assert_allclose(dh["field_energy"], dw["field_energy"], rtol=2e-6)
+        np.testing.assert_allclose(dh["kinetic_energy"], dw["kinetic_energy"], rtol=2e-6)
+
+
+def test_windowed_matches_legacy_lwfa():
+    """50 steps of the LWFA workload (laser + density profile, dead vacuum
+    particles, strong migration): windowed == legacy bit for bit."""
+    host = _lwfa_sim()
+    wind = _lwfa_sim()
+    host.run(50)
+    wind.run(50, window=10)
+    assert (host.sorts, host.rebuilds) == (wind.sorts, wind.rebuilds)
+    _assert_states_equal(host, wind)
+
+
+def test_windowed_capacity_growth_matches_legacy():
+    """Forced overflow: a hot plasma with capacity == initial ppc must grow
+    capacity mid-run identically on both drivers (the windowed driver halts
+    the window, the host grows, and the run resumes)."""
+    host = _uniform_sim(capacity=8, u_thermal=0.4, shape=(6, 6, 6), order=1)
+    wind = _uniform_sim(capacity=8, u_thermal=0.4, shape=(6, 6, 6), order=1)
+    host.run(50)
+    wind.run(50, window=7)
+    assert host.config.capacity > 8, "capacity never grew — overflow path not exercised"
+    assert host.rebuilds > 0
+    _assert_states_equal(host, wind)
+    assert (host.sorts, host.rebuilds) == (wind.sorts, wind.rebuilds)
+
+
+def test_grow_capacity_preserves_fields_and_step():
+    """Regression: _grow_capacity used to re-run init_state, resetting
+    state.step to 0 and discarding the evolved fields mid-run."""
+    sim = _uniform_sim()
+    sim.run(7)
+    fields_before = jax.device_get(sim.state.fields)
+    pos_before = np.asarray(sim.state.particles.pos)
+    step_before = int(sim.state.step)
+    cap_before = sim.config.capacity
+
+    sim._grow_capacity()
+
+    assert sim.config.capacity == 2 * cap_before
+    assert int(sim.state.step) == step_before == 7
+    for name in ("ex", "ey", "ez", "bx", "by", "bz"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sim.state.fields, name)),
+            np.asarray(getattr(fields_before, name)),
+            err_msg=f"field {name} not preserved across capacity growth",
+        )
+    # particles survive as a set (growth re-sorts, i.e. permutes, them)
+    pos_after = np.asarray(sim.state.particles.pos)
+    order_b = np.lexsort(pos_before.T)
+    order_a = np.lexsort(pos_after.T)
+    np.testing.assert_array_equal(pos_before[order_b], pos_after[order_a])
+    # layout is consistent at the new capacity
+    assert sim.state.layout.capacity == sim.config.capacity
+    sim.run(3)  # still steps fine
+    assert int(sim.state.step) == 10
+
+
+def test_windowed_single_sync_per_window(monkeypatch):
+    """The windowed driver performs exactly ONE device->host fetch per
+    window: the bundle. 40 steps at window=10 -> 4 fetches."""
+    calls = []
+    real_fetch = simulation._fetch_bundle
+
+    def counting_fetch(x):
+        calls.append(1)
+        return real_fetch(x)
+
+    monkeypatch.setattr(simulation, "_fetch_bundle", counting_fetch)
+    sim = _uniform_sim(capacity=32, u_thermal=0.02)  # headroom: no growth halts
+    sim.run(40, window=10)
+    assert sim.config.capacity == 32, "capacity grew — window count not comparable"
+    assert len(calls) == 4
+    assert int(sim.state.step) == 40
+
+
+def test_pic_run_window_direct():
+    """Raw pic_run_window: device-resident results, complete bundle."""
+    sim = _uniform_sim()
+    state, pstate, bundle = pic_run_window(
+        sim.state, sim.policy_state, sim.config, 6, policy=POLICY, donate=False
+    )
+    host = jax.device_get(bundle)
+    assert int(host["n_done"]) == 6
+    assert host["per_step"]["active"].all()
+    assert host["per_step"]["field_energy"].shape == (6,)
+    assert not bool(host["overflow_pending"])
+    assert int(state.step) == 6
+    # reason codes are valid indices into the shared reason-name table
+    assert all(0 <= int(r) < len(REASON_NAMES) for r in host["per_step"]["reason"])
+
+
+# ---------------------------------------------------------------------------
+# Policy unit tests: host reset bugfix + host/device decision parity.
+# ---------------------------------------------------------------------------
+
+def test_resort_policy_reset_reseeds_baseline_and_ema():
+    """Regression: reset() kept the stale pre-sort perf EMA while clearing
+    the baseline, so the first post-sort step became a fresh baseline judged
+    against old smoothed perf — a spurious perf trigger whenever the sort
+    helped. Both must re-seed together."""
+    pol = ResortPolicy(SortPolicyConfig(min_sort_interval=2))
+    for _ in range(8):
+        pol.record_step(rebuilt=False, perf=100.0)
+    pol.reset()
+    assert pol.state.perf_ema is None and pol.state.baseline_perf is None
+    pol.record_step(rebuilt=False, perf=500.0)
+    assert pol.state.baseline_perf == 500.0 and pol.state.perf_ema == 500.0
+    # post-sort perf improved and stays flat: the perf trigger must NOT fire
+    for _ in range(10):
+        pol.record_step(rebuilt=False, perf=500.0)
+    do, reason = pol.should_sort(empty_ratio=0.5)
+    assert not do, f"spurious post-reset trigger: {reason}"
+
+
+def test_device_policy_matches_host_decisions():
+    """With the perf trigger disabled, the in-graph policy makes exactly the
+    host policy's decisions (same triggers, same priority order, same reason)
+    over a randomized 80-step trajectory including post-sort resets."""
+    cfg = SortPolicyConfig(
+        sort_interval=17, min_sort_interval=5,
+        sort_trigger_empty_ratio=0.15, sort_trigger_full_ratio=0.85,
+        sort_trigger_perf_enable=False,
+    )
+    host = ResortPolicy(cfg)
+    pstate = policy_init()
+    rng = np.random.default_rng(42)
+    n_slots = 997
+    fired = set()
+    for _ in range(80):
+        n_empty = int(rng.integers(0, n_slots + 1))
+        n_moved = int(rng.integers(0, 400))
+        do_d, reason_d, recorded = policy_update(
+            pstate, cfg,
+            n_moved=jnp.int32(n_moved), n_alive=jnp.int32(500),
+            n_empty=jnp.int32(n_empty), n_slots=n_slots,
+        )
+        host.record_step(rebuilt=False)
+        do_h, reason_h = host.should_sort(empty_ratio=n_empty / n_slots)
+        assert bool(do_d) == do_h
+        assert REASON_NAMES[int(reason_d)] == reason_h
+        if do_h:
+            fired.add(reason_h)
+            host.reset()
+            pstate = policy_reset()
+        else:
+            pstate = recorded
+    assert len(fired) >= 2, f"trajectory too tame, only fired: {fired}"
+
+
+def test_device_policy_perf_proxy_trigger():
+    """The on-device perf proxy (moved-fraction EMA vs post-sort baseline)
+    fires once sustained migration degrades the proxy past the threshold."""
+    cfg = SortPolicyConfig(
+        sort_interval=10_000, min_sort_interval=5,
+        sort_trigger_empty_ratio=-1.0, sort_trigger_full_ratio=2.0,  # band disabled
+        sort_trigger_perf_enable=True, sort_trigger_perf_degrad=0.80,
+    )
+    pstate = policy_init()
+    kw = dict(n_alive=jnp.int32(1000), n_empty=jnp.int32(500), n_slots=1000)
+    # quiet step seeds baseline == EMA == 1.0
+    do, reason, pstate = policy_update(pstate, cfg, n_moved=jnp.int32(0), **kw)
+    assert not bool(do)
+    fired_at = None
+    for i in range(30):  # heavy migration: proxy -> 1/1.6 = 0.625 < 0.8
+        do, reason, pstate = policy_update(pstate, cfg, n_moved=jnp.int32(600), **kw)
+        if bool(do):
+            fired_at = i
+            break
+    assert fired_at is not None, "perf proxy trigger never fired"
+    assert int(reason) == REASON_PERF
+    assert fired_at + 2 >= cfg.min_sort_interval, "fired before min interval"
