@@ -1,0 +1,177 @@
+"""Distributed loop-driver sweep: windowed in-shard_map scan vs per-step
+host loop -> BENCH_dist.json.
+
+Times `DistSimulation.run` end-to-end on a forced 8-host-device 4x2 mesh:
+the per-step `make_dist_step` host loop (one stats sync + host policy
+evaluation per step) against the device-resident windowed driver
+(`make_dist_window`: the whole K-step scan inside ONE shard_map program,
+psum-reduced in-graph policy, one fetched bundle per window):
+
+    PYTHONPATH=src python -m benchmarks.run --only dist_sweep \
+        --dist-json BENCH_dist.json
+
+The forced host-device override must be set before jax initializes, so this
+module re-executes itself in a subprocess when the current process does not
+already have 8 devices. Both drivers run the identical shard_map step and
+identical policy thresholds (wall-clock trigger disabled); the measured
+delta is loop control flow: per-step dispatch of the sharded program +
+device->host stat syncs vs one compiled window.
+
+Schema: {"meta": {...}, "results": {"incremental": {host_us, device_us,
+speedup}}, "acceptance": {"dist_uniform_order2_speedup": x}}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+STEPS = 16
+WINDOW = 8
+ORDER = 2
+MESH_SHAPE = (4, 2)
+GRID = (8, 8, 16)
+PPC_EACH_DIM = (2, 2, 2)
+ROUNDS = 7
+_CHILD_ENV = "_REPRO_DIST_SWEEP_CHILD"
+
+
+def _needs_respawn() -> bool:
+    if os.environ.get(_CHILD_ENV) == "1":
+        return False
+    import jax
+
+    return jax.device_count() < MESH_SHAPE[0] * MESH_SHAPE[1]
+
+
+def _respawn(json_path: str | None) -> None:
+    n = MESH_SHAPE[0] * MESH_SHAPE[1]
+    env = dict(os.environ)
+    env[_CHILD_ENV] = "1"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n} " + env.get("XLA_FLAGS", "")
+    cmd = [sys.executable, "-m", "benchmarks.dist_sweep"]
+    if json_path:
+        cmd += ["--json", json_path]
+    res = subprocess.run(cmd, env=env)
+    if res.returncode != 0:
+        raise RuntimeError(f"dist_sweep subprocess failed with code {res.returncode}")
+
+
+def _make_sim():
+    import jax
+
+    from repro.core import SortPolicyConfig
+    from repro.pic import DistConfig, DistSimulation, FieldState, GridSpec, uniform_plasma
+
+    grid = GridSpec(shape=GRID)
+    parts = uniform_plasma(
+        jax.random.PRNGKey(0), grid, ppc_each_dim=PPC_EACH_DIM, density=1.0, u_thermal=0.05
+    )
+    local = GridSpec(shape=(GRID[0] // MESH_SHAPE[0], GRID[1] // MESH_SHAPE[1], GRID[2]), dx=grid.dx)
+    dcfg = DistConfig(local_grid=local, dt=grid.cfl_dt(0.5), order=ORDER, capacity=16)
+    policy = SortPolicyConfig(sort_trigger_perf_enable=False)
+    return DistSimulation(FieldState.zeros(grid.shape), parts, dcfg, mesh_shape=MESH_SHAPE, policy=policy)
+
+
+def _loop_thunk(sim, window: int | None):
+    from repro.core import ResortPolicy, policy_init
+
+    snap = (
+        tuple(f.copy() for f in sim.fields),
+        sim.pos.copy(), sim.u.copy(), sim.w.copy(), sim.alive.copy(),
+        sim.slots.copy(), sim.pslot.copy(),
+    )
+    cfg0 = sim.config
+    policy_cfg = sim.policy.config
+
+    def thunk():
+        # fresh run from the initial state each call (copies: the windowed
+        # program donates its buffers); the reset cost is identical for both
+        fields, pos, u, w, alive, slots, pslot = snap
+        sim.fields = tuple(f.copy() for f in fields)
+        sim.pos, sim.u, sim.w = pos.copy(), u.copy(), w.copy()
+        sim.alive, sim.slots, sim.pslot = alive.copy(), slots.copy(), pslot.copy()
+        sim.config = cfg0
+        sim.policy = ResortPolicy(policy_cfg)
+        sim.policy_state = policy_init()
+        sim.sorts = sim.rebuilds = 0
+        sim._host_step = 0
+        sim.history = []
+        sim.run(STEPS, window=window)
+        return sim.fields[0]
+
+    return thunk
+
+
+def collect(*, label: str = "dist_sweep") -> dict:
+    import jax
+
+    from benchmarks.common import emit, time_grid
+
+    sim = _make_sim()
+    row = time_grid({
+        "host": _loop_thunk(sim, None),
+        "device": _loop_thunk(sim, WINDOW),
+    }, rounds=ROUNDS)
+    speedup = row["host"] / row["device"]
+    emit(f"{label}/incremental/host", row["host"], f"{STEPS} steps per-step dist loop")
+    emit(f"{label}/incremental/device", row["device"], f"window={WINDOW} speedup={speedup:.2f}x")
+
+    n = GRID[0] * GRID[1] * GRID[2] * PPC_EACH_DIM[0] * PPC_EACH_DIM[1] * PPC_EACH_DIM[2]
+    return {
+        "meta": {
+            "grid": list(GRID),
+            "mesh": list(MESH_SHAPE),
+            "ppc_each_dim": list(PPC_EACH_DIM),
+            "n_particles": n,
+            "order": ORDER,
+            "steps": STEPS,
+            "window": WINDOW,
+            "backend": jax.default_backend(),
+            "n_devices": jax.device_count(),
+            "note": (
+                f"us per {STEPS}-step run, median over {ROUNDS} interleaved rounds "
+                "(time_grid: drift-robust on shared CPUs); host = per-step "
+                "make_dist_step loop with one stats sync + host policy per step, "
+                "device = make_dist_window (whole scan inside shard_map, psum-reduced "
+                "in-graph policy, one fetched bundle per window); identical step and "
+                "sort decisions (perf trigger disabled) on both. 8 emulated host "
+                "devices on one CPU: collective + dispatch costs are real, kernel "
+                "parallelism is not — treat the trajectory, not one run, as signal."
+            ),
+        },
+        "results": {
+            "incremental": {
+                "host_us": row["host"],
+                "device_us": row["device"],
+                "speedup": speedup,
+            },
+        },
+        "acceptance": {"dist_uniform_order2_speedup": speedup},
+    }
+
+
+def write_json(path: str) -> None:
+    if _needs_respawn():
+        _respawn(path)
+        return
+    payload = collect()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    if _needs_respawn():
+        _respawn(None)
+        return
+    collect()
+
+
+if __name__ == "__main__":
+    if "--json" in sys.argv:
+        write_json(sys.argv[sys.argv.index("--json") + 1])
+    else:
+        main()

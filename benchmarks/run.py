@@ -21,6 +21,7 @@ MODULES = [
     "table3_efficiency",  # Table 3: % of theoretical peak
     "deposition_sweep",   # per-kernel deposition regression (see --deposition-json)
     "sim_loop_sweep",     # host-driven vs device-resident loop (see --sim-json)
+    "dist_sweep",         # distributed windowed vs per-step loop (see --dist-json)
 ]
 
 
@@ -41,12 +42,20 @@ def main() -> None:
         help="also write the simulation-loop driver sweep (host-driven vs "
         "device-resident) as JSON (BENCH_sim.json)",
     )
+    ap.add_argument(
+        "--dist-json",
+        metavar="PATH",
+        default=None,
+        help="also write the distributed-loop driver sweep (per-step vs "
+        "windowed shard_map, forced 8 host devices) as JSON (BENCH_dist.json)",
+    )
     args = ap.parse_args()
 
     mods = args.only or MODULES
     for flag, value, mod in (
         ("--deposition-json", args.deposition_json, "deposition_sweep"),
         ("--sim-json", args.sim_json, "sim_loop_sweep"),
+        ("--dist-json", args.dist_json, "dist_sweep"),
     ):
         if value and mod not in mods:
             print(
@@ -67,6 +76,11 @@ def main() -> None:
                 from benchmarks.sim_loop_sweep import write_json
 
                 write_json(args.sim_json)
+                continue
+            if name == "dist_sweep" and args.dist_json:
+                from benchmarks.dist_sweep import write_json
+
+                write_json(args.dist_json)
                 continue
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()

@@ -3,19 +3,28 @@ gaussian pulse drives a wake in a density-profiled plasma; the dense bunches
 and strong migration exercise the GPMA sorter + adaptive resort policy.
 
     PYTHONPATH=src python examples/lwfa.py [--steps 60]
+    PYTHONPATH=src python examples/lwfa.py --mesh 4x2   # domain-decomposed
 """
 
 import argparse
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 sys.path.insert(0, "src")
 
+from repro.launch.devices import force_host_devices, peek_mesh_argv  # noqa: E402
+
+# --mesh SXxSY needs SX*SY devices, forced before jax import (jax-free peek)
+_MESH = peek_mesh_argv()
+if _MESH is not None:
+    force_host_devices(_MESH[0] * _MESH[1])
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
 from repro.pic import (  # noqa: E402
-    FieldState, GridSpec, LaserSpec, PICConfig, Simulation, inject_laser, profiled_plasma,
+    DistConfig, DistSimulation, FieldState, GridSpec, LaserSpec, PICConfig, Simulation,
+    inject_laser, profiled_plasma,
 )
 
 
@@ -24,6 +33,8 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--window", type=int, default=10,
                     help="steps per device-resident scan window; 0 = legacy host loop")
+    ap.add_argument("--mesh", type=str, default=None, metavar="SXxSY",
+                    help="run domain-decomposed on an SXxSY device mesh (DistSimulation)")
     args = ap.parse_args()
 
     grid = GridSpec(shape=(8, 8, 64))
@@ -34,10 +45,19 @@ def main() -> None:
     laser = LaserSpec(a0=2.0, wavelength=8.0, waist=6.0, duration=8.0, z_center=10.0)
     fields = inject_laser(FieldState.zeros(grid.shape), grid, laser)
 
-    cfg = PICConfig(grid=grid, dt=0.35, order=1, deposition="matrix", gather="matrix",
-                    sort_mode="incremental", capacity=48)
-    sim = Simulation(fields, particles, cfg)
-    print(f"LWFA: grid {grid.shape}, {int(jnp.sum(particles.alive))} plasma particles, a0={laser.a0}")
+    if _MESH is not None:
+        sx, sy = _MESH
+        local = GridSpec(shape=(grid.shape[0] // sx, grid.shape[1] // sy, grid.shape[2]), dx=grid.dx)
+        dcfg = DistConfig(local_grid=local, dt=0.35, order=1, capacity=48)
+        sim = DistSimulation(fields, particles, dcfg, mesh_shape=_MESH)
+        mesh_note = f", mesh {sx}x{sy}"
+    else:
+        cfg = PICConfig(grid=grid, dt=0.35, order=1, deposition="matrix", gather="matrix",
+                        sort_mode="incremental", capacity=48)
+        sim = Simulation(fields, particles, cfg)
+        mesh_note = ""
+    print(f"LWFA: grid {grid.shape}, {int(jnp.sum(particles.alive))} plasma particles, "
+          f"a0={laser.a0}{mesh_note}")
 
     # each print block runs as one device-resident scan window (no per-step
     # host syncs); the field snapshot is read at the window boundary
@@ -46,16 +66,18 @@ def main() -> None:
     done = 0
     while done < args.steps:
         sim.run(min(block, args.steps - done), window=window)
-        done = int(sim.state.step)
+        done += min(block, args.steps - done)
         d = sim.diagnostics()
         # wake diagnostic: on-axis longitudinal field
-        ez = np.asarray(sim.state.fields.ez)[4, 4, :]
+        ez_field = sim.state.fields.ez if _MESH is None else sim.fields_global().ez
+        ez = np.asarray(ez_field)[4, 4, :]
         print(
             f"step {d['step']:4d}  E_field={d['field_energy']:.3e}  E_kin={d['kinetic_energy']:.3e}"
             f"  max|Ez_axis|={np.abs(ez).max():.3e}  sorts={sim.sorts} rebuilds={sim.rebuilds}"
         )
 
-    umax = float(jnp.max(jnp.linalg.norm(sim.state.particles.u, axis=-1)))
+    u = sim.state.particles.u if _MESH is None else sim.particles_global().u
+    umax = float(jnp.max(jnp.linalg.norm(u, axis=-1)))
     print(f"\nmax particle momentum u/mc = {umax:.3f} (wake acceleration signature)")
 
 

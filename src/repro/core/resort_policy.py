@@ -137,9 +137,16 @@ def policy_update(
     n_moved: jax.Array,
     n_alive: jax.Array,
     n_empty: jax.Array,
-    n_slots: int,
+    n_slots,
 ) -> tuple[jax.Array, jax.Array, SortPolicyState]:
     """record_step + should_sort fused into one traced evaluation.
+
+    Consumed by BOTH device-resident windowed drivers: the single-device
+    scan (`pic_run_window`) feeds it raw GPMAStats, the distributed scan
+    (`pic/dist_simulation.py`) feeds it `lax.psum`-reduced stats — the
+    decision is then replicated across shards, so every shard takes the same
+    `lax.cond` sort branch. ``n_slots`` may be a Python int or a traced
+    array (the distributed total is shards x local cells x capacity).
 
     Returns ``(do_sort, reason_code, recorded_state)``. ``recorded_state`` is
     the state *as if no sort happens*; when the caller actually sorts (either
@@ -162,7 +169,9 @@ def policy_update(
         proxy,
     )
     baseline = jnp.where(state.baseline_proxy > 0.0, state.baseline_proxy, proxy)
-    empty_ratio = n_empty.astype(jnp.float32) / jnp.float32(max(int(n_slots), 1))
+    empty_ratio = n_empty.astype(jnp.float32) / jnp.maximum(
+        jnp.asarray(n_slots, jnp.float32), jnp.float32(1.0)
+    )
 
     trig_fixed = steps >= config.sort_interval
     trig_rebuild = rebuilds >= config.sort_trigger_rebuild_count

@@ -1,0 +1,40 @@
+"""Pre-jax-import device plumbing for --mesh launchers (jax-free on purpose:
+the host-platform device count can only be forced BEFORE jax initializes, so
+launchers peek argv with these helpers and only then import jax)."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """Parse an SXxSY mesh spec ('4x2') with a clean error on bad input."""
+    try:
+        sx, sy = (int(v) for v in spec.lower().split("x"))
+    except ValueError as e:
+        raise SystemExit(f"--mesh expects SXxSY (e.g. 4x2), got {spec!r}") from e
+    if sx < 1 or sy < 1:
+        raise SystemExit(f"--mesh sizes must be positive, got {spec!r}")
+    return sx, sy
+
+
+def peek_mesh_argv(argv: list[str] | None = None) -> tuple[int, int] | None:
+    """The --mesh value from argv, parsed, or None when absent."""
+    argv = sys.argv if argv is None else argv
+    spec = None
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            spec = argv[i + 1]
+        elif a.startswith("--mesh="):
+            spec = a.split("=", 1)[1]
+    return parse_mesh(spec) if spec is not None else None
+
+
+def force_host_devices(n: int) -> None:
+    """Force n emulated host-platform devices unless an override (real
+    accelerators, or the user's own XLA_FLAGS) is already present. Must run
+    before jax import."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n} " + flags

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.pic_run --workload uniform --steps 50
     PYTHONPATH=src python -m repro.launch.pic_run --workload lwfa --steps 30
+    PYTHONPATH=src python -m repro.launch.pic_run --mesh 4x2 --steps 50
 """
 
 from __future__ import annotations
@@ -9,12 +10,20 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
+from repro.launch.devices import force_host_devices, parse_mesh, peek_mesh_argv
 
-from repro.pic import (
-    FieldState, GridSpec, LaserSpec, PICConfig, Simulation, inject_laser, perturb_velocity,
-    profiled_plasma, uniform_plasma,
+# --mesh SXxSY needs SX*SY devices, which can only be forced BEFORE jax
+# import — so peek argv now (repro.launch.devices is jax-free)
+_MESH_ARGV = peek_mesh_argv()
+if _MESH_ARGV is not None:
+    force_host_devices(_MESH_ARGV[0] * _MESH_ARGV[1])
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.pic import (  # noqa: E402
+    DistConfig, DistSimulation, FieldState, GridSpec, LaserSpec, PICConfig, Simulation,
+    inject_laser, perturb_velocity, profiled_plasma, uniform_plasma,
 )
 
 
@@ -32,8 +41,14 @@ def main() -> None:
         help="device-resident loop: steps per compiled scan window (one host "
         "sync per window); 0 = legacy host-driven per-step loop",
     )
+    ap.add_argument(
+        "--mesh", type=str, default=None, metavar="SXxSY",
+        help="run domain-decomposed on an SXxSY device mesh (DistSimulation); "
+        "forces SX*SY host devices when no accelerator override is present",
+    )
     args = ap.parse_args()
     window = args.window if args.window > 0 else None
+    mesh_shape = parse_mesh(args.mesh) if args.mesh else None
 
     if args.workload == "uniform":
         shape = tuple(args.grid) if args.grid else (16, 16, 16)
@@ -48,20 +63,36 @@ def main() -> None:
         parts = profiled_plasma(jax.random.PRNGKey(0), grid, ppc_each_dim=(args.ppc,) * 3, density_fn=density)
         fields = inject_laser(FieldState.zeros(grid.shape), grid, LaserSpec(z_center=shape[2] * 0.15))
 
-    gather = "matrix" if args.deposition in ("matrix", "matrix_unfused") else "scatter"
-    cfg = PICConfig(
-        grid=grid, dt=grid.cfl_dt(0.5), order=args.order, deposition=args.deposition,
-        gather=gather, sort_mode=args.sort, capacity=max(16, 4 * args.ppc**3),
-    )
-    sim = Simulation(fields, parts, cfg)
+    capacity = max(16, 4 * args.ppc**3)
+    if mesh_shape is not None:
+        sx, sy = mesh_shape
+        if grid.shape[0] % sx or grid.shape[1] % sy:
+            raise SystemExit(f"grid {grid.shape} does not divide over a {sx}x{sy} mesh")
+        if args.deposition not in ("matrix", "matrix_unfused"):
+            raise SystemExit("--mesh supports the bin-based depositions: matrix | matrix_unfused")
+        if args.sort != "incremental":
+            raise SystemExit("--mesh runs the incremental GPMA sort + adaptive policy only")
+        local = GridSpec(shape=(grid.shape[0] // sx, grid.shape[1] // sy, grid.shape[2]), dx=grid.dx)
+        dcfg = DistConfig(
+            local_grid=local, dt=grid.cfl_dt(0.5), order=args.order,
+            deposition=args.deposition, capacity=capacity,
+        )
+        sim = DistSimulation(fields, parts, dcfg, mesh_shape=mesh_shape)
+    else:
+        gather = "matrix" if args.deposition in ("matrix", "matrix_unfused") else "scatter"
+        cfg = PICConfig(
+            grid=grid, dt=grid.cfl_dt(0.5), order=args.order, deposition=args.deposition,
+            gather=gather, sort_mode=args.sort, capacity=capacity,
+        )
+        sim = Simulation(fields, parts, cfg)
     loop = f"device-resident scan (window={window})" if window else "host-driven per-step loop"
-    print(f"{args.workload}: grid {grid.shape}, {parts.n} particles, order {args.order}, {args.deposition}/{args.sort}, {loop}")
+    mesh_note = f", mesh {mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape else ""
+    print(f"{args.workload}: grid {grid.shape}, {parts.n} particles, order {args.order}, {args.deposition}/{args.sort}, {loop}{mesh_note}")
 
-    # warmup compiles exactly the window lengths the timed run will use
-    # (each distinct length is a separate static-shape compile)
+    # one warmup compile: the windowed driver pads every window (including
+    # tails) to the same static length, so a single run covers the program
     if window:
-        for k in sorted({min(window, args.steps), args.steps % window} - {0}):
-            sim.run(k, window=window)
+        sim.run(min(window, args.steps), window=window)
     else:
         sim.run(2)
     t0 = time.perf_counter()

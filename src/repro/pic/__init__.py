@@ -16,3 +16,5 @@ from repro.pic.simulation import (  # noqa: F401
     pic_step,
     pic_step_donated,
 )
+from repro.pic.distributed import DistConfig  # noqa: F401
+from repro.pic.dist_simulation import DistSimulation, make_pic_mesh  # noqa: F401

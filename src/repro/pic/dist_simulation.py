@@ -1,0 +1,565 @@
+"""Distributed device-resident simulation loop: the whole K-step window runs
+as ONE compiled program with the `lax.scan` INSIDE `shard_map`.
+
+This connects the two halves the repo already had — the single-shot
+`shard_map` step (pic/distributed.py) and the single-device windowed scan
+driver (pic/simulation.py) — into the co-designed compute/layout/
+communication loop of the paper's per-MPI-rank model: fields and particles
+never reshard between steps, halo/migration ppermutes stay inside the one
+program, and the host sees exactly one fetched bundle per window.
+
+Per scan iteration (every shard, SPMD):
+
+  1. `dist_pic_step_local`    — halo exchange, gather, push, bounded-buffer
+                                migration, per-shard GPMA update, deposition
+                                + guard reduction, Maxwell (pic/distributed)
+  2. policy decision          — `core.resort_policy.policy_update` over the
+                                `lax.psum`-reduced GPMAStats; the reduced
+                                scalars are replicated, so every shard takes
+                                the same branch
+  3. conditional global sort  — per-shard `dist_global_sort_device` under
+                                `lax.cond` (purely local: attribute
+                                permutation + bin rebuild)
+  4. diagnostics              — psum-reduced energies + migration counters
+                                accumulated on device
+
+Host escape hatches (the ONLY reasons a window ends early; same masked
+pass-through trick as `pic_run_window`, never a whole-step `lax.cond`):
+
+  HALT_BIN_OVERFLOW    a bin stayed overfull even after the sort — the step
+                       is KEPT (overflowed particles simply did not deposit,
+                       exactly like the single-device driver), the host
+                       doubles `capacity` and re-enters.
+  HALT_MIG_SEND        a migrating particle found no exchange-buffer slot.
+                       The step is KEPT and lossless — the straggler stays
+                       resident, masked out of binning/gather/deposition,
+                       and retries after the host doubles `mig_cap`.
+  HALT_MIG_RECV        a received particle found no dead slot: it would have
+                       been DESTROYED. The step is DISCARDED (not counted in
+                       n_done), the host doubles the per-shard particle
+                       arrays (`n_local`) and the step re-runs — `DistSimulation`
+                       therefore never loses charge to receive overflow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh_compat, set_mesh_compat, shard_map_compat
+from repro.core import (
+    ResortPolicy,
+    SortPolicyConfig,
+    policy_init,
+    policy_reset,
+    policy_update,
+)
+from repro.core.resort_policy import REASON_OVERFLOW
+from repro.pic.distributed import (
+    DistConfig,
+    build_local_bins,
+    dist_global_sort_device,
+    dist_pic_step_local,
+    make_dist_sort,
+    make_dist_step,
+    partition_particles,
+    psum_all,
+)
+from repro.pic.grid import FieldState, GridSpec
+from repro.pic.plasma import ParticleState
+from repro.pic.pusher import lorentz_gamma
+from repro.pic.simulation import consume_window_bundle
+
+# Window halt codes (bundle["halt_code"]). Priority within a step:
+# recv-drop (lossy, discards the step) > bin overflow > send overflow.
+HALT_NONE = 0
+HALT_BIN_OVERFLOW = 1
+HALT_MIG_SEND = 2
+HALT_MIG_RECV = 3
+HALT_NAMES = ("none", "bin_overflow", "mig_send_overflow", "mig_recv_dropped")
+
+# Module-level alias so tests can monkeypatch and count the (single) per-
+# window device->host transfer, mirroring pic.simulation._fetch_bundle.
+_fetch_bundle = jax.device_get
+
+# Trace counter (see pic.simulation._window_trace_count): asserts in-test
+# that mixed-length windows (post-growth / end-of-run tails) do not retrace.
+_window_trace_count = 0
+
+
+def make_pic_mesh(sx: int, sy: int):
+    """An (sx, sy) device mesh on the default DistConfig axis names."""
+    return make_mesh_compat((sx, sy), ("data", "model"))
+
+
+def _mesh_axis_sizes(mesh, axes) -> int:
+    n = 1
+    for name in axes:
+        n *= mesh.shape[name]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# The windowed shard_map program
+# ---------------------------------------------------------------------------
+
+
+def _local_energies(fields, u, w, alive, cfg: DistConfig):
+    """Per-shard (field, kinetic) energy in float32, same math as
+    simulation._energies — callers psum the pair for the global values."""
+    vol = cfg.local_grid.cell_volume
+    field_e = sum(0.5 * jnp.sum(f.astype(jnp.float32) ** 2) for f in fields) * jnp.float32(vol)
+    gamma = lorentz_gamma(u)
+    kinetic = jnp.sum(
+        w.astype(jnp.float32) * alive.astype(jnp.float32) * cfg.mass * (gamma.astype(jnp.float32) - 1.0)
+    )
+    return field_e.astype(jnp.float32), kinetic.astype(jnp.float32)
+
+
+def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: int,
+                     with_energies: bool = True):
+    """Build the jitted distributed window: `n_steps` scan iterations INSIDE
+    one shard_map, one replicated bundle out.
+
+    Call signature of the returned function:
+        (fields6, pos, u, w, alive, slots, pslot, policy_state, n_target)
+        -> (fields6, pos, u, w, alive, slots, pslot, policy_state, bundle)
+
+    `n_steps` is static (the compiled scan length); `n_target` is TRACED —
+    steps past it are masked pass-throughs, so every window of a run
+    (including post-growth and end-of-run tails) reuses one compiled
+    program. Input buffers are donated: fields/particles update in place and
+    never reshard between steps.
+    """
+    n_shards = _mesh_axis_sizes(mesh, cfg.x_axes + cfg.y_axes)
+    n_slots_total = n_shards * cfg.local_grid.n_cells * cfg.capacity
+
+    def window_step(carry, i):
+        fields, pos, u, w, alive, slots, pslot, pstate, halted, halt_code, sorts, rebuilds, n_target = carry
+
+        # the step always executes (its ppermutes must run on every shard
+        # every iteration); outputs are masked once the window is halted —
+        # same masked pass-through trick as the single-device window
+        nf, npos, nu, nw, nalive, nslots, npslot, stats = dist_pic_step_local(
+            fields, pos, u, w, alive, slots, pslot, cfg
+        )
+
+        # in-graph re-sort policy over the psum-reduced stats: the reduced
+        # scalars are replicated across shards, so the decision (and hence
+        # the lax.cond branch below) is taken uniformly
+        mandatory = stats["n_overflow"] > 0
+        do_pol, reason_pol, pstate_rec = policy_update(
+            pstate, policy,
+            n_moved=stats["n_moved"], n_alive=stats["n_alive"],
+            n_empty=stats["n_empty"], n_slots=n_slots_total,
+        )
+        do_pol = do_pol & ~mandatory
+        do_sort = mandatory | do_pol
+        reason = jnp.where(mandatory, jnp.int32(REASON_OVERFLOW), reason_pol).astype(jnp.int32)
+
+        # per-shard global sort under lax.cond — purely local work (attribute
+        # permutation + bin rebuild), so no collective sits inside the cond;
+        # the local overflow is psum-reduced afterwards
+        def sort_branch(args):
+            return dist_global_sort_device(*args, cfg)
+
+        def no_sort(args):
+            pos, u, w, alive = args
+            return pos, u, w, alive, nslots, npslot, jnp.zeros((), jnp.int32)
+
+        npos, nu, nw, nalive, nslots, npslot, overflow_local = lax.cond(
+            do_sort, sort_branch, no_sort, (npos, nu, nw, nalive)
+        )
+        overflow_after = psum_all(overflow_local, cfg)
+        pstate_new = jax.tree.map(
+            lambda r, n: jnp.where(do_sort, r, n), policy_reset(), pstate_rec
+        )
+
+        # halt classification (recv-drop discards the whole step: those
+        # particles would have been destroyed)
+        recv_drop = stats["mig_recv_dropped"] > 0
+        halt_bin = overflow_after > 0
+        halt_send = stats["mig_send_overflow"] > 0
+        step_code = jnp.where(
+            recv_drop, jnp.int32(HALT_MIG_RECV),
+            jnp.where(
+                halt_bin, jnp.int32(HALT_BIN_OVERFLOW),
+                jnp.where(halt_send, jnp.int32(HALT_MIG_SEND), jnp.int32(HALT_NONE)),
+            ),
+        )
+        executed = ~halted
+        counted = executed & ~recv_drop  # a step that survives into n_done
+
+        discard = halted | recv_drop
+        keep = lambda old, new: jax.tree.map(lambda o, n: jnp.where(discard, o, n), old, new)
+        fields = keep(fields, nf)
+        pos, u, w, alive = keep((pos, u, w, alive), (npos, nu, nw, nalive))
+        slots, pslot = keep((slots, pslot), (nslots, npslot))
+        pstate = jax.tree.map(lambda o, n: jnp.where(counted, n, o), pstate, pstate_new)
+        sorts = sorts + (counted & do_pol).astype(jnp.int32)
+        rebuilds = rebuilds + (counted & mandatory).astype(jnp.int32)
+
+        step_halt = executed & (step_code != HALT_NONE)
+        halt_code = jnp.where(halt_code != 0, halt_code, jnp.where(step_halt, step_code, 0))
+        halted = halted | step_halt | (i + 1 >= n_target)
+
+        if with_energies:
+            fe_l, ke_l = _local_energies(fields, u, w, alive, cfg)
+            field_e = psum_all(fe_l, cfg)
+            kinetic = psum_all(ke_l, cfg)
+        else:
+            field_e = jnp.zeros((), jnp.float32)
+            kinetic = jnp.zeros((), jnp.float32)
+
+        diag = {
+            "active": counted,
+            "sorted": do_sort & counted,
+            "reason": jnp.where(counted, reason, 0).astype(jnp.int32),
+            "n_moved": jnp.where(counted, stats["n_moved"], 0).astype(jnp.int32),
+            "n_alive": jnp.where(counted, stats["n_alive"], 0).astype(jnp.int32),
+            "mig_send_overflow": jnp.where(counted, stats["mig_send_overflow"], 0).astype(jnp.int32),
+            "mig_recv_dropped": jnp.where(executed, stats["mig_recv_dropped"], 0).astype(jnp.int32),
+            "n_unmigrated": jnp.where(counted, stats["n_unmigrated"], 0).astype(jnp.int32),
+            "field_energy": jnp.where(counted, field_e, 0.0),
+            "kinetic_energy": jnp.where(counted, kinetic, 0.0),
+        }
+        carry = (fields, pos, u, w, alive, slots, pslot, pstate, halted, halt_code, sorts, rebuilds, n_target)
+        return carry, diag
+
+    def window_body(fields, pos, u, w, alive, slots, pslot, pstate, n_target):
+        global _window_trace_count
+        _window_trace_count += 1
+        sq = lambda a: a.reshape(a.shape[2:])
+        pos, u, w, alive, slots, pslot = map(sq, (pos, u, w, alive, slots, pslot))
+        zero = jnp.zeros((), jnp.int32)
+        carry0 = (
+            fields, pos, u, w, alive, slots, pslot, pstate,
+            n_target <= jnp.int32(0), zero, zero, zero, n_target,
+        )
+        carry, per_step = lax.scan(window_step, carry0, jnp.arange(n_steps, dtype=jnp.int32))
+        fields, pos, u, w, alive, slots, pslot, pstate, halted, halt_code, sorts, rebuilds, _ = carry
+        bundle = {
+            "n_done": jnp.sum(per_step["active"]).astype(jnp.int32),
+            "n_sorts": sorts,
+            "n_rebuilds": rebuilds,
+            "halt_code": halt_code,
+            "per_step": per_step,
+        }
+        ex = lambda a: a.reshape((1, 1) + a.shape)
+        pos, u, w, alive, slots, pslot = map(ex, (pos, u, w, alive, slots, pslot))
+        return fields, pos, u, w, alive, slots, pslot, pstate, bundle
+
+    fspec = P(cfg.x_axes, cfg.y_axes, None)
+
+    def spec(*extra):
+        return P(cfg.x_axes, cfg.y_axes, *extra)
+
+    in_specs = (
+        (fspec,) * 6,
+        spec(None, None), spec(None, None), spec(None), spec(None),
+        spec(None, None), spec(None),
+        P(),  # policy state (replicated scalars)
+        P(),  # n_target
+    )
+    out_specs = (
+        (fspec,) * 6,
+        spec(None, None), spec(None, None), spec(None), spec(None),
+        spec(None, None), spec(None),
+        P(),  # policy state
+        P(),  # bundle (everything psum-reduced / replicated)
+    )
+    # the replication checker (check_rep / check_vma) cannot track the scan
+    # carry's mixed replicated/sharded leaves on jax 0.4.x — the replicated
+    # outputs here are replicated by construction (every scalar that crosses
+    # shards goes through lax.psum)
+    sm = shard_map_compat(
+        window_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+    return jax.jit(sm, donate_argnums=tuple(range(8)))
+
+
+# ---------------------------------------------------------------------------
+# Host driver
+# ---------------------------------------------------------------------------
+
+
+class DistSimulation:
+    """Multi-device driver mirroring `Simulation`'s API on a 2-D shard mesh.
+
+    ``run(n, window=K)`` executes each K-step window as ONE compiled
+    shard_map program (see `make_dist_window`): zero per-step host syncs,
+    one fetched bundle per window, capacity/`mig_cap`/`n_local` growth as
+    the only host escape hatches. ``window=None`` keeps a per-step host loop
+    over `make_dist_step` (one stats sync per step, host-side `ResortPolicy`
+    with the wall-clock perf trigger) — the baseline the windowed driver is
+    benchmarked against (benchmarks/dist_sweep.py).
+
+    Construction takes GLOBAL fields/particles exactly like `Simulation`;
+    they are partitioned onto the mesh once, here, and never reshard again.
+    """
+
+    def __init__(
+        self,
+        fields: FieldState,
+        particles: ParticleState,
+        config: DistConfig,
+        *,
+        mesh=None,
+        mesh_shape: tuple[int, int] | None = None,
+        n_local: int | None = None,
+        policy: SortPolicyConfig | None = None,
+    ):
+        if mesh is None:
+            if mesh_shape is None:
+                raise ValueError("pass either a mesh or mesh_shape=(sx, sy)")
+            mesh = make_pic_mesh(*mesh_shape)
+        self.mesh = mesh
+        self.config = config
+        self.sx = _mesh_axis_sizes(mesh, config.x_axes)
+        self.sy = _mesh_axis_sizes(mesh, config.y_axes)
+
+        local = config.local_grid
+        self.global_grid = GridSpec(
+            shape=(local.shape[0] * self.sx, local.shape[1] * self.sy, local.shape[2]),
+            dx=local.dx,
+        )
+        fshape = tuple(np.asarray(fields.ex).shape)
+        if fshape != self.global_grid.shape:
+            raise ValueError(
+                f"field arrays have shape {fshape} but mesh {self.sx}x{self.sy} of local "
+                f"blocks {local.shape} implies a global grid {self.global_grid.shape}"
+            )
+
+        if n_local is None:
+            n_local = self._default_n_local(particles)
+        self.n_local = n_local
+        pos, u, w, alive = partition_particles(particles, self.global_grid, self.sx, self.sy, n_local)
+        self.pos, self.u, self.w, self.alive = pos, u, w, alive
+
+        # initial binning; grow capacity up front if the initial density
+        # already overflows (mirrors Simulation.__init__)
+        while True:
+            slots, pslot, overflow = build_local_bins(self.pos, self.alive, local, self.config.capacity)
+            if not overflow:
+                break
+            self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
+        self.slots, self.pslot = slots, pslot
+
+        # private copies (the windowed program donates its inputs)
+        self.fields = tuple(jnp.asarray(f).copy() for f in (
+            fields.ex, fields.ey, fields.ez, fields.bx, fields.by, fields.bz
+        ))
+
+        self.policy = ResortPolicy(policy)
+        self.policy_state = policy_init()
+        self.sorts = 0
+        self.rebuilds = 0
+        self.growths = {"capacity": 0, "mig_cap": 0, "n_local": 0}
+        self.mig_recv_dropped = 0  # host loop only; the windowed driver never drops
+        self.history: list[dict] = []
+        self._host_step = 0
+        self._fns: dict = {}
+
+    def _default_n_local(self, particles: ParticleState) -> int:
+        nx_loc, ny_loc = self.config.local_grid.shape[:2]
+        pos = np.asarray(particles.pos)
+        alive = np.asarray(particles.alive)
+        ix = np.clip((pos[:, 0] // nx_loc).astype(int), 0, self.sx - 1)
+        iy = np.clip((pos[:, 1] // ny_loc).astype(int), 0, self.sy - 1)
+        counts = np.bincount((ix * self.sy + iy)[alive], minlength=self.sx * self.sy)
+        peak = int(counts.max()) if counts.size else 0
+        return max(8, -(-int(peak * 1.5) // 8) * 8)  # 1.5x headroom, multiple of 8
+
+    # -- jitted program cache (static config knobs key the entries) --------
+
+    def _window_fn(self, window: int, with_energies: bool):
+        key = ("window", self.config, window, with_energies)
+        if key not in self._fns:
+            self._fns[key] = make_dist_window(
+                self.mesh, self.config, self.policy.config, window, with_energies
+            )
+        return self._fns[key]
+
+    def _step_fn(self):
+        key = ("step", self.config)
+        if key not in self._fns:
+            self._fns[key] = make_dist_step(self.mesh, self.config)
+        return self._fns[key]
+
+    def _sort_fn(self):
+        key = ("sort", self.config)
+        if key not in self._fns:
+            self._fns[key] = make_dist_sort(self.mesh, self.config)
+        return self._fns[key]
+
+    # -- drivers -----------------------------------------------------------
+
+    def run(self, n_steps: int, *, diagnostics_every: int = 0, window: int | None = None) -> None:
+        """Advance `n_steps`. ``window=K`` runs the device-resident windowed
+        program; ``window=None`` the per-step host loop. As with
+        `Simulation`, the two drivers keep independent policy counters —
+        pick one driver per DistSimulation."""
+        with set_mesh_compat(self.mesh):
+            if window is None:
+                self._run_host(n_steps, diagnostics_every)
+            else:
+                self._run_windowed(n_steps, diagnostics_every, window)
+
+    def _run_windowed(self, n_steps: int, diagnostics_every: int, window: int) -> None:
+        if window <= 0:
+            raise ValueError(f"window must be positive, got {window}")
+        done = 0
+        while done < n_steps:
+            k = min(window, n_steps - done)
+            fn = self._window_fn(window, bool(diagnostics_every))
+            (self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
+             self.policy_state, bundle) = fn(
+                self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
+                self.policy_state, jnp.int32(k),
+            )
+            host = _fetch_bundle(bundle)  # the single device->host sync of this window
+            n_done, n_sorts, n_rebuilds = consume_window_bundle(
+                host, self._host_step, diagnostics_every, self.history
+            )
+            self.sorts += n_sorts
+            self.rebuilds += n_rebuilds
+            self._host_step += n_done
+            done += n_done
+            code = int(host["halt_code"])
+            if code == HALT_BIN_OVERFLOW:
+                self._grow_capacity()
+            elif code == HALT_MIG_SEND:
+                self._grow_mig_cap()
+            elif code == HALT_MIG_RECV:
+                self._grow_n_local()
+            elif n_done < k:
+                raise RuntimeError("distributed windowed driver made no progress without a halt")
+
+    def _run_host(self, n_steps: int, diagnostics_every: int) -> None:
+        import time
+
+        for _ in range(n_steps):
+            # recomputed per step: _dist_sort can double capacity mid-run
+            n_slots_total = self.sx * self.sy * self.config.local_grid.n_cells * self.config.capacity
+            t0 = time.perf_counter()
+            (self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
+             stats) = self._step_fn()(
+                self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot
+            )
+            # the per-step host sync: ONE transfer for all stat scalars (a
+            # per-key int() would cost a blocking round-trip each)
+            stats = {k: int(v) for k, v in jax.device_get(stats).items()}
+            self._host_step += 1
+            if stats["mig_recv_dropped"]:
+                # the step already applied: those particles are gone. Count
+                # the loss honestly and grow so it stops; only the windowed
+                # driver can discard-and-retry the offending step.
+                self.mig_recv_dropped += stats["mig_recv_dropped"]
+                self._grow_n_local()
+            if stats["mig_send_overflow"]:
+                self._grow_mig_cap()  # stragglers retry with the bigger buffer
+            if stats["n_overflow"] > 0:
+                self._dist_sort()
+                self.rebuilds += 1
+                self.policy.reset()
+            else:
+                dtep = time.perf_counter() - t0
+                perf = float(stats["n_alive"]) / max(dtep, 1e-9)
+                self.policy.record_step(rebuilt=False, perf=perf)
+                do, _reason = self.policy.should_sort(
+                    empty_ratio=stats["n_empty"] / max(n_slots_total, 1)
+                )
+                if do:
+                    self._dist_sort()
+                    self.sorts += 1
+                    self.policy.reset()
+            if diagnostics_every and self._host_step % diagnostics_every == 0:
+                self.history.append(self.diagnostics())
+
+    # -- growth escape hatches --------------------------------------------
+
+    def _dist_sort(self) -> None:
+        """Per-shard global sort at the current capacity; grows capacity
+        until the bins absorb every resident particle."""
+        while True:
+            (self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
+             overflow) = self._sort_fn()(self.pos, self.u, self.w, self.alive)
+            if int(overflow) == 0:
+                return
+            self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
+            self.growths["capacity"] += 1
+            assert self.config.capacity <= 2 * max(self.n_local, 1), (
+                "binning overflow persists with capacity > n_local"
+            )
+
+    def _grow_capacity(self) -> None:
+        self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
+        self.growths["capacity"] += 1
+        self._dist_sort()
+
+    def _grow_mig_cap(self) -> None:
+        self.config = dataclasses.replace(self.config, mig_cap=self.config.mig_cap * 2)
+        self.growths["mig_cap"] += 1
+        assert self.config.mig_cap <= 4 * max(self.n_local, 1), (
+            "migration buffer growth runaway: mig_cap exceeds 4x n_local"
+        )
+
+    def _grow_n_local(self) -> None:
+        """Double the per-shard particle arrays (dead padding). Bin slot ids
+        reference particle indices, which padding preserves."""
+        add = self.n_local
+        pad = lambda a, fill: jnp.concatenate(
+            [a, jnp.full(a.shape[:2] + (add,) + a.shape[3:], fill, a.dtype)], axis=2
+        )
+        self.pos = pad(self.pos, 0.0)
+        self.u = pad(self.u, 0.0)
+        self.w = pad(self.w, 0.0)
+        self.alive = pad(self.alive, False)
+        self.pslot = pad(self.pslot, np.int32(-1))
+        self.n_local += add
+        self.growths["n_local"] += 1
+
+    # -- host-side views ---------------------------------------------------
+
+    def fields_global(self) -> FieldState:
+        """The global field state (host fetch)."""
+        ex, ey, ez, bx, by, bz = (np.asarray(f) for f in self.fields)
+        return FieldState(ex=jnp.asarray(ex), ey=jnp.asarray(ey), ez=jnp.asarray(ez),
+                          bx=jnp.asarray(bx), by=jnp.asarray(by), bz=jnp.asarray(bz))
+
+    def particles_global(self) -> ParticleState:
+        """All particle slots flattened to one array with positions shifted
+        back to the global frame (dead/unused padding rows keep alive=False;
+        unmigrated stragglers keep their out-of-range local coordinates
+        shifted by their CURRENT shard's origin)."""
+        pos = np.asarray(self.pos).copy()
+        nx_loc, ny_loc = self.config.local_grid.shape[:2]
+        for a in range(self.sx):
+            pos[a, :, :, 0] += a * nx_loc
+        for b in range(self.sy):
+            pos[:, b, :, 1] += b * ny_loc
+        flat = lambda x: jnp.asarray(np.asarray(x).reshape((-1,) + np.asarray(x).shape[3:]))
+        return ParticleState(
+            pos=jnp.asarray(pos.reshape(-1, 3)),
+            u=flat(self.u), w=flat(self.w), alive=flat(self.alive),
+        )
+
+    def diagnostics(self) -> dict:
+        """Host-facing diagnostics with the same float32 energy definition
+        as `Simulation.diagnostics` (this is a device->host sync). The
+        global sharded arrays sum to exactly the psum of per-shard sums, so
+        this reuses the window's `_local_energies`."""
+        fe, ke = _local_energies(self.fields, self.u, self.w, self.alive, self.config)
+        field_e, kinetic = float(fe), float(ke)
+        return {
+            "step": self._host_step,
+            "field_energy": field_e,
+            "kinetic_energy": kinetic,
+            "total_energy": field_e + kinetic,
+            "n_alive": int(jnp.sum(self.alive)),
+        }

@@ -17,8 +17,20 @@ entirely inside one jitted shard_map:
   6. Maxwell update          — slice-based curls on 1-cell halos
 
 Buffers are fixed-size (`mig_cap`); overflow is *counted* and surfaced so a
-production driver can grow buffers — nothing is silently dropped without a
-visible count (stats.migration_overflow).
+production driver can grow buffers — nothing happens silently:
+
+* send-side overflow (`mig_send_overflow`): a particle left its shard but no
+  exchange-buffer slot was free. It stays resident with an out-of-range
+  local position, is masked out of binning/gather/push/deposition for the
+  step (garbage shape weights from raw out-of-range coordinates would
+  otherwise corrupt the boundary current), and retries migration on the next
+  step. Retryable; `stats["n_unmigrated"]` counts the currently-frozen ones.
+* receive-side overflow (`mig_recv_dropped`): the destination shard had no
+  dead slot left, so the particle was DESTROYED (charge loss). The windowed
+  driver (pic/dist_simulation.py) treats a nonzero drop count as a
+  halt-and-grow event — the offending step is discarded and re-run after the
+  host grows the per-shard particle arrays — so no run driven by
+  `DistSimulation` ever loses charge this way.
 """
 
 from __future__ import annotations
@@ -31,7 +43,15 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import build_bins, cell_index, deposit_matrix, gather_matrix, gpma_update
+from repro.core import (
+    build_bins,
+    cell_index,
+    deposit_current_matrix_fused,
+    deposit_matrix,
+    gather_matrix,
+    gpma_update,
+    sort_permutation,
+)
 from repro.core.binning import BinnedLayout
 from repro.pic.grid import B_STAGGER, E_STAGGER, GridSpec
 from repro.pic.maxwell import curl_b_padded, curl_e_padded
@@ -116,14 +136,16 @@ def _pack(mask, arrays, cap: int):
     return bufs, valid, selected, n_overflow
 
 
-def _insert(parts_arrays, alive, bufs, valid, cap_overflow_count):
+def _insert(parts_arrays, alive, bufs, valid):
     """Insert buffer rows into dead slots. Returns updated arrays + alive +
-    overflow count."""
+    the count of received particles that found no dead slot (DESTROYED —
+    the caller must surface this as `mig_recv_dropped`, never fold it into a
+    retryable counter)."""
     free_order = jnp.argsort(alive, stable=True)  # dead (False) first
     nbuf = valid.shape[0]
     dst = free_order[:nbuf]
     can = ~alive[dst] & valid
-    n_over = jnp.sum(valid) - jnp.sum(can)
+    n_dropped = jnp.sum(valid) - jnp.sum(can)
     dump = alive.shape[0]
     dst_safe = jnp.where(can, dst, dump)
     out = []
@@ -132,17 +154,23 @@ def _insert(parts_arrays, alive, bufs, valid, cap_overflow_count):
         out.append(ext.at[dst_safe].set(buf)[:-1])
     alive_ext = jnp.concatenate([alive, jnp.zeros((1,), bool)])
     alive = alive_ext.at[dst_safe].set(True)[:-1]
-    return out, alive, cap_overflow_count + n_over
+    return out, alive, n_dropped
 
 
 def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_cap: int):
-    """Exchange out-of-range particles along one decomposed axis."""
+    """Exchange out-of-range particles along one decomposed axis.
+
+    Returns ``(pos, u, w, alive, n_send_overflow, n_recv_dropped)``:
+    send-side overflow is retryable (the particle stays resident,
+    out-of-range, and must be masked from binning/deposition until it
+    migrates); receive-side drops are destroyed particles.
+    """
     x = pos[:, coord]
     go_hi = alive & (x >= extent)
     go_lo = alive & (x < 0)
 
-    bufs_hi, valid_hi, sel_hi, of1 = _pack(go_hi, [pos, u, w], mig_cap)
-    bufs_lo, valid_lo, sel_lo, of2 = _pack(go_lo, [pos, u, w], mig_cap)
+    bufs_hi, valid_hi, sel_hi, of_hi = _pack(go_hi, [pos, u, w], mig_cap)
+    bufs_lo, valid_lo, sel_lo, of_lo = _pack(go_lo, [pos, u, w], mig_cap)
     # shift coordinates into the receiver's local frame
     bufs_hi[0] = bufs_hi[0].at[:, coord].add(-float(extent))
     bufs_lo[0] = bufs_lo[0].at[:, coord].add(float(extent))
@@ -155,10 +183,10 @@ def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_ca
     recv_valid_next = lax.ppermute(valid_lo, axis_name, _ring(axis_name, -1))
 
     arrays = [pos, u, w]
-    arrays, alive, of3 = _insert(arrays, alive, recv_from_prev, recv_valid_prev, of1 + of2)
-    arrays, alive, of4 = _insert(arrays, alive, recv_from_next, recv_valid_next, of3)
+    arrays, alive, drop1 = _insert(arrays, alive, recv_from_prev, recv_valid_prev)
+    arrays, alive, drop2 = _insert(arrays, alive, recv_from_next, recv_valid_next)
     pos, u, w = arrays
-    return pos, u, w, alive, of4
+    return pos, u, w, alive, of_hi + of_lo, drop1 + drop2
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +198,8 @@ class DistConfig:
     local_grid: GridSpec          # per-shard block
     dt: float
     order: int = 1
+    deposition: str = "matrix"    # matrix (fused megakernel) | matrix_unfused
+    use_pallas: bool = False      # route the bin contraction through Pallas
     charge: float = -1.0
     mass: float = 1.0
     capacity: int = 16
@@ -177,9 +207,39 @@ class DistConfig:
     x_axes: tuple = ("data",)     # mesh axes decomposing grid x
     y_axes: tuple = ("model",)
 
+    def __post_init__(self):
+        validate_shard_guard(self.local_grid, self.order)
+        if self.deposition not in ("matrix", "matrix_unfused"):
+            raise ValueError(
+                f"DistConfig.deposition must be 'matrix' or 'matrix_unfused', got {self.deposition!r} "
+                "(the distributed step is bin-based; scatter/rhocell modes are single-device only)"
+            )
+
     @property
     def guard(self) -> int:
         return max_guard(self.order)
+
+
+def validate_shard_guard(local_grid: GridSpec, order: int) -> None:
+    """Fail loudly when the guard width exceeds the local shard extent.
+
+    `halo_extend`/`halo_reduce` slice a g-cell slab off each side of the
+    LOCAL block and exchange it with the ring neighbors. With
+    g > local extent the sliced slab silently wraps into the neighbor's
+    neighbor (the slice covers the whole block and then some), producing
+    wrong fields/currents with no error. Shards must be at least
+    `max_guard(order)` cells wide along every decomposed axis (and z, whose
+    local periodic extension slices the same slabs).
+    """
+    g = max_guard(order)
+    smallest = min(local_grid.shape)
+    if g > smallest:
+        raise ValueError(
+            f"guard width {g} (deposition order {order}) exceeds the smallest local shard "
+            f"extent {smallest} (local grid {local_grid.shape}): halo slabs would wrap into "
+            f"the neighbor's neighbor. Use shards of at least {g} cells per axis — at order "
+            f"{order} that means local_grid.shape >= ({g}, {g}, {g})."
+        )
 
 
 def _extend_all(f, g, cfg: DistConfig):
@@ -199,6 +259,17 @@ def _reduce_all(fpad, g, cfg: DistConfig):
     return fpad
 
 
+def in_domain(pos, shape):
+    """Particles whose local position lies inside this shard's block on the
+    decomposed axes (z is locally periodic and always in range after the
+    per-step wrap). Send-side migration overflow leaves particles resident
+    with out-of-range coordinates; everything bin- or weight-based must mask
+    on this — `cell_index` would clip them into the boundary cell and the
+    raw out-of-range offsets produce garbage shape weights."""
+    x, y = pos[:, 0], pos[:, 1]
+    return (x >= 0) & (x < shape[0]) & (y >= 0) & (y < shape[1])
+
+
 def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: DistConfig):
     """Body executed per shard inside shard_map. fields: 6-tuple of local
     blocks; particle arrays local. Returns updated locals + stats dict."""
@@ -206,6 +277,11 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
     g = cfg.guard
     shape = cfg.local_grid.shape
     layout = BinnedLayout(slots=slots, particle_slot=particle_slot)
+
+    # unmigrated send-overflow particles from the previous step: alive but
+    # out-of-range, NOT in any bin (gather returns 0 for them), frozen for
+    # this step — migration below retries them
+    resident = alive & in_domain(pos, shape)
 
     # 1. halo-extended fields + gather
     pe = [_extend_all(f, g, cfg) for f in (ex, ey, ez)]
@@ -217,37 +293,66 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
         [gather_matrix(pos, pb[k], layout, grid_shape=shape, order=cfg.order, stagger=B_STAGGER[k]) for k in range(3)], -1
     )
 
-    # 2. push (positions NOT wrapped: out-of-range triggers migration)
-    u_new = jnp.where(alive[:, None], boris_push(u, e_p, b_p, cfg.charge / cfg.mass, cfg.dt), u)
-    pos_new = jnp.where(alive[:, None], advance_positions(pos, u_new, cfg.dt, cfg.local_grid.dx), pos)
+    # 2. push (positions NOT wrapped: out-of-range triggers migration);
+    # frozen out-of-domain particles keep position AND momentum so they
+    # retry migration with the same coordinates
+    u_new = jnp.where(resident[:, None], boris_push(u, e_p, b_p, cfg.charge / cfg.mass, cfg.dt), u)
+    pos_new = jnp.where(resident[:, None], advance_positions(pos, u_new, cfg.dt, cfg.local_grid.dx), pos)
 
     # 3. migration (x then y; z wraps locally)
     pos_new = pos_new.at[:, 2].set(jnp.mod(pos_new[:, 2], shape[2]))
-    mig_overflow = jnp.int32(0)
+    mig_send_overflow = jnp.int32(0)
+    mig_recv_dropped = jnp.int32(0)
     for ax_name in cfg.x_axes:
-        pos_new, u_new, w, alive, of = migrate_axis(
+        pos_new, u_new, w, alive, of, dr = migrate_axis(
             pos_new, u_new, w, alive, coord=0, extent=shape[0], axis_name=ax_name, mig_cap=cfg.mig_cap
         )
-        mig_overflow += of
+        mig_send_overflow += of
+        mig_recv_dropped += dr
     for ax_name in cfg.y_axes:
-        pos_new, u_new, w, alive, of = migrate_axis(
+        pos_new, u_new, w, alive, of, dr = migrate_axis(
             pos_new, u_new, w, alive, coord=1, extent=shape[1], axis_name=ax_name, mig_cap=cfg.mig_cap
         )
-        mig_overflow += of
+        mig_send_overflow += of
+        mig_recv_dropped += dr
 
-    # 4. incremental sort on local bins
+    # 4. incremental sort on local bins — send-overflow stragglers are kept
+    # OUT of the bins (they retry migration next step; binning them would
+    # clip their cell index into the boundary cell and corrupt the gather
+    # and deposition with out-of-range shape weights)
+    binned = alive & in_domain(pos_new, shape)
     new_cells = cell_index(pos_new, shape)
-    layout, gstats = gpma_update(layout, new_cells, alive)
+    layout, gstats = gpma_update(layout, new_cells, binned)
 
-    # 5. deposition + guard reduction
+    # 5. deposition + guard reduction (binned particles only: the layout
+    # already excludes stragglers, qw masking keeps the oracle identical)
     gamma = lorentz_gamma(u_new)
     v = u_new / gamma[:, None]
-    qw = cfg.charge * w * alive.astype(w.dtype)
+    qw = cfg.charge * w * binned.astype(w.dtype)
     inv_vol = 1.0 / cfg.local_grid.cell_volume
-    j = []
-    for k, stagger in enumerate(((True, False, False), (False, True, False), (False, False, True))):
-        jp = deposit_matrix(pos_new, qw * v[:, k], layout, grid_shape=shape, order=cfg.order, stagger=stagger)
-        j.append(_reduce_all(jp, g, cfg) * inv_vol)
+    if cfg.deposition == "matrix":
+        fused_matmul = None
+        if cfg.use_pallas:
+            from repro.kernels.deposition.ops import fused_bin_deposit
+
+            fused_matmul = fused_bin_deposit
+        j3 = deposit_current_matrix_fused(
+            pos_new, v, qw, layout, grid_shape=shape, order=cfg.order, fused_matmul=fused_matmul
+        )
+        j = [_reduce_all(jp, g, cfg) * inv_vol for jp in j3]
+    else:  # matrix_unfused: per-component comparison mode
+        bin_matmul = None
+        if cfg.use_pallas:
+            from repro.kernels.deposition.ops import bin_outer_product
+
+            bin_matmul = bin_outer_product
+        j = []
+        for k, stagger in enumerate(((True, False, False), (False, True, False), (False, False, True))):
+            jp = deposit_matrix(
+                pos_new, qw * v[:, k], layout, grid_shape=shape, order=cfg.order, stagger=stagger,
+                bin_matmul=bin_matmul,
+            )
+            j.append(_reduce_all(jp, g, cfg) * inv_vol)
 
     # 6. Maxwell (1-cell halos, slice curls), B-E-B leapfrog
     def half_b(exc, eyc, ezc, bxc, byc, bzc, dt_half):
@@ -266,17 +371,51 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
     stats = {
         "n_moved": gstats.n_moved,
         "n_overflow": gstats.n_overflow,
-        "migration_overflow": mig_overflow,
+        "n_empty": gstats.n_empty,
+        "mig_send_overflow": mig_send_overflow,
+        "mig_recv_dropped": mig_recv_dropped,
+        "n_unmigrated": jnp.sum(alive & ~in_domain(pos_new, shape)).astype(jnp.int32),
         "n_alive": jnp.sum(alive),
     }
-    # global sums for the host policy
+    # global sums for the resort policy (host- or in-graph)
     for k in list(stats):
-        s = stats[k]
-        for ax in cfg.x_axes + cfg.y_axes:
-            s = lax.psum(s, ax)
-        stats[k] = s
+        stats[k] = psum_all(stats[k], cfg)
 
     return (ex1, ey1, ez1, bx2, by2, bz2), pos_new, u_new, w, alive, layout.slots, layout.particle_slot, stats
+
+
+def psum_all(value, cfg: DistConfig):
+    """Sum a per-shard scalar over every decomposed mesh axis."""
+    for ax in cfg.x_axes + cfg.y_axes:
+        value = lax.psum(value, ax)
+    return value
+
+
+STAT_KEYS = (
+    "n_moved", "n_overflow", "n_empty", "mig_send_overflow",
+    "mig_recv_dropped", "n_unmigrated", "n_alive",
+)
+
+
+def dist_global_sort_device(pos, u, w, alive, cfg: DistConfig):
+    """Per-shard GlobalSortParticlesByCell, traceable (runs under `lax.cond`
+    inside the windowed shard_map driver): permute the shard's attribute
+    arrays into cell order + rebuild the local bins, returning the LOCAL
+    overflow as a traced int32 (callers psum it).
+
+    Unmigrated send-overflow stragglers (alive, out-of-domain) sort to the
+    back with the dead particles and stay out of the bins, but keep their
+    alive flag — they retry migration on the next step.
+    """
+    shape = cfg.local_grid.shape
+    binned = alive & in_domain(pos, shape)
+    perm = sort_permutation(cell_index(pos, shape), binned)
+    pos, u, w, alive = pos[perm], u[perm], w[perm], alive[perm]
+    binned = alive & in_domain(pos, shape)
+    layout, overflow = build_bins(
+        cell_index(pos, shape), binned, n_cells=cfg.local_grid.n_cells, capacity=cfg.capacity
+    )
+    return pos, u, w, alive, layout.slots, layout.particle_slot, overflow.astype(jnp.int32)
 
 
 def make_dist_step(mesh, cfg: DistConfig):
@@ -284,8 +423,8 @@ def make_dist_step(mesh, cfg: DistConfig):
       fields: (NX, NY, NZ) sharded P(x_axes, y_axes, None)
       particles: (SX, SY, Nloc, ...) sharded on the two leading axes.
     """
+    validate_shard_guard(cfg.local_grid, cfg.order)
     fspec = P(cfg.x_axes, cfg.y_axes, None)
-    pspec2 = P(cfg.x_axes, cfg.y_axes)
 
     def spec(*extra):
         return P(cfg.x_axes, cfg.y_axes, *extra)
@@ -303,7 +442,7 @@ def make_dist_step(mesh, cfg: DistConfig):
         (fspec,) * 6,
         spec(None, None), spec(None, None), spec(None), spec(None),
         spec(None, None), spec(None),
-        {k: P() for k in ("n_moved", "n_overflow", "migration_overflow", "n_alive")},
+        {k: P() for k in STAT_KEYS},
     )
 
     def body(fields, pos, u, w, alive, slots, pslot):
@@ -314,6 +453,32 @@ def make_dist_step(mesh, cfg: DistConfig):
         )
         ex = lambda a: a.reshape((1, 1) + a.shape)
         return fields, ex(pos), ex(u), ex(w), ex(alive), ex(slots), ex(pslot), stats
+
+    sm = shard_map_compat(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return jax.jit(sm)
+
+
+def make_dist_sort(mesh, cfg: DistConfig):
+    """Jitted shard_map per-shard global sort (attribute permutation + bin
+    rebuild at ``cfg.capacity``). Host escape hatch for bin-capacity growth:
+    rebuild at a doubled capacity without re-partitioning. Returns
+    ``(pos, u, w, alive, slots, pslot, overflow)`` with overflow psum-reduced
+    (replicated scalar)."""
+
+    def spec(*extra):
+        return P(cfg.x_axes, cfg.y_axes, *extra)
+
+    part_specs = (spec(None, None), spec(None, None), spec(None), spec(None))
+    in_specs = part_specs
+    out_specs = (*part_specs, spec(None, None), spec(None), P())
+
+    def body(pos, u, w, alive):
+        sq = lambda a: a.reshape(a.shape[2:])
+        pos, u, w, alive, slots, pslot, overflow = dist_global_sort_device(
+            sq(pos), sq(u), sq(w), sq(alive), cfg
+        )
+        ex = lambda a: a.reshape((1, 1) + a.shape)
+        return ex(pos), ex(u), ex(w), ex(alive), ex(slots), ex(pslot), psum_all(overflow, cfg)
 
     sm = shard_map_compat(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(sm)

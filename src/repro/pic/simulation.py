@@ -354,39 +354,56 @@ def _window_active_step(state, pstate, sorts, rebuilds, config: PICConfig,
     return state, pstate, halted, sorts, rebuilds, diag
 
 
-def _pic_run_window_impl(state, pstate, config: PICConfig, policy: SortPolicyConfig,
-                         n_steps: int, with_energies: bool):
-    def body(carry, _):
+# Trace-time counter: incremented every time the window impl is (re)traced.
+# Tests read the delta to assert that mixed-length runs (post-growth tails,
+# end-of-run tails with k < window) do NOT recompile — the padded fixed-size
+# window is compiled once per static (config, policy, n_steps, with_energies).
+_window_trace_count = 0
+
+
+def _pic_run_window_impl(state, pstate, n_target, config: PICConfig,
+                         policy: SortPolicyConfig, n_steps: int, with_energies: bool):
+    global _window_trace_count
+    _window_trace_count += 1
+
+    def body(carry, i):
         state, pstate, halted, sorts, rebuilds = carry
         # The step always executes and its outputs are MASKED once the window
         # is halted, rather than branching with lax.cond: on the CPU backend a
         # conditional whose branch contains the whole step body costs ~2x the
         # step itself, while the masking selects are nearly free. Post-halt
         # steps therefore burn (discarded) FLOPs, but a halt ends the window
-        # at most once per capacity growth — a rare event.
+        # at most once per capacity growth — a rare event. The traced target
+        # length reuses the same halt flag: step i+1 onward is masked once
+        # i + 1 >= n_target, so post-growth and end-of-run tails (k < window)
+        # run the one compiled program instead of retracing per length; a
+        # per-step ys flag ("halt") distinguishes a genuine overflow halt
+        # from simple target exhaustion in the fetched bundle.
         new_state, new_pstate, halted_step, new_sorts, new_rebuilds, diag = _window_active_step(
             state, pstate, sorts, rebuilds, config, policy, with_energies
         )
+        diag = dict(diag, halt=halted_step)
         keep = lambda old, new: jax.tree.map(lambda o, n: jnp.where(halted, o, n), old, new)
         carry = (
             keep(state, new_state),
             keep(pstate, new_pstate),
-            halted | halted_step,
+            halted | halted_step | (i + 1 >= n_target),
             jnp.where(halted, sorts, new_sorts),
             jnp.where(halted, rebuilds, new_rebuilds),
         )
-        return carry, keep(_zeros_diag(), diag)
+        return carry, keep(dict(_zeros_diag(), halt=jnp.zeros((), bool)), diag)
 
     zero = jnp.zeros((), jnp.int32)
-    carry0 = (state, pstate, jnp.zeros((), bool), zero, zero)
+    carry0 = (state, pstate, n_target <= jnp.int32(0), zero, zero)
     (state, pstate, halted, sorts, rebuilds), per_step = lax.scan(
-        body, carry0, None, length=n_steps
+        body, carry0, jnp.arange(n_steps, dtype=jnp.int32)
     )
+    overflow_pending = jnp.any(per_step.pop("halt"))
     bundle = {
         "n_done": jnp.sum(per_step["active"]).astype(jnp.int32),
         "n_sorts": sorts,
         "n_rebuilds": rebuilds,
-        "overflow_pending": halted,
+        "overflow_pending": overflow_pending,
         "per_step": per_step,
     }
     return state, pstate, bundle
@@ -403,6 +420,30 @@ _pic_run_window_donated = partial(
 _fetch_bundle = jax.device_get
 
 
+def consume_window_bundle(host: dict, host_step: int, diagnostics_every: int,
+                          history: list) -> tuple[int, int, int]:
+    """Host-side accounting for a FETCHED window bundle, shared by the
+    single-device and distributed windowed drivers: returns
+    ``(n_done, n_sorts, n_rebuilds)`` and appends every
+    ``diagnostics_every``-th per-step diagnostics record to ``history``."""
+    n_done = int(host["n_done"])
+    if diagnostics_every:
+        per = host["per_step"]
+        for i in range(n_done):
+            step_abs = host_step + i + 1
+            if step_abs % diagnostics_every == 0:
+                fe = float(per["field_energy"][i])
+                ke = float(per["kinetic_energy"][i])
+                history.append({
+                    "step": step_abs,
+                    "field_energy": fe,
+                    "kinetic_energy": ke,
+                    "total_energy": fe + ke,
+                    "n_alive": int(per["n_alive"][i]),
+                })
+    return n_done, int(host["n_sorts"]), int(host["n_rebuilds"])
+
+
 def pic_run_window(
     state: PICState,
     policy_state: SortPolicyState,
@@ -412,10 +453,18 @@ def pic_run_window(
     policy: SortPolicyConfig | None = None,
     with_energies: bool = True,
     donate: bool = True,
+    n_target: int | jax.Array | None = None,
 ):
     """Run a window of `n_steps` PIC steps as ONE compiled `lax.scan` with
     zero per-step host syncs: step, in-graph re-sort policy, conditional
     global sort, and per-step diagnostics all stay on device.
+
+    ``n_steps`` is static (it sets the compiled scan length); ``n_target``
+    is a TRACED step count ``<= n_steps`` — steps past it are masked
+    pass-throughs (same trick as the overflow halt). Drivers always compile
+    the full ``window`` length and vary only ``n_target``, so post-growth
+    and end-of-run tails reuse one compiled program instead of retracing
+    per distinct length. ``None`` means run all ``n_steps``.
 
     Returns ``(state, policy_state, bundle)`` — all device-resident. The
     bundle holds window scalars (``n_done``, ``n_sorts``, ``n_rebuilds``,
@@ -434,8 +483,13 @@ def pic_run_window(
     Keep a copy (or pass ``donate=False``) if you need the pre-window state
     afterwards.
     """
+    if n_target is None:
+        n_target = n_steps
     fn = _pic_run_window_donated if donate else _pic_run_window_jit
-    return fn(state, policy_state, config, policy or SortPolicyConfig(), n_steps, with_energies)
+    return fn(
+        state, policy_state, jnp.asarray(n_target, jnp.int32),
+        config, policy or SortPolicyConfig(), n_steps, with_energies,
+    )
 
 
 class Simulation:
@@ -532,31 +586,23 @@ class Simulation:
             raise ValueError(f"window must be positive, got {window}")
         done = 0
         while done < n_steps:
+            # always compile the full `window` length; tails (end of run or
+            # post-growth re-entry) run the same program with the extra steps
+            # masked via the traced n_target — no per-length retrace
             k = min(window, n_steps - done)
             state, pstate, bundle = pic_run_window(
-                self.state, self.policy_state, self.config, k,
+                self.state, self.policy_state, self.config, window,
+                n_target=k,
                 policy=self.policy.config,
                 with_energies=bool(diagnostics_every),
             )
             self.state, self.policy_state = state, pstate
             host = _fetch_bundle(bundle)  # the single device->host sync of this window
-            n_done = int(host["n_done"])
-            self.sorts += int(host["n_sorts"])
-            self.rebuilds += int(host["n_rebuilds"])
-            if diagnostics_every:
-                per = host["per_step"]
-                for i in range(n_done):
-                    step_abs = self._host_step + i + 1
-                    if step_abs % diagnostics_every == 0:
-                        fe = float(per["field_energy"][i])
-                        ke = float(per["kinetic_energy"][i])
-                        self.history.append({
-                            "step": step_abs,
-                            "field_energy": fe,
-                            "kinetic_energy": ke,
-                            "total_energy": fe + ke,
-                            "n_alive": int(per["n_alive"][i]),
-                        })
+            n_done, n_sorts, n_rebuilds = consume_window_bundle(
+                host, self._host_step, diagnostics_every, self.history
+            )
+            self.sorts += n_sorts
+            self.rebuilds += n_rebuilds
             self._host_step += n_done
             done += n_done
             if bool(host["overflow_pending"]):

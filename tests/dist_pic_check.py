@@ -44,7 +44,9 @@ def main() -> None:
     with set_mesh_compat(mesh):
         for _ in range(steps):
             fields, pos, u, w, alive, slots, pslot, stats = step(fields, pos, u, w, alive, slots, pslot)
-    assert int(stats["migration_overflow"]) == 0
+    assert int(stats["mig_send_overflow"]) == 0
+    assert int(stats["mig_recv_dropped"]) == 0
+    assert int(stats["n_unmigrated"]) == 0
     assert int(stats["n_overflow"]) == 0
     assert int(stats["n_alive"]) == parts.n
 

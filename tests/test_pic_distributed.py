@@ -1,7 +1,10 @@
-"""Distributed PIC: shard_map domain decomposition equals single-device.
+"""Distributed PIC: shard_map domain decomposition equals single-device,
+migration correctness, and the DistSimulation windowed driver.
 
-Runs in a subprocess because it needs XLA_FLAGS host-device override, which
-must not leak into the rest of the suite (smoke tests see 1 device)."""
+Multi-device checks run in subprocesses because they need the XLA
+host-device-count override, which must not leak into the rest of the suite
+(smoke tests see 1 device). Guard validation and config errors are
+host-side and run inline."""
 
 import os
 import subprocess
@@ -10,14 +13,83 @@ from pathlib import Path
 
 import pytest
 
+from repro.pic import DistConfig, GridSpec
+from repro.pic.distributed import validate_shard_guard
 
-@pytest.mark.slow
-def test_distributed_pic_matches_single_device():
-    script = Path(__file__).parent / "dist_pic_check.py"
+
+def _run_check(script: str, *args: str, timeout: int = 900):
+    path = Path(__file__).parent / script
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
     res = subprocess.run(
-        [sys.executable, str(script)], env=env, capture_output=True, text=True, timeout=900
+        [sys.executable, str(path), *args], env=env, capture_output=True, text=True, timeout=timeout
     )
     assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
-    assert "OK" in res.stdout
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_distributed_pic_matches_single_device():
+    out = _run_check("dist_pic_check.py")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_mig_cap_overflow_regression():
+    """mig_cap=1 send overflow: boundary current uncorrupted (per-step
+    deposited-Jx identity), charge conserved once the stragglers land."""
+    out = _run_check("dist_mig_check.py")
+    assert "MIG_CAP_REGRESSION OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_dist_simulation_parity(order):
+    """50-step uniform-plasma parity vs the single-device windowed driver
+    at deposition orders 1-3 on a forced 8-device 4x2 mesh."""
+    out = _run_check("dist_sim_check.py", f"parity{order}")
+    assert f"PARITY{order} OK" in out
+
+
+@pytest.mark.slow
+def test_dist_simulation_parity_lwfa():
+    out = _run_check("dist_sim_check.py", "lwfa")
+    assert "LWFA OK" in out
+
+
+@pytest.mark.slow
+def test_dist_simulation_forced_growth():
+    """mig_cap=1 + capacity=8 hot plasma: both growth escape hatches fire
+    mid-run; nothing lost, parity within the looser tolerance."""
+    out = _run_check("dist_sim_check.py", "growth")
+    assert "GROWTH OK" in out
+
+
+@pytest.mark.slow
+def test_dist_simulation_single_fetch_and_compile():
+    """Exactly one device->host fetch per window (monkeypatched
+    _fetch_bundle) and one window compilation across mixed lengths."""
+    out = _run_check("dist_sim_check.py", "fetch")
+    assert "FETCH OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Host-side validation (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_guard_validation_rejects_small_shards():
+    """order 2/3 need guard 2: a 1-cell-wide shard would wrap halo slabs
+    into the neighbor's neighbor — must fail loudly, naming the minimum."""
+    with pytest.raises(ValueError, match="at least 2 cells"):
+        DistConfig(local_grid=GridSpec(shape=(1, 4, 8)), dt=0.1, order=2)
+    with pytest.raises(ValueError, match="guard width 2"):
+        validate_shard_guard(GridSpec(shape=(4, 1, 8)), order=3)
+    # boundary case: guard == extent is legal (the slab is the whole block)
+    DistConfig(local_grid=GridSpec(shape=(2, 2, 8)), dt=0.1, order=3)
+    DistConfig(local_grid=GridSpec(shape=(1, 4, 8)), dt=0.1, order=1)
+
+
+def test_dist_config_rejects_unknown_deposition():
+    with pytest.raises(ValueError, match="matrix"):
+        DistConfig(local_grid=GridSpec(shape=(4, 4, 8)), dt=0.1, deposition="scatter")

@@ -1,6 +1,7 @@
 """Device-resident windowed driver (pic_run_window) vs legacy host driver:
-bit-equivalence of sort decisions and final state, single-sync-per-window,
-capacity-growth state preservation, and host/device policy parity."""
+equivalence of sort decisions (exact) and final state (ulp-tight — see
+_assert_states_equal), single-sync-per-window, single-compilation window
+padding, capacity-growth state preservation, and host/device policy parity."""
 
 import dataclasses
 
@@ -65,15 +66,34 @@ def _lwfa_sim(*, capacity=24):
 
 
 def _assert_states_equal(a: Simulation, b: Simulation):
+    """Driver equivalence: EXACT for everything integer/structural (step,
+    capacity, weights, alive flags, bin assignment); float trajectories to
+    accumulated-rounding tolerance. The float slack exists because XLA:CPU
+    contracts FMAs differently depending on the surrounding loop structure —
+    the padded fixed-length window compiles the identical math to machine
+    code whose boris-push rounding differs from the per-step jit by ~1
+    ulp/step, compounding to tens-to-hundreds of ulps over a 50-step run
+    (rtol 2e-5 ~ 170 float32 ulps; atol covers near-zero field elements).
+    The drivers execute the same step sequence and the same sort decisions
+    (asserted exactly); a masking/padding bug perturbing physics beyond
+    rounding accumulation still fails."""
     assert int(a.state.step) == int(b.state.step)
     assert a.config.capacity == b.config.capacity
     for name in ("ex", "ey", "ez", "bx", "by", "bz"):
-        np.testing.assert_array_equal(
+        np.testing.assert_allclose(
             np.asarray(getattr(a.state.fields, name)),
             np.asarray(getattr(b.state.fields, name)),
+            rtol=2e-5, atol=1e-6,
             err_msg=f"field {name} diverged",
         )
-    for name in ("pos", "u", "w", "alive"):
+    for name in ("pos", "u"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(a.state.particles, name)),
+            np.asarray(getattr(b.state.particles, name)),
+            rtol=2e-5, atol=2e-5,
+            err_msg=f"particle attr {name} diverged",
+        )
+    for name in ("w", "alive"):
         np.testing.assert_array_equal(
             np.asarray(getattr(a.state.particles, name)),
             np.asarray(getattr(b.state.particles, name)),
@@ -85,7 +105,7 @@ def _assert_states_equal(a: Simulation, b: Simulation):
 @pytest.mark.parametrize("window", [8, 50])
 def test_windowed_matches_legacy_uniform(window):
     """50 steps on the uniform workload: same sort decisions, same final
-    state, bit for bit — including an uneven final window (window=8)."""
+    state — including an uneven final window (window=8, padded tail)."""
     host = _uniform_sim()
     wind = _uniform_sim()
     host.run(50, diagnostics_every=10)
@@ -103,7 +123,7 @@ def test_windowed_matches_legacy_uniform(window):
 
 def test_windowed_matches_legacy_lwfa():
     """50 steps of the LWFA workload (laser + density profile, dead vacuum
-    particles, strong migration): windowed == legacy bit for bit."""
+    particles, strong migration): windowed == legacy."""
     host = _lwfa_sim()
     wind = _lwfa_sim()
     host.run(50)
@@ -173,6 +193,20 @@ def test_windowed_single_sync_per_window(monkeypatch):
     assert sim.config.capacity == 32, "capacity grew — window count not comparable"
     assert len(calls) == 4
     assert int(sim.state.step) == 40
+
+
+def test_windowed_tail_single_compilation():
+    """Mixed window lengths compile ONCE: the window is padded to the static
+    `window` length and tails (end-of-run k < window) run the same program
+    with the extra steps masked via the traced n_target. Before the padding,
+    50 steps at window=8 traced the impl twice (k=8 and the k=2 tail)."""
+    sim = _uniform_sim(shape=(8, 8, 6))  # unique shape => fresh jit cache entry
+    before = simulation._window_trace_count
+    sim.run(50, window=8)  # 6 full windows + a tail of 2
+    assert int(sim.state.step) == 50
+    assert sim.config.capacity == 16, "capacity grew — trace count not comparable"
+    traces = simulation._window_trace_count - before
+    assert traces == 1, f"expected one window compilation, got {traces}"
 
 
 def test_pic_run_window_direct():
