@@ -8,7 +8,11 @@ evaluation per step) against the device-resident windowed driver
 psum-reduced in-graph policy, one fetched bundle per window):
 
     PYTHONPATH=src python -m benchmarks.run --only dist_sweep \
-        --dist-json BENCH_dist.json
+        --dist-json BENCH_dist.json [--scenario uniform]
+
+The workload is spec-built from the scenario registry (`MeshSpec` selects
+the distributed driver through the same `make_simulation` facade) and the
+result row records the exact serialized `SimSpec` it measured.
 
 The forced host-device override must be set before jax initializes, so this
 module re-executes itself in a subprocess when the current process does not
@@ -17,8 +21,9 @@ identical policy thresholds (wall-clock trigger disabled); the measured
 delta is loop control flow: per-step dispatch of the sharded program +
 device->host stat syncs vs one compiled window.
 
-Schema: {"meta": {...}, "results": {"incremental": {host_us, device_us,
-speedup}}, "acceptance": {"dist_uniform_order2_speedup": x}}
+Schema: {"meta": {..., "scenario": name}, "results": {"incremental":
+{host_us, device_us, speedup, spec}}, "acceptance":
+{"dist_uniform_order2_speedup": x}}
 """
 
 from __future__ import annotations
@@ -46,12 +51,12 @@ def _needs_respawn() -> bool:
     return jax.device_count() < MESH_SHAPE[0] * MESH_SHAPE[1]
 
 
-def _respawn(json_path: str | None) -> None:
+def _respawn(json_path: str | None, scenario_name: str) -> None:
     n = MESH_SHAPE[0] * MESH_SHAPE[1]
     env = dict(os.environ)
     env[_CHILD_ENV] = "1"
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n} " + env.get("XLA_FLAGS", "")
-    cmd = [sys.executable, "-m", "benchmarks.dist_sweep"]
+    cmd = [sys.executable, "-m", "benchmarks.dist_sweep", "--scenario", scenario_name]
     if json_path:
         cmd += ["--json", json_path]
     res = subprocess.run(cmd, env=env)
@@ -59,20 +64,23 @@ def _respawn(json_path: str | None) -> None:
         raise RuntimeError(f"dist_sweep subprocess failed with code {res.returncode}")
 
 
-def _make_sim():
-    import jax
-
+def _make_spec(scenario_name: str):
+    from repro.api import scenario
     from repro.core import SortPolicyConfig
-    from repro.pic import DistConfig, DistSimulation, FieldState, GridSpec, uniform_plasma
 
-    grid = GridSpec(shape=GRID)
-    parts = uniform_plasma(
-        jax.random.PRNGKey(0), grid, ppc_each_dim=PPC_EACH_DIM, density=1.0, u_thermal=0.05
+    return scenario(
+        scenario_name,
+        grid=GRID,
+        ppc_each_dim=PPC_EACH_DIM,
+        u_thermal=0.05,
+        perturb=None,  # plain thermal plasma: the workload every BENCH_dist.json measured
+        order=ORDER,
+        capacity=16,
+        steps=STEPS,
+        window=WINDOW,
+        mesh=MESH_SHAPE,
+        policy=SortPolicyConfig(sort_trigger_perf_enable=False),
     )
-    local = GridSpec(shape=(GRID[0] // MESH_SHAPE[0], GRID[1] // MESH_SHAPE[1], GRID[2]), dx=grid.dx)
-    dcfg = DistConfig(local_grid=local, dt=grid.cfl_dt(0.5), order=ORDER, capacity=16)
-    policy = SortPolicyConfig(sort_trigger_perf_enable=False)
-    return DistSimulation(FieldState.zeros(grid.shape), parts, dcfg, mesh_shape=MESH_SHAPE, policy=policy)
 
 
 def _loop_thunk(sim, window: int | None):
@@ -105,12 +113,14 @@ def _loop_thunk(sim, window: int | None):
     return thunk
 
 
-def collect(*, label: str = "dist_sweep") -> dict:
+def collect(*, label: str = "dist_sweep", scenario_name: str = "uniform") -> dict:
     import jax
 
     from benchmarks.common import emit, time_grid
+    from repro.api import make_simulation
 
-    sim = _make_sim()
+    spec = _make_spec(scenario_name)
+    sim = make_simulation(spec)
     row = time_grid({
         "host": _loop_thunk(sim, None),
         "device": _loop_thunk(sim, WINDOW),
@@ -122,6 +132,7 @@ def collect(*, label: str = "dist_sweep") -> dict:
     n = GRID[0] * GRID[1] * GRID[2] * PPC_EACH_DIM[0] * PPC_EACH_DIM[1] * PPC_EACH_DIM[2]
     return {
         "meta": {
+            "scenario": scenario_name,
             "grid": list(GRID),
             "mesh": list(MESH_SHAPE),
             "ppc_each_dim": list(PPC_EACH_DIM),
@@ -139,7 +150,8 @@ def collect(*, label: str = "dist_sweep") -> dict:
                 "in-graph policy, one fetched bundle per window); identical step and "
                 "sort decisions (perf trigger disabled) on both. 8 emulated host "
                 "devices on one CPU: collective + dispatch costs are real, kernel "
-                "parallelism is not — treat the trajectory, not one run, as signal."
+                "parallelism is not — treat the trajectory, not one run, as signal. "
+                "The result row embeds the exact serialized SimSpec it measured."
             ),
         },
         "results": {
@@ -147,31 +159,36 @@ def collect(*, label: str = "dist_sweep") -> dict:
                 "host_us": row["host"],
                 "device_us": row["device"],
                 "speedup": speedup,
+                "spec": spec.to_dict(),
             },
         },
-        "acceptance": {"dist_uniform_order2_speedup": speedup},
+        # keyed by scenario so non-default workloads never masquerade as the
+        # uniform baseline in the perf trajectory
+        "acceptance": {f"dist_{scenario_name}_order2_speedup": speedup},
     }
 
 
-def write_json(path: str) -> None:
+def write_json(path: str, *, scenario_name: str = "uniform") -> None:
     if _needs_respawn():
-        _respawn(path)
+        _respawn(path, scenario_name)
         return
-    payload = collect()
+    payload = collect(scenario_name=scenario_name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"wrote {path}")
 
 
-def main() -> None:
+def main(*, scenario_name: str = "uniform") -> None:
     if _needs_respawn():
-        _respawn(None)
+        _respawn(None, scenario_name)
         return
-    collect()
+    collect(scenario_name=scenario_name)
 
 
 if __name__ == "__main__":
-    if "--json" in sys.argv:
-        write_json(sys.argv[sys.argv.index("--json") + 1])
+    argv = sys.argv[1:]
+    name = argv[argv.index("--scenario") + 1] if "--scenario" in argv else "uniform"
+    if "--json" in argv:
+        write_json(argv[argv.index("--json") + 1], scenario_name=name)
     else:
-        main()
+        main(scenario_name=name)

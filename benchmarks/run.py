@@ -49,6 +49,13 @@ def main() -> None:
         help="also write the distributed-loop driver sweep (per-step vs "
         "windowed shard_map, forced 8 host devices) as JSON (BENCH_dist.json)",
     )
+    ap.add_argument(
+        "--scenario",
+        metavar="NAME",
+        default="uniform",
+        help="registered scenario the loop-driver sweeps run on (sim_loop_sweep / "
+        "dist_sweep); the BENCH_* JSON records the exact serialized SimSpec measured",
+    )
     args = ap.parse_args()
 
     mods = args.only or MODULES
@@ -75,15 +82,18 @@ def main() -> None:
             if name == "sim_loop_sweep" and args.sim_json:
                 from benchmarks.sim_loop_sweep import write_json
 
-                write_json(args.sim_json)
+                write_json(args.sim_json, scenario_name=args.scenario)
                 continue
             if name == "dist_sweep" and args.dist_json:
                 from benchmarks.dist_sweep import write_json
 
-                write_json(args.dist_json)
+                write_json(args.dist_json, scenario_name=args.scenario)
                 continue
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            if name in ("sim_loop_sweep", "dist_sweep"):
+                mod.main(scenario_name=args.scenario)
+            else:
+                mod.main()
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

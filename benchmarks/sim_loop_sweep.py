@@ -1,21 +1,26 @@
 """Simulation-loop driver sweep: host-driven vs device-resident -> BENCH_sim.json.
 
-Times `Simulation.run` end-to-end on the uniform-plasma workload with the
-legacy host-driven per-step loop (several device->host syncs per step)
-against the device-resident windowed driver (`pic_run_window`: one compiled
-K-step `lax.scan`, one fetched bundle per window), across the paper's sort
-modes:
+Times `Simulation.run` end-to-end with the legacy host-driven per-step loop
+(several device->host syncs per step) against the device-resident windowed
+driver (`pic_run_window`: one compiled K-step `lax.scan`, one fetched
+bundle per window), across the paper's sort modes:
 
     PYTHONPATH=src python -m benchmarks.run --only sim_loop_sweep \
-        --sim-json BENCH_sim.json
+        --sim-json BENCH_sim.json [--scenario uniform]
+
+The workload is spec-built from the scenario registry (default
+``uniform``, shrunk to the sweep's loop-overhead geometry); every result
+row records the exact serialized `SimSpec` it measured, so the BENCH_*
+perf trajectory carries its own provenance.
 
 Both drivers run the identical jitted step and identical policy thresholds;
 the wall-clock perf trigger is disabled so sort decisions (and hence work)
 match bit for bit — the measured delta is purely loop control flow:
 dispatch, host syncs, and host-side policy evaluation.
 
-Schema: {"meta": {...workload/backend...},
-         "results": {"<sort_mode>": {"host_us", "device_us", "speedup"}},
+Schema: {"meta": {...workload/backend..., "scenario": name},
+         "results": {"<sort_mode>": {"host_us", "device_us", "speedup",
+                                     "spec": {...serialized SimSpec...}}},
          "acceptance": {"uniform_order2_incremental_speedup": x}}
 """
 
@@ -26,8 +31,9 @@ import json
 import jax
 
 from benchmarks.common import emit, time_grid
+from repro.api import make_simulation, scenario
 from repro.core import ResortPolicy, SortPolicyConfig, policy_init
-from repro.pic import FieldState, GridSpec, PICConfig, Simulation, uniform_plasma
+from repro.pic import Simulation
 
 # Small workload on purpose: this sweep measures LOOP CONTROL overhead
 # (python dispatch, device->host syncs, host-side policy) — the thing the
@@ -44,23 +50,27 @@ SORT_MODES = ("incremental", "rebuild", "global", "none")
 ROUNDS = 11
 
 
-def _make_sim(sort_mode: str) -> Simulation:
-    grid = GridSpec(shape=GRID)
-    parts = uniform_plasma(
-        jax.random.PRNGKey(0), grid, ppc_each_dim=PPC_EACH_DIM, density=1.0, u_thermal=0.05
-    )
+def _make_spec(scenario_name: str, sort_mode: str):
     if sort_mode == "none":
-        dep, gat = "rhocell", "scatter"  # binless path, as in the paper's ablation
+        dep = "rhocell"  # binless path, as in the paper's ablation
     else:
-        dep, gat = "matrix", "matrix"
-    cfg = PICConfig(
-        grid=grid, dt=grid.cfl_dt(0.5), order=ORDER, deposition=dep, gather=gat,
-        sort_mode=sort_mode, capacity=16,
+        dep = "matrix"
+    return scenario(
+        scenario_name,
+        grid=GRID,
+        ppc_each_dim=PPC_EACH_DIM,
+        u_thermal=0.05,
+        perturb=None,  # plain thermal plasma: the workload every BENCH_sim.json measured
+        order=ORDER,
+        deposition=dep,
+        sort=sort_mode,
+        capacity=16,
+        steps=STEPS,
+        window=WINDOW,
+        # wall-clock trigger off: both drivers make identical sort decisions,
+        # so the timing delta is purely loop control flow
+        policy=SortPolicyConfig(sort_trigger_perf_enable=False),
     )
-    # wall-clock trigger off: both drivers make identical sort decisions, so
-    # the timing delta is purely loop control flow
-    policy = SortPolicyConfig(sort_trigger_perf_enable=False)
-    return Simulation(FieldState.zeros(grid.shape), parts, cfg, policy=policy)
 
 
 def _loop_thunk(sim: Simulation, window: int | None, diagnostics_every: int = 0):
@@ -84,11 +94,12 @@ def _loop_thunk(sim: Simulation, window: int | None, diagnostics_every: int = 0)
     return thunk
 
 
-def collect(*, label: str = "sim_loop") -> dict:
+def collect(*, label: str = "sim_loop", scenario_name: str = "uniform") -> dict:
     """Run the sweep, emit CSV rows, and return the JSON-able payload."""
-    results: dict[str, dict[str, float]] = {}
+    results: dict[str, dict] = {}
     for mode in SORT_MODES:
-        sim = _make_sim(mode)
+        spec = _make_spec(scenario_name, mode)
+        sim = make_simulation(spec)
         row = time_grid({
             "host": _loop_thunk(sim, None),
             "device": _loop_thunk(sim, WINDOW),
@@ -98,6 +109,7 @@ def collect(*, label: str = "sim_loop") -> dict:
             "host_us": row["host"],
             "device_us": row["device"],
             "speedup": speedup,
+            "spec": spec.to_dict(),
         }
         emit(f"{label}/{mode}/host", row["host"], f"{STEPS} steps")
         emit(f"{label}/{mode}/device", row["device"], f"window={WINDOW} speedup={speedup:.2f}x")
@@ -105,7 +117,8 @@ def collect(*, label: str = "sim_loop") -> dict:
     # per-step energy diagnostics: the legacy loop syncs diagnostics() every
     # step, the windowed loop accumulates them in-graph and fetches one
     # bundle — the on-device diagnostics path of the scan driver
-    sim = _make_sim("incremental")
+    spec = _make_spec(scenario_name, "incremental")
+    sim = make_simulation(spec)
     row = time_grid({
         "host": _loop_thunk(sim, None, diagnostics_every=1),
         "device": _loop_thunk(sim, WINDOW, diagnostics_every=1),
@@ -115,6 +128,7 @@ def collect(*, label: str = "sim_loop") -> dict:
         "host_us": row["host"],
         "device_us": row["device"],
         "speedup": speedup,
+        "spec": spec.to_dict(),
     }
     emit(f"{label}/incremental_diag/host", row["host"], f"{STEPS} steps, diagnostics_every=1")
     emit(f"{label}/incremental_diag/device", row["device"], f"window={WINDOW} speedup={speedup:.2f}x")
@@ -122,6 +136,7 @@ def collect(*, label: str = "sim_loop") -> dict:
     n = GRID[0] * GRID[1] * GRID[2] * PPC_EACH_DIM[0] * PPC_EACH_DIM[1] * PPC_EACH_DIM[2]
     return {
         "meta": {
+            "scenario": scenario_name,
             "grid": list(GRID),
             "ppc_each_dim": list(PPC_EACH_DIM),
             "n_particles": n,
@@ -134,26 +149,29 @@ def collect(*, label: str = "sim_loop") -> dict:
                 "drift-robust on shared CPUs); host = legacy per-step loop with "
                 "host-side policy + per-step syncs, device = pic_run_window scan "
                 "with in-graph policy + one fetched bundle per window; identical "
-                "jitted step and sort decisions (perf trigger disabled) on both"
+                "jitted step and sort decisions (perf trigger disabled) on both. "
+                "Each result row embeds the exact serialized SimSpec it measured."
             ),
         },
         "results": results,
+        # acceptance keys carry the scenario name so a --scenario lwfa run can
+        # never masquerade as the uniform baseline in the perf trajectory
         "acceptance": {
-            "uniform_order2_incremental_speedup": results["incremental"]["speedup"],
-            "uniform_order2_incremental_diag_speedup": results["incremental_diag_every_step"]["speedup"],
+            f"{scenario_name}_order2_incremental_speedup": results["incremental"]["speedup"],
+            f"{scenario_name}_order2_incremental_diag_speedup": results["incremental_diag_every_step"]["speedup"],
         },
     }
 
 
-def write_json(path: str) -> None:
-    payload = collect()
+def write_json(path: str, *, scenario_name: str = "uniform") -> None:
+    payload = collect(scenario_name=scenario_name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"wrote {path}")
 
 
-def main() -> None:
-    collect()
+def main(*, scenario_name: str = "uniform") -> None:
+    collect(scenario_name=scenario_name)
 
 
 if __name__ == "__main__":

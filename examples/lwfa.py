@@ -2,6 +2,9 @@
 gaussian pulse drives a wake in a density-profiled plasma; the dense bunches
 and strong migration exercise the GPMA sorter + adaptive resort policy.
 
+Built from the scenario registry — the same `scenario("lwfa")` spec the
+launcher, benchmarks, and CI smoke use:
+
     PYTHONPATH=src python examples/lwfa.py [--steps 60]
     PYTHONPATH=src python examples/lwfa.py --mesh 4x2   # domain-decomposed
 """
@@ -18,14 +21,10 @@ _MESH = peek_mesh_argv()
 if _MESH is not None:
     force_host_devices(_MESH[0] * _MESH[1])
 
-import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.pic import (  # noqa: E402
-    DistConfig, DistSimulation, FieldState, GridSpec, LaserSpec, PICConfig, Simulation,
-    inject_laser, profiled_plasma,
-)
+from repro.api import make_simulation, scenario  # noqa: E402
 
 
 def main() -> None:
@@ -37,35 +36,18 @@ def main() -> None:
                     help="run domain-decomposed on an SXxSY device mesh (DistSimulation)")
     args = ap.parse_args()
 
-    grid = GridSpec(shape=(8, 8, 64))
-    density = lambda z: jnp.where(z > 20.0, 1.0, 0.0)
-    particles = profiled_plasma(
-        jax.random.PRNGKey(0), grid, ppc_each_dim=(2, 2, 2), density_fn=density, u_thermal=0.01
-    )
-    laser = LaserSpec(a0=2.0, wavelength=8.0, waist=6.0, duration=8.0, z_center=10.0)
-    fields = inject_laser(FieldState.zeros(grid.shape), grid, laser)
-
-    if _MESH is not None:
-        sx, sy = _MESH
-        local = GridSpec(shape=(grid.shape[0] // sx, grid.shape[1] // sy, grid.shape[2]), dx=grid.dx)
-        dcfg = DistConfig(local_grid=local, dt=0.35, order=1, capacity=48)
-        sim = DistSimulation(fields, particles, dcfg, mesh_shape=_MESH)
-        mesh_note = f", mesh {sx}x{sy}"
-    else:
-        cfg = PICConfig(grid=grid, dt=0.35, order=1, deposition="matrix", gather="matrix",
-                        sort_mode="incremental", capacity=48)
-        sim = Simulation(fields, particles, cfg)
-        mesh_note = ""
-    print(f"LWFA: grid {grid.shape}, {int(jnp.sum(particles.alive))} plasma particles, "
-          f"a0={laser.a0}{mesh_note}")
+    spec = scenario("lwfa", steps=args.steps, window=args.window, mesh=_MESH)
+    sim = make_simulation(spec)
+    mesh_note = f", mesh {_MESH[0]}x{_MESH[1]}" if _MESH is not None else ""
+    print(f"LWFA: grid {spec.grid.shape}, {sim.diagnostics()['n_alive']} plasma particles, "
+          f"a0={spec.laser.a0}{mesh_note}")
 
     # each print block runs as one device-resident scan window (no per-step
     # host syncs); the field snapshot is read at the window boundary
     block = args.window if args.window > 0 else 10
-    window = args.window if args.window > 0 else None
     done = 0
     while done < args.steps:
-        sim.run(min(block, args.steps - done), window=window)
+        sim.run(min(block, args.steps - done))
         done += min(block, args.steps - done)
         d = sim.diagnostics()
         # wake diagnostic: on-axis longitudinal field

@@ -1,0 +1,45 @@
+"""Public API layer: declarative specs, the scenario registry, and the one
+driver facade over single-device and distributed runs.
+
+    from repro.api import scenario, make_simulation
+    sim = make_simulation(scenario("lwfa", steps=100, mesh="2x2"))
+    sim.run()
+    print(sim.diagnostics())
+    sim.save("ckpt")                    # full pytree incl. SortPolicyState
+    sim2 = load_simulation("ckpt")      # rebuild + continue elsewhere
+
+See docs/api.md.
+"""
+
+from repro.api.facade import (  # noqa: F401
+    SimDriver,
+    build_fields,
+    build_particles,
+    dist_config,
+    load_simulation,
+    make_simulation,
+    pic_config,
+    restore_simulation,
+    save_simulation,
+)
+from repro.api.registry import (  # noqa: F401
+    apply_overrides,
+    register_scenario,
+    scenario,
+    scenario_names,
+    two_stream_growth_rate,
+    weibel_growth_rate,
+)
+from repro.api.spec import (  # noqa: F401
+    DepositionSpec,
+    DriftSpec,
+    MeshSpec,
+    PerturbSpec,
+    PlasmaSpec,
+    ProfileSpec,
+    RunSpec,
+    SimSpec,
+    SortSpec,
+)
+from repro.pic.grid import GridSpec  # noqa: F401
+from repro.pic.laser import LaserSpec  # noqa: F401

@@ -1,0 +1,405 @@
+"""One driver facade over single-device and distributed runs.
+
+`make_simulation(spec)` is the single construction path of the public API:
+it builds fields and particles from the declarative `SimSpec`, derives the
+driver config, and returns either the windowed single-device driver
+(`repro.pic.Simulation`, when ``spec.mesh.shape is None``) or the
+domain-decomposed shard_map driver (`repro.pic.DistSimulation`, when a mesh
+is named) — both satisfying the same `SimDriver` protocol:
+
+    run(n_steps=None, *, diagnostics_every=None, window=...)   spec defaults
+    diagnostics() -> dict                                      shared schema
+    state                                                      device pytree
+    save(path) / restore(path)                                 checkpointing
+
+Checkpoints are a directory (atomic tmp+rename) holding the full device
+pytree — fields, particles, bin layout, AND the in-graph `SortPolicyState`
+— plus a JSON sidecar with the serialized spec, grown capacities, and host
+counters, so `load_simulation(path)` rebuilds the driver and continues
+bit-for-bit where the saved run stopped (tests/test_api.py,
+tests/dist_sim_check.py 'checkpoint').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.api.spec import SimSpec
+from repro.checkpoint.checkpoint import _flatten_with_names
+from repro.pic.grid import FieldState, GridSpec
+from repro.pic.laser import inject_laser
+from repro.pic.plasma import (
+    ParticleState,
+    apply_counter_drift,
+    perturb_velocity,
+    profiled_plasma,
+    uniform_plasma,
+)
+
+__all__ = [
+    "SimDriver",
+    "build_fields",
+    "build_particles",
+    "dist_config",
+    "load_simulation",
+    "make_simulation",
+    "pic_config",
+    "restore_simulation",
+    "save_simulation",
+]
+
+
+@runtime_checkable
+class SimDriver(Protocol):
+    """What every driver returned by `make_simulation` provides. ``state``
+    is the device-resident simulation pytree (structure is driver-specific:
+    `PICState` for the single-device driver, a dict of shard-local arrays
+    for the distributed one) — `save`/`restore` checkpoint it together with
+    the policy state and host counters."""
+
+    spec: SimSpec | None
+    sorts: int
+    rebuilds: int
+    history: list
+
+    def run(self, n_steps: int | None = None, *, diagnostics_every: int | None = None,
+            window=...) -> None: ...
+    def diagnostics(self) -> dict: ...
+    @property
+    def state(self): ...
+    def save(self, path: str) -> None: ...
+    def restore(self, path: str) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# Spec -> initial conditions
+# ---------------------------------------------------------------------------
+
+
+def build_particles(spec: SimSpec) -> ParticleState:
+    """PlasmaSpec -> ParticleState: lattice base (uniform or profiled),
+    then counter-streaming drift, then the velocity seed."""
+    import jax.numpy as jnp
+
+    p = spec.plasma
+    key = jax.random.PRNGKey(p.seed)
+    if p.profile is not None:
+        z_on = p.profile.z_on
+        density = p.density
+        parts = profiled_plasma(
+            key, spec.grid, ppc_each_dim=p.ppc_each_dim,
+            density_fn=lambda z: jnp.where(z > z_on, density, 0.0),
+            u_thermal=p.u_thermal, jitter=p.jitter,
+        )
+    else:
+        parts = uniform_plasma(
+            key, spec.grid, ppc_each_dim=p.ppc_each_dim, density=p.density,
+            u_thermal=p.u_thermal, jitter=p.jitter,
+        )
+    if p.drift is not None:
+        parts = apply_counter_drift(parts, u_drift=p.drift.u, axis=p.drift.axis)
+    if p.perturb is not None:
+        pe = p.perturb
+        parts = perturb_velocity(
+            parts, axis=pe.v_axis, amplitude=pe.amplitude, mode=pe.mode,
+            grid=spec.grid, k_axis=None if pe.k_axis < 0 else pe.k_axis,
+        )
+    return parts
+
+
+def build_fields(spec: SimSpec) -> FieldState:
+    """Zero fields, plus the laser pulse when the spec names one."""
+    fields = FieldState.zeros(spec.grid.shape)
+    if spec.laser is not None:
+        fields = inject_laser(fields, spec.grid, spec.laser)
+    return fields
+
+
+# ---------------------------------------------------------------------------
+# Spec -> driver configs
+# ---------------------------------------------------------------------------
+
+
+def pic_config(spec: SimSpec):
+    """Derive the single-device `PICConfig` from a spec."""
+    from repro.pic.simulation import PICConfig
+
+    d = spec.deposition
+    return PICConfig(
+        grid=spec.grid,
+        dt=spec.dt,
+        order=d.order,
+        deposition=d.mode,
+        gather=d.resolved_gather,
+        sort_mode=spec.sort.mode,
+        charge=spec.charge,
+        mass=spec.mass,
+        ckc_beta=spec.ckc_beta,
+        capacity=spec.sort.resolved_capacity(spec.plasma.ppc),
+        use_pallas=d.use_pallas,
+    )
+
+
+def dist_config(spec: SimSpec):
+    """Derive the distributed `DistConfig` (per-shard local grid) from a
+    spec with a mesh. SimSpec.__post_init__ already validated divisibility
+    and the bin-based deposition/sort requirements."""
+    from repro.pic.distributed import DistConfig
+
+    if spec.mesh.shape is None:
+        raise ValueError("dist_config needs a spec with mesh.shape set")
+    sx, sy = spec.mesh.shape
+    local = GridSpec(
+        shape=(spec.grid.shape[0] // sx, spec.grid.shape[1] // sy, spec.grid.shape[2]),
+        dx=spec.grid.dx,
+    )
+    return DistConfig(
+        local_grid=local,
+        dt=spec.dt,
+        order=spec.deposition.order,
+        deposition=spec.deposition.mode,
+        use_pallas=spec.deposition.use_pallas,
+        charge=spec.charge,
+        mass=spec.mass,
+        capacity=spec.sort.resolved_capacity(spec.plasma.ppc),
+        mig_cap=spec.mesh.mig_cap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+def make_simulation(spec: SimSpec, *, fields: FieldState | None = None,
+                    particles: ParticleState | None = None) -> "SimDriver":
+    """Build the driver a spec describes: `Simulation` for
+    ``MeshSpec(None)``, `DistSimulation` for ``MeshSpec("SXxSY")``.
+
+    ``fields``/``particles`` override the spec-built initial conditions
+    (e.g. benchmark states prepared elsewhere); the spec still provides the
+    config, policy, and run defaults.
+    """
+    from repro.pic.dist_simulation import DistSimulation
+    from repro.pic.simulation import Simulation
+
+    fields = build_fields(spec) if fields is None else fields
+    particles = build_particles(spec) if particles is None else particles
+    policy = spec.sort.policy
+
+    if spec.mesh.shape is None:
+        return Simulation(fields, particles, pic_config(spec), policy=policy, _spec=spec)
+
+    needed = spec.mesh.n_devices
+    if jax.device_count() < needed:
+        raise RuntimeError(
+            f"spec mesh {spec.mesh.shape} needs {needed} devices but jax sees "
+            f"{jax.device_count()}. Force emulated host devices BEFORE importing jax "
+            "(repro.launch.devices.force_host_devices, or the --mesh/--spec peek in "
+            "repro.launch.pic_run)."
+        )
+    return DistSimulation(
+        fields, particles, dist_config(spec),
+        mesh_shape=spec.mesh.shape,
+        n_local=spec.mesh.n_local or None,
+        policy=policy,
+        _spec=spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing (save / restore / load)
+# ---------------------------------------------------------------------------
+
+_ARRAYS = "arrays.npz"
+_META = "checkpoint.json"
+
+
+def _write_dir(path: str, tree, meta: dict) -> None:
+    """Atomic checkpoint directory write (tmp + rename, like
+    repro.checkpoint.CheckpointManager)."""
+    names, leaves, _ = _flatten_with_names(tree)
+    host = [np.asarray(x) for x in leaves]
+    tmp = path + f".tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, _ARRAYS), **{f"a{i}": a for i, a in enumerate(host)})
+    with open(os.path.join(tmp, _META), "w") as f:
+        json.dump(dict(meta, names=names), f, indent=1)
+    # overwrite without a window where NO checkpoint exists: move the old
+    # one aside, rename the new one in, only then delete the old — a crash
+    # in between leaves either the old or the new checkpoint intact
+    old = path + f".old-{os.getpid()}"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    had_old = os.path.exists(path)
+    if had_old:
+        os.rename(path, old)
+    os.rename(tmp, path)
+    if had_old:
+        shutil.rmtree(old)
+
+
+def _read_meta(path: str) -> dict:
+    with open(os.path.join(path, _META)) as f:
+        return json.load(f)
+
+
+def _read_dir(path: str) -> tuple[dict, dict]:
+    """-> (name -> numpy array, meta dict)."""
+    meta = _read_meta(path)
+    data = np.load(os.path.join(path, _ARRAYS))
+    arrays = {name: data[f"a{i}"] for i, name in enumerate(meta["names"])}
+    return arrays, meta
+
+
+def _restore_tree(template, arrays: dict):
+    """Rebuild `template`'s structure with the checkpointed leaves (matched
+    by flattened name; shapes may differ from the template, e.g. after
+    capacity growth — the saved shapes win)."""
+    names, _, treedef = _flatten_with_names(template)
+    missing = [n for n in names if n not in arrays]
+    if missing:
+        raise ValueError(f"checkpoint is missing leaves {missing[:4]}... ({len(missing)} total)")
+    import jax.numpy as jnp
+
+    return treedef.unflatten([jnp.asarray(arrays[n]) for n in names])
+
+
+def _host_policy_scalars(sim) -> dict:
+    st = sim.policy.state
+    return {
+        "steps_since_sort": st.steps_since_sort,
+        "rebuilds_since_sort": st.rebuilds_since_sort,
+        "baseline_perf": st.baseline_perf,
+        "perf_ema": st.perf_ema,
+    }
+
+
+def _restore_host_policy(sim, scal: dict) -> None:
+    st = sim.policy.state
+    st.steps_since_sort = scal["steps_since_sort"]
+    st.rebuilds_since_sort = scal["rebuilds_since_sort"]
+    st.baseline_perf = scal["baseline_perf"]
+    st.perf_ema = scal["perf_ema"]
+
+
+def save_simulation(sim, path: str) -> None:
+    """Checkpoint a driver (single-device or distributed) to `path`."""
+    from repro.pic.dist_simulation import DistSimulation
+
+    distributed = isinstance(sim, DistSimulation)
+    scalars = {
+        "sorts": sim.sorts,
+        "rebuilds": sim.rebuilds,
+        "host_step": sim._host_step,
+        "capacity": sim.config.capacity,
+        "host_policy": _host_policy_scalars(sim),
+        "history": sim.history,
+    }
+    if distributed:
+        scalars.update(
+            mig_cap=sim.config.mig_cap,
+            n_local=sim.n_local,
+            mesh_shape=list(sim.spec.mesh.shape) if sim.spec is not None else [sim.sx, sim.sy],
+            growths=sim.growths,
+            mig_recv_dropped=sim.mig_recv_dropped,
+        )
+    tree = {"state": sim.state, "policy_state": sim.policy_state}
+    meta = {
+        "driver": "dist" if distributed else "single",
+        "spec": None if sim.spec is None else sim.spec.to_dict(),
+        "scalars": scalars,
+    }
+    _write_dir(path, tree, meta)
+
+
+def restore_simulation(sim, path: str) -> None:
+    """Restore a checkpoint into an existing, compatible driver (same spec
+    shape: particle counts and mesh must match; capacity/mig_cap/n_local are
+    taken from the checkpoint)."""
+    from repro.pic.dist_simulation import DistSimulation
+
+    arrays, meta = _read_dir(path)
+    scal = meta["scalars"]
+    distributed = isinstance(sim, DistSimulation)
+    if distributed != (meta["driver"] == "dist"):
+        raise ValueError(f"checkpoint was written by the {meta['driver']!r} driver")
+    # structural guards: installing arrays of the wrong global shape would
+    # otherwise surface much later as an opaque jit shape/sharding error
+    if distributed and list(scal["mesh_shape"]) != [sim.sx, sim.sy]:
+        raise ValueError(
+            f"checkpoint was written on a {scal['mesh_shape'][0]}x{scal['mesh_shape'][1]} "
+            f"mesh but this driver runs {sim.sx}x{sim.sy}"
+        )
+    template_names, template_leaves, _ = _flatten_with_names(
+        {"state": sim.state, "policy_state": sim.policy_state}
+    )
+    for name, leaf in zip(template_names, template_leaves):
+        if name not in arrays:
+            continue  # _restore_tree reports missing leaves with the full list
+        saved, tmpl = arrays[name].shape, tuple(leaf.shape)
+        # capacity and (distributed) n_local legitimately grow mid-run and
+        # take their sizes from the checkpoint; every OTHER dimension is a
+        # structural invariant of the driver (grid blocks, particle count,
+        # n_cells, mesh layout) — install-then-crash-inside-jit is the
+        # failure mode this guard preempts
+        if "fields" in name:
+            ok = saved == tmpl        # grid blocks: exact invariants
+        elif distributed:
+            if "slots" in name:       # (sx, sy, n_cells, capacity)
+                ok = saved[:3] == tmpl[:3]
+            else:                     # particle arrays: (sx, sy, n_local, ...)
+                ok = saved[:2] == tmpl[:2] and saved[3:] == tmpl[3:]
+        elif "slots" in name and "particle_slot" not in name:
+            ok = saved[:1] == tmpl[:1]  # (n_cells, capacity)
+        else:
+            ok = saved == tmpl
+        if not ok:
+            raise ValueError(
+                f"checkpoint leaf {name} has shape {saved} but this driver implies "
+                f"{tmpl} — the checkpoint belongs to a different grid/mesh/plasma"
+            )
+
+    if distributed:
+        sim.config = dataclasses.replace(
+            sim.config, capacity=scal["capacity"], mig_cap=scal["mig_cap"]
+        )
+        sim.n_local = scal["n_local"]
+        sim.growths = dict(scal["growths"])
+        sim.mig_recv_dropped = scal["mig_recv_dropped"]
+        sim._fns.clear()
+    else:
+        sim.config = dataclasses.replace(sim.config, capacity=scal["capacity"])
+
+    restored = _restore_tree({"state": sim.state, "policy_state": sim.policy_state}, arrays)
+    sim.state = restored["state"]
+    sim.policy_state = restored["policy_state"]
+    sim.sorts = scal["sorts"]
+    sim.rebuilds = scal["rebuilds"]
+    sim._host_step = scal["host_step"]
+    sim.history = list(scal["history"])
+    _restore_host_policy(sim, scal["host_policy"])
+
+
+def load_simulation(path: str) -> "SimDriver":
+    """Rebuild the driver a checkpoint describes (requires the checkpoint
+    to have been written by a spec-built driver) and restore its state."""
+    meta = _read_meta(path)  # sidecar only — restore_simulation reads the arrays
+    if meta.get("spec") is None:
+        raise ValueError(
+            "checkpoint has no embedded SimSpec (written by a legacy-constructed "
+            "driver); rebuild the driver yourself and call restore_simulation(sim, path)"
+        )
+    spec = SimSpec.from_dict(meta["spec"])
+    sim = make_simulation(spec)
+    restore_simulation(sim, path)
+    return sim

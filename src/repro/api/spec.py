@@ -1,0 +1,381 @@
+"""Declarative simulation specification: one frozen, serializable tree that
+names everything a Matrix-PIC run needs — grid, plasma, laser, deposition,
+sorter, device mesh, and run schedule.
+
+The spec is the single public currency of the API layer:
+
+* scenario builders (`repro.api.registry`) return a `SimSpec`;
+* `repro.api.make_simulation(spec)` turns one into a running driver
+  (single-device windowed loop or distributed shard_map loop, selected by
+  `MeshSpec`);
+* checkpoints embed the serialized spec so a run can be rebuilt from disk;
+* benchmark JSON records the exact spec it measured (provenance).
+
+Every node is a frozen dataclass of plain scalars/tuples, so specs are
+hashable (usable as jit static arguments / cache keys) and round-trip
+through JSON bit-exactly: `SimSpec.from_json(spec.to_json()) == spec` and
+`SimSpec.from_json(s).to_json() == s` for any spec-produced `s` (Python
+floats serialize via repr, which is exact).
+
+Grid and laser reuse the existing `repro.pic` dataclasses (`GridSpec`,
+`LaserSpec`); the sort policy embeds `SortPolicyConfig` unchanged — the
+spec layer adds structure, not parallel vocabulary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any
+
+from repro.core.resort_policy import SortPolicyConfig
+from repro.pic.grid import GridSpec
+from repro.pic.laser import LaserSpec
+
+__all__ = [
+    "DepositionSpec",
+    "DriftSpec",
+    "MeshSpec",
+    "PerturbSpec",
+    "PlasmaSpec",
+    "ProfileSpec",
+    "RunSpec",
+    "SimSpec",
+    "SortSpec",
+]
+
+
+def _to_jsonable(obj: Any) -> Any:
+    """Dataclass tree -> plain dicts/lists/scalars (field order preserved)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _to_jsonable(getattr(obj, f.name)) for f in dataclasses.fields(obj)}
+    if isinstance(obj, (tuple, list)):
+        return [_to_jsonable(v) for v in obj]
+    return obj
+
+
+def _shape3(v) -> tuple[int, int, int]:
+    x, y, z = (int(s) for s in v)
+    return (x, y, z)
+
+
+def _dx3(v) -> tuple[float, float, float]:
+    x, y, z = (float(d) for d in v)
+    return (x, y, z)
+
+
+def _pick(cls, d: dict) -> dict:
+    """Validated subset of `d` for constructing `cls`: unknown keys raise
+    (typo protection — a silently-dropped knob would change physics), while
+    missing keys fall back to the dataclass defaults (older spec files keep
+    loading when a field is added)."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    if unknown:
+        raise ValueError(f"{cls.__name__} spec has unknown keys {sorted(unknown)}")
+    return {k: v for k, v in d.items() if k in names}
+
+
+# ---------------------------------------------------------------------------
+# Plasma
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileSpec:
+    """Declarative density profile along z. ``kind="step"``: vacuum below
+    ``z_on`` (grid units), plasma at the spec density above it — the LWFA
+    vacuum/plateau shape. Zero-weight particles are marked dead."""
+
+    kind: str = "step"
+    z_on: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("step",):
+            raise ValueError(f"unknown profile kind {self.kind!r} (supported: 'step')")
+
+    @staticmethod
+    def from_dict(d: dict) -> "ProfileSpec":
+        return ProfileSpec(**_pick(ProfileSpec, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """Two symmetric counter-streaming beams: particles alternate between the
+    +/-``u`` beams (momentum, units of m*c) along ``axis``. The unstable
+    equilibrium behind the two-stream (drift parallel to k) and
+    Weibel/filamentation (drift transverse to k) scenarios."""
+
+    u: float = 0.2
+    axis: int = 2
+
+    def __post_init__(self):
+        if self.axis not in (0, 1, 2):
+            raise ValueError(f"drift axis must be 0, 1 or 2, got {self.axis}")
+
+    @staticmethod
+    def from_dict(d: dict) -> "DriftSpec":
+        return DriftSpec(**_pick(DriftSpec, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class PerturbSpec:
+    """Velocity seed u[v_axis] += amplitude * sin(k x[k_axis]) with k the
+    ``mode``-th harmonic of the box; ``k_axis=-1`` means k_axis = v_axis
+    (longitudinal Langmuir/two-stream seed)."""
+
+    v_axis: int = 0
+    amplitude: float = 0.01
+    mode: int = 1
+    k_axis: int = -1
+
+    def __post_init__(self):
+        # out-of-range axes would SILENTLY produce a zero perturbation (JAX
+        # drops out-of-bounds scatter updates) — different physics, no error
+        if self.v_axis not in (0, 1, 2):
+            raise ValueError(f"perturb v_axis must be 0, 1 or 2, got {self.v_axis}")
+        if self.k_axis not in (-1, 0, 1, 2):
+            raise ValueError(f"perturb k_axis must be -1 (=v_axis), 0, 1 or 2, got {self.k_axis}")
+        if self.mode < 1:
+            raise ValueError(f"perturb mode must be a positive harmonic, got {self.mode}")
+
+    @staticmethod
+    def from_dict(d: dict) -> "PerturbSpec":
+        return PerturbSpec(**_pick(PerturbSpec, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlasmaSpec:
+    """Particle initialization: per-cell lattice placement with optional
+    thermal spread, density profile, counter-streaming drift, and seed
+    perturbation (applied in that order — see api.facade.build_particles)."""
+
+    ppc_each_dim: tuple[int, int, int] = (2, 2, 2)
+    density: float = 1.0
+    u_thermal: float = 0.0
+    jitter: float = 0.0
+    seed: int = 0
+    profile: ProfileSpec | None = None
+    drift: DriftSpec | None = None
+    perturb: PerturbSpec | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "ppc_each_dim", _shape3(self.ppc_each_dim))
+
+    @property
+    def ppc(self) -> int:
+        return self.ppc_each_dim[0] * self.ppc_each_dim[1] * self.ppc_each_dim[2]
+
+    @staticmethod
+    def from_dict(d: dict) -> "PlasmaSpec":
+        kw = _pick(PlasmaSpec, d)
+        for key, sub in (("profile", ProfileSpec), ("drift", DriftSpec), ("perturb", PerturbSpec)):
+            if kw.get(key) is not None:
+                kw[key] = sub.from_dict(kw[key])
+        return PlasmaSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Numerics: deposition/gather, sorter, mesh, schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DepositionSpec:
+    """Deposition order/mode (paper ablation axes) and the gather pairing.
+    ``gather=""`` derives the conventional pairing: matrix gather for the
+    bin-based deposition modes, scatter gather otherwise."""
+
+    order: int = 1
+    mode: str = "matrix"  # matrix (fused) | matrix_unfused | scatter | rhocell
+    use_pallas: bool = False
+    gather: str = ""      # "" (auto) | matrix | scatter
+
+    def __post_init__(self):
+        if self.mode not in ("matrix", "matrix_unfused", "scatter", "rhocell"):
+            raise ValueError(f"unknown deposition mode {self.mode!r}")
+        if self.gather not in ("", "matrix", "scatter"):
+            raise ValueError(f"unknown gather mode {self.gather!r}")
+        if self.order not in (1, 2, 3):
+            raise ValueError(f"deposition order must be 1, 2 or 3, got {self.order}")
+
+    @property
+    def resolved_gather(self) -> str:
+        if self.gather:
+            return self.gather
+        return "matrix" if self.mode in ("matrix", "matrix_unfused") else "scatter"
+
+    @staticmethod
+    def from_dict(d: dict) -> "DepositionSpec":
+        return DepositionSpec(**_pick(DepositionSpec, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class SortSpec:
+    """GPMA sorter mode + bin capacity + the adaptive re-sort policy.
+    ``capacity=0`` auto-sizes to ``max(16, 4 * ppc)`` (headroom for density
+    bunching before the first growth halt)."""
+
+    mode: str = "incremental"  # incremental | rebuild | global | none
+    capacity: int = 0
+    policy: SortPolicyConfig = SortPolicyConfig()
+
+    def __post_init__(self):
+        if self.mode not in ("incremental", "rebuild", "global", "none"):
+            raise ValueError(f"unknown sort mode {self.mode!r}")
+
+    def resolved_capacity(self, ppc: int) -> int:
+        return self.capacity if self.capacity > 0 else max(16, 4 * ppc)
+
+    @staticmethod
+    def from_dict(d: dict) -> "SortSpec":
+        kw = _pick(SortSpec, d)
+        if "policy" in kw:
+            kw["policy"] = SortPolicyConfig(**_pick(SortPolicyConfig, kw["policy"]))
+        return SortSpec(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Device-mesh selection: ``MeshSpec(None)`` (default) runs the
+    single-device windowed driver; ``MeshSpec("SXxSY")`` or
+    ``MeshSpec((sx, sy))`` the domain-decomposed shard_map driver on an
+    sx*sy device mesh. ``n_local=0`` auto-sizes the per-shard particle
+    arrays (1.5x the densest shard)."""
+
+    shape: tuple[int, int] | None = None
+    mig_cap: int = 256
+    n_local: int = 0
+
+    def __post_init__(self):
+        shape = self.shape
+        if isinstance(shape, str):
+            # the one SXxSY grammar, shared with the --mesh flag and the
+            # pre-jax-import spec peek (repro.launch.devices is jax-free)
+            from repro.launch.devices import parse_mesh
+
+            try:
+                shape = parse_mesh(shape)
+            except SystemExit as e:  # parse_mesh speaks argparse; we speak ValueError
+                raise ValueError(str(e)) from e
+        elif shape is not None:
+            sx, sy = (int(v) for v in shape)
+            shape = (sx, sy)
+        if shape is not None and (shape[0] < 1 or shape[1] < 1):
+            raise ValueError(f"mesh sizes must be positive, got {shape}")
+        object.__setattr__(self, "shape", shape)
+
+    @property
+    def n_devices(self) -> int:
+        return 1 if self.shape is None else self.shape[0] * self.shape[1]
+
+    @staticmethod
+    def from_dict(d: dict) -> "MeshSpec":
+        return MeshSpec(**_pick(MeshSpec, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Run schedule: default step count, scan-window length (``window=0``
+    selects the legacy host-driven per-step loop), diagnostics cadence, and
+    the timestep (``dt=0`` derives the Courant limit at ``cfl_safety``)."""
+
+    steps: int = 50
+    window: int = 16
+    diagnostics_every: int = 0
+    dt: float = 0.0
+    cfl_safety: float = 0.5
+
+    @staticmethod
+    def from_dict(d: dict) -> "RunSpec":
+        return RunSpec(**_pick(RunSpec, d))
+
+
+# ---------------------------------------------------------------------------
+# The root
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSpec:
+    """The whole run, declaratively. See module docstring; build via the
+    scenario registry (`repro.api.scenario`) or directly, run via
+    `repro.api.make_simulation`."""
+
+    name: str
+    grid: GridSpec
+    plasma: PlasmaSpec = PlasmaSpec()
+    laser: LaserSpec | None = None
+    deposition: DepositionSpec = DepositionSpec()
+    sort: SortSpec = SortSpec()
+    mesh: MeshSpec = MeshSpec()
+    run: RunSpec = RunSpec()
+    charge: float = -1.0
+    mass: float = 1.0
+    ckc_beta: float = 0.0
+
+    def __post_init__(self):
+        if not isinstance(self.grid, GridSpec):
+            raise TypeError(f"SimSpec.grid must be a GridSpec, got {type(self.grid).__name__}")
+        if self.mesh.shape is not None:
+            sx, sy = self.mesh.shape
+            gx, gy, _ = self.grid.shape
+            if gx % sx or gy % sy:
+                raise ValueError(
+                    f"grid {self.grid.shape} does not divide over a {sx}x{sy} mesh"
+                )
+            if self.deposition.mode not in ("matrix", "matrix_unfused"):
+                raise ValueError(
+                    "distributed runs support the bin-based depositions: matrix | matrix_unfused"
+                )
+            if self.sort.mode != "incremental":
+                raise ValueError("distributed runs use the incremental GPMA sort + adaptive policy")
+            if self.deposition.gather == "scatter":
+                raise ValueError("distributed runs gather through the bins (gather='matrix' or auto)")
+            if self.ckc_beta != 0.0:
+                raise ValueError(
+                    "ckc_beta is not implemented on the distributed Maxwell solver — a spec "
+                    "claiming it with a mesh would silently run different physics"
+                )
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def dt(self) -> float:
+        """The resolved timestep (explicit, or the Courant limit)."""
+        return self.run.dt if self.run.dt > 0 else self.grid.cfl_dt(self.run.cfl_safety)
+
+    @property
+    def omega_p(self) -> float:
+        """Plasma frequency of the spec density (normalized units)."""
+        return math.sqrt(self.plasma.density)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return _to_jsonable(self)
+
+    def to_json(self, *, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=False)
+
+    @staticmethod
+    def from_dict(d: dict) -> "SimSpec":
+        kw = _pick(SimSpec, dict(d))
+        if "grid" not in kw:
+            raise ValueError("SimSpec requires a 'grid' entry")
+        g = kw["grid"]
+        kw["grid"] = GridSpec(shape=_shape3(g["shape"]), dx=_dx3(g.get("dx", (1.0, 1.0, 1.0))))
+        if kw.get("laser") is not None:
+            kw["laser"] = LaserSpec(**_pick(LaserSpec, kw["laser"]))
+        for key, sub in (
+            ("plasma", PlasmaSpec), ("deposition", DepositionSpec), ("sort", SortSpec),
+            ("mesh", MeshSpec), ("run", RunSpec),
+        ):
+            if key in kw:
+                kw[key] = sub.from_dict(kw[key])
+        return SimSpec(**kw)
+
+    @staticmethod
+    def from_json(s: str) -> "SimSpec":
+        return SimSpec.from_dict(json.loads(s))

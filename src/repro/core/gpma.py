@@ -36,7 +36,14 @@ from repro.core.binning import INVALID, BinnedLayout
 class GPMAStats:
     """Per-step device-side statistics consumed by the resort policy."""
 
-    n_moved: jax.Array       # particles that changed cell this step
+    n_moved: jax.Array       # particles that changed cell this step, PLUS
+                             # previously-unslotted live particles whose
+                             # insert landed (e.g. migrated-in arrivals on
+                             # the distributed path) — a boundary crossing is
+                             # one move no matter which shard observes it, so
+                             # the moved-fraction perf proxy sees identical
+                             # churn on every driver; particles stuck
+                             # unslotted against a full bin are not recounted
     n_overflow: jax.Array    # inserts that found no gap (-> rebuild needed)
     n_empty: jax.Array       # empty slots after update
     n_alive: jax.Array       # live particles
@@ -105,8 +112,19 @@ def gpma_update(layout: BinnedLayout, new_cell, alive):
     upd = jnp.where(fits, dst, INVALID).astype(jnp.int32)
     pslot = pslot.at[order].set(jnp.where(is_insert, upd, pslot[order]))
 
+    # An unslotted live particle counts as a move only when its insert LANDS
+    # (a migrated-in arrival binning for the first time, or an overflow
+    # straggler finally finding room) — a stationary particle stuck at
+    # particle_slot == -1 against a full bin must not inflate the churn
+    # proxy on every step it waits. Known bounded overcount: a crossing
+    # whose insert stalls is counted at the crossing (`moved`) AND at the
+    # eventual landing — per-particle "already counted" memory isn't worth
+    # carrying, this only arises where overflow is tolerated across steps
+    # (needs_bins=False ablation configs; bin-based configs mandatory-sort
+    # the same step), and the bias direction (earlier sorts) is safe.
+    landed = jnp.zeros((n,), bool).at[order].set(fits)
     stats = GPMAStats(
-        n_moved=jnp.sum(moved),
+        n_moved=jnp.sum(moved) + jnp.sum(landed & ~had_slot),
         n_overflow=jnp.sum(is_insert & ~fits),
         n_empty=jnp.sum(slots < 0),
         n_alive=jnp.sum(alive),

@@ -31,6 +31,36 @@ def peek_mesh_argv(argv: list[str] | None = None) -> tuple[int, int] | None:
     return parse_mesh(spec) if spec is not None else None
 
 
+def peek_spec_mesh_argv(argv: list[str] | None = None) -> tuple[int, int] | None:
+    """The mesh shape named by a ``--spec FILE.json`` SimSpec in argv, or
+    None. Pure-JSON peek (no repro.api import, jax-free): like
+    `peek_mesh_argv`, this must run BEFORE jax initializes so the launcher
+    can force enough host devices for the spec's mesh. A missing/invalid
+    file returns None here — argparse reports it properly later."""
+    import json
+
+    argv = sys.argv if argv is None else argv
+    path = None
+    for i, a in enumerate(argv):
+        if a == "--spec" and i + 1 < len(argv):
+            path = argv[i + 1]
+        elif a.startswith("--spec="):
+            path = a.split("=", 1)[1]
+    if path is None:
+        return None
+    try:
+        with open(path) as f:
+            shape = json.load(f).get("mesh", {}).get("shape")
+        if not shape:
+            return None
+        if isinstance(shape, str):  # MeshSpec also accepts the "SXxSY" form
+            return parse_mesh(shape)  # the one SXxSY grammar, shared with --mesh
+        sx, sy = (int(v) for v in shape)
+        return (sx, sy)
+    except (OSError, ValueError, TypeError, AttributeError, SystemExit):
+        return None  # malformed spec: argparse/SimSpec.from_json report it properly later
+
+
 def force_host_devices(n: int) -> None:
     """Force n emulated host-platform devices unless an override (real
     accelerators, or the user's own XLA_FLAGS) is already present. Must run

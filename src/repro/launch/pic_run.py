@@ -1,8 +1,23 @@
-"""PIC simulation launcher (paper workloads as configs).
+"""PIC simulation launcher: every registered scenario from one binary.
 
-    PYTHONPATH=src python -m repro.launch.pic_run --workload uniform --steps 50
-    PYTHONPATH=src python -m repro.launch.pic_run --workload lwfa --steps 30
-    PYTHONPATH=src python -m repro.launch.pic_run --mesh 4x2 --steps 50
+    PYTHONPATH=src python -m repro.launch.pic_run --scenario uniform --steps 50
+    PYTHONPATH=src python -m repro.launch.pic_run --scenario two_stream --steps 50
+    PYTHONPATH=src python -m repro.launch.pic_run --scenario lwfa --mesh 2x2
+    PYTHONPATH=src python -m repro.launch.pic_run --spec myrun.json
+    PYTHONPATH=src python -m repro.launch.pic_run --scenario weibel --dump-spec weibel.json
+
+The run is described by a `repro.api.SimSpec`: ``--scenario NAME`` builds
+it from the registry, ``--spec FILE.json`` loads a serialized one, and the
+remaining flags are overrides applied onto that spec (the pre-SimSpec
+flags — ``--workload``, ``--steps``, ``--order``, ... — keep working as
+shims that build a spec). NOTE: scenario defaults were unified in the
+migration — ``lwfa`` now means the canonical registry scenario (the
+`examples/lwfa.py` laser/dt/step parameters), not this launcher's old
+ad-hoc variant, so a bare ``--workload lwfa`` reproduces the example, not
+pre-migration launcher output (pin dt/steps/etc. via flags or --spec to
+compare against old runs). `repro.api.make_simulation` then yields the
+single-device windowed driver or, when the spec (or ``--mesh``) names a
+device mesh, the distributed shard_map driver — same facade either way.
 """
 
 from __future__ import annotations
@@ -10,98 +25,134 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.launch.devices import force_host_devices, parse_mesh, peek_mesh_argv
+from repro.launch.devices import (
+    force_host_devices,
+    parse_mesh,
+    peek_mesh_argv,
+    peek_spec_mesh_argv,
+)
 
-# --mesh SXxSY needs SX*SY devices, which can only be forced BEFORE jax
-# import — so peek argv now (repro.launch.devices is jax-free)
-_MESH_ARGV = peek_mesh_argv()
+# a mesh of SXxSY shards needs SX*SY devices, which can only be forced
+# BEFORE jax import — peek argv (and any --spec file's mesh entry) now;
+# repro.launch.devices is jax-free on purpose
+_MESH_ARGV = peek_mesh_argv() or peek_spec_mesh_argv()
 if _MESH_ARGV is not None:
     force_host_devices(_MESH_ARGV[0] * _MESH_ARGV[1])
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
+from repro.api import SimSpec, make_simulation, scenario, scenario_names  # noqa: E402
 
-from repro.pic import (  # noqa: E402
-    DistConfig, DistSimulation, FieldState, GridSpec, LaserSpec, PICConfig, Simulation,
-    inject_laser, perturb_velocity, profiled_plasma, uniform_plasma,
-)
+
+def build_spec(args) -> SimSpec:
+    """Scenario/spec-file + flag overrides -> the SimSpec to run."""
+    overrides = {}
+    if args.steps is not None:
+        overrides["steps"] = args.steps
+    if args.window is not None:
+        overrides["window"] = args.window
+    if args.ppc is not None:
+        overrides["ppc"] = args.ppc
+    if args.order is not None:
+        overrides["order"] = args.order
+    if args.deposition is not None:
+        overrides["deposition"] = args.deposition
+    if args.sort is not None:
+        overrides["sort"] = args.sort
+    if args.mesh is not None:
+        overrides["mesh"] = parse_mesh(args.mesh)
+    if args.use_pallas:
+        overrides["use_pallas"] = True
+
+    if args.spec is not None:
+        try:
+            with open(args.spec) as f:
+                spec = SimSpec.from_json(f.read())
+        except (OSError, ValueError, TypeError, KeyError) as e:
+            raise SystemExit(f"--spec {args.spec}: {e}") from e
+        if args.grid is not None:
+            overrides["grid"] = tuple(args.grid)
+        from repro.api import apply_overrides
+
+        return apply_overrides(spec, **overrides)
+
+    name = args.scenario or args.workload or "uniform"
+    if args.grid is not None:
+        overrides["grid"] = tuple(args.grid)
+    return scenario(name, **overrides)
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=["uniform", "lwfa"], default="uniform")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--ppc", type=int, default=2, help="particles per cell per dim")
-    ap.add_argument("--order", type=int, default=1, choices=[1, 2, 3])
-    ap.add_argument("--deposition", choices=["scatter", "rhocell", "matrix", "matrix_unfused"], default="matrix")
-    ap.add_argument("--sort", choices=["incremental", "rebuild", "global", "none"], default="incremental")
-    ap.add_argument("--grid", type=int, nargs=3, default=None)
-    ap.add_argument(
-        "--window", type=int, default=16,
+    ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    src = ap.add_argument_group("run selection")
+    src.add_argument("--scenario", default=None, metavar="NAME",
+                     help=f"registered scenario to run (one of {scenario_names()}; default uniform)")
+    src.add_argument("--spec", default=None, metavar="FILE.json",
+                     help="load a serialized SimSpec instead of a named scenario")
+    src.add_argument("--dump-spec", default=None, metavar="PATH",
+                     help="write the resolved SimSpec JSON to PATH and exit (provenance / editing)")
+    ov = ap.add_argument_group("spec overrides (deprecated shims from the pre-SimSpec CLI)")
+    ov.add_argument("--workload", choices=["uniform", "lwfa"], default=None,
+                    help="deprecated alias of --scenario")
+    ov.add_argument("--steps", type=int, default=None)
+    ov.add_argument("--ppc", type=int, default=None, help="particles per cell per dim")
+    ov.add_argument("--order", type=int, default=None, choices=[1, 2, 3])
+    ov.add_argument("--deposition", choices=["scatter", "rhocell", "matrix", "matrix_unfused"], default=None)
+    ov.add_argument("--sort", choices=["incremental", "rebuild", "global", "none"], default=None)
+    ov.add_argument("--grid", type=int, nargs=3, default=None)
+    ov.add_argument("--use-pallas", action="store_true", dest="use_pallas")
+    ov.add_argument(
+        "--window", type=int, default=None,
         help="device-resident loop: steps per compiled scan window (one host "
         "sync per window); 0 = legacy host-driven per-step loop",
     )
-    ap.add_argument(
+    ov.add_argument(
         "--mesh", type=str, default=None, metavar="SXxSY",
         help="run domain-decomposed on an SXxSY device mesh (DistSimulation); "
         "forces SX*SY host devices when no accelerator override is present",
     )
     args = ap.parse_args()
-    window = args.window if args.window > 0 else None
-    mesh_shape = parse_mesh(args.mesh) if args.mesh else None
-
-    if args.workload == "uniform":
-        shape = tuple(args.grid) if args.grid else (16, 16, 16)
-        grid = GridSpec(shape=shape)
-        parts = uniform_plasma(jax.random.PRNGKey(0), grid, ppc_each_dim=(args.ppc,) * 3, density=1.0, u_thermal=0.02)
-        parts = perturb_velocity(parts, axis=0, amplitude=0.01, mode=1, grid=grid)
-        fields = FieldState.zeros(grid.shape)
-    else:
-        shape = tuple(args.grid) if args.grid else (8, 8, 64)
-        grid = GridSpec(shape=shape)
-        density = lambda z: jnp.where(z > shape[2] * 0.3, 1.0, 0.0)
-        parts = profiled_plasma(jax.random.PRNGKey(0), grid, ppc_each_dim=(args.ppc,) * 3, density_fn=density)
-        fields = inject_laser(FieldState.zeros(grid.shape), grid, LaserSpec(z_center=shape[2] * 0.15))
-
-    capacity = max(16, 4 * args.ppc**3)
-    if mesh_shape is not None:
-        sx, sy = mesh_shape
-        if grid.shape[0] % sx or grid.shape[1] % sy:
-            raise SystemExit(f"grid {grid.shape} does not divide over a {sx}x{sy} mesh")
-        if args.deposition not in ("matrix", "matrix_unfused"):
-            raise SystemExit("--mesh supports the bin-based depositions: matrix | matrix_unfused")
-        if args.sort != "incremental":
-            raise SystemExit("--mesh runs the incremental GPMA sort + adaptive policy only")
-        local = GridSpec(shape=(grid.shape[0] // sx, grid.shape[1] // sy, grid.shape[2]), dx=grid.dx)
-        dcfg = DistConfig(
-            local_grid=local, dt=grid.cfl_dt(0.5), order=args.order,
-            deposition=args.deposition, capacity=capacity,
+    if (args.scenario or args.workload) and args.spec:
+        ap.error("--scenario/--workload and --spec are mutually exclusive")
+    if args.workload:
+        print(
+            "note: --workload is deprecated, use --scenario (scenario defaults were "
+            "unified: 'lwfa' now runs the canonical registry parameters, not the old "
+            "launcher variant — see the module docstring)"
         )
-        sim = DistSimulation(fields, parts, dcfg, mesh_shape=mesh_shape)
-    else:
-        gather = "matrix" if args.deposition in ("matrix", "matrix_unfused") else "scatter"
-        cfg = PICConfig(
-            grid=grid, dt=grid.cfl_dt(0.5), order=args.order, deposition=args.deposition,
-            gather=gather, sort_mode=args.sort, capacity=capacity,
-        )
-        sim = Simulation(fields, parts, cfg)
+
+    try:
+        spec = build_spec(args)
+    except (ValueError, TypeError, KeyError) as e:
+        ap.error(str(e))  # spec validation failures -> one-line message, not a traceback
+    if args.dump_spec:
+        with open(args.dump_spec, "w") as f:
+            f.write(spec.to_json())
+        print(f"wrote {args.dump_spec}")
+        return
+
+    sim = make_simulation(spec)
+    n_steps = spec.run.steps
+    window = spec.run.window or None
     loop = f"device-resident scan (window={window})" if window else "host-driven per-step loop"
-    mesh_note = f", mesh {mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape else ""
-    print(f"{args.workload}: grid {grid.shape}, {parts.n} particles, order {args.order}, {args.deposition}/{args.sort}, {loop}{mesh_note}")
+    mesh_note = f", mesh {spec.mesh.shape[0]}x{spec.mesh.shape[1]}" if spec.mesh.shape else ""
+    n_parts = int(sim.diagnostics()["n_alive"])
+    print(
+        f"{spec.name}: grid {spec.grid.shape}, {n_parts} particles, order "
+        f"{spec.deposition.order}, {spec.deposition.mode}/{spec.sort.mode}, {loop}{mesh_note}"
+    )
 
     # one warmup compile: the windowed driver pads every window (including
     # tails) to the same static length, so a single run covers the program
     if window:
-        sim.run(min(window, args.steps), window=window)
+        sim.run(min(window, n_steps))
     else:
         sim.run(2)
     t0 = time.perf_counter()
-    sim.run(args.steps, window=window)
+    sim.run(n_steps)
     dt = time.perf_counter() - t0
     d = sim.diagnostics()
     n_alive = d["n_alive"]
     print(
-        f"{args.steps} steps in {dt:.2f}s ({n_alive * args.steps / dt:.3e} particle-steps/s); "
+        f"{n_steps} steps in {dt:.2f}s ({n_alive * n_steps / dt:.3e} particle-steps/s); "
         f"sorts={sim.sorts} rebuilds={sim.rebuilds}"
     )
     print(f"energies: field={d['field_energy']:.4e} kinetic={d['kinetic_energy']:.4e} total={d['total_energy']:.4e}")

@@ -3,7 +3,14 @@
 from repro.pic.grid import B_STAGGER, E_STAGGER, FieldState, GridSpec  # noqa: F401
 from repro.pic.laser import LaserSpec, inject_laser  # noqa: F401
 from repro.pic.maxwell import maxwell_step, push_b, push_e  # noqa: F401
-from repro.pic.plasma import ParticleState, perturb_velocity, profiled_plasma, uniform_plasma  # noqa: F401
+from repro.pic.plasma import (  # noqa: F401
+    ParticleState,
+    apply_counter_drift,
+    counter_streaming_plasma,
+    perturb_velocity,
+    profiled_plasma,
+    uniform_plasma,
+)
 from repro.pic.pusher import advance_positions, boris_push, lorentz_gamma, wrap_periodic  # noqa: F401
 from repro.pic.simulation import (  # noqa: F401
     PICConfig,

@@ -44,6 +44,7 @@ pass-through trick as `pic_run_window`, never a whole-step `lax.cond`):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -73,7 +74,7 @@ from repro.pic.distributed import (
 from repro.pic.grid import FieldState, GridSpec
 from repro.pic.plasma import ParticleState
 from repro.pic.pusher import lorentz_gamma
-from repro.pic.simulation import consume_window_bundle
+from repro.pic.simulation import UNSET, _DEPRECATION_MSG, consume_window_bundle, resolve_run_args
 
 # Window halt codes (bundle["halt_code"]). Priority within a step:
 # recv-drop (lossy, discards the step) > bin overflow > send overflow.
@@ -301,6 +302,10 @@ class DistSimulation:
 
     Construction takes GLOBAL fields/particles exactly like `Simulation`;
     they are partitioned onto the mesh once, here, and never reshard again.
+
+    Construct via ``repro.api.make_simulation(spec)`` (``MeshSpec("SXxSY")``)
+    — the direct constructor is a deprecated shim delegating to the same
+    internals with ``spec=None``.
     """
 
     def __init__(
@@ -313,7 +318,13 @@ class DistSimulation:
         mesh_shape: tuple[int, int] | None = None,
         n_local: int | None = None,
         policy: SortPolicyConfig | None = None,
+        _spec=None,
     ):
+        if _spec is None:
+            warnings.warn(
+                _DEPRECATION_MSG.format(cls="DistSimulation"), DeprecationWarning, stacklevel=2
+            )
+        self.spec = _spec
         if mesh is None:
             if mesh_shape is None:
                 raise ValueError("pass either a mesh or mesh_shape=(sx, sy)")
@@ -399,11 +410,16 @@ class DistSimulation:
 
     # -- drivers -----------------------------------------------------------
 
-    def run(self, n_steps: int, *, diagnostics_every: int = 0, window: int | None = None) -> None:
-        """Advance `n_steps`. ``window=K`` runs the device-resident windowed
-        program; ``window=None`` the per-step host loop. As with
+    def run(self, n_steps: int | None = None, *, diagnostics_every: int | None = None,
+            window: int | None = UNSET) -> None:
+        """Advance `n_steps` (default: the spec's step count). ``window=K``
+        runs the device-resident windowed program; ``window=None`` the
+        per-step host loop; unset defaults to the spec window. As with
         `Simulation`, the two drivers keep independent policy counters —
         pick one driver per DistSimulation."""
+        n_steps, diagnostics_every, window = resolve_run_args(
+            self.spec, n_steps, diagnostics_every, window
+        )
         with set_mesh_compat(self.mesh):
             if window is None:
                 self._run_host(n_steps, diagnostics_every)
@@ -523,6 +539,39 @@ class DistSimulation:
         self.pslot = pad(self.pslot, np.int32(-1))
         self.n_local += add
         self.growths["n_local"] += 1
+
+    # -- protocol state view + checkpointing -------------------------------
+
+    @property
+    def state(self) -> dict:
+        """The device-resident simulation pytree (SimDriver protocol view):
+        sharded field blocks + shard-local particle/bin arrays. Plays the
+        same role `PICState` plays for the single-device driver."""
+        return {
+            "fields": self.fields,
+            "pos": self.pos, "u": self.u, "w": self.w, "alive": self.alive,
+            "slots": self.slots, "pslot": self.pslot,
+        }
+
+    @state.setter
+    def state(self, tree: dict) -> None:
+        self.fields = tuple(tree["fields"])
+        self.pos, self.u, self.w = tree["pos"], tree["u"], tree["w"]
+        self.alive, self.slots, self.pslot = tree["alive"], tree["slots"], tree["pslot"]
+
+    def save(self, path: str) -> None:
+        """Checkpoint the full pytree (state + SortPolicyState) and host
+        counters to `path` — see repro.api.facade.save_simulation."""
+        from repro.api.facade import save_simulation
+
+        save_simulation(self, path)
+
+    def restore(self, path: str) -> None:
+        """Restore a checkpoint written by a compatible driver into this
+        one — see repro.api.facade.restore_simulation."""
+        from repro.api.facade import restore_simulation
+
+        restore_simulation(self, path)
 
     # -- host-side views ---------------------------------------------------
 

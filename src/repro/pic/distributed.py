@@ -140,7 +140,10 @@ def _insert(parts_arrays, alive, bufs, valid):
     """Insert buffer rows into dead slots. Returns updated arrays + alive +
     the count of received particles that found no dead slot (DESTROYED —
     the caller must surface this as `mig_recv_dropped`, never fold it into a
-    retryable counter)."""
+    retryable counter) + the boolean mask of indices that received an
+    arrival (consumers must count arrivals as cell *moves*: an arrival may
+    reuse a just-departed index whose stale `particle_slot` happens to map
+    the arrival's own cell, which makes it invisible to GPMA churn stats)."""
     free_order = jnp.argsort(alive, stable=True)  # dead (False) first
     nbuf = valid.shape[0]
     dst = free_order[:nbuf]
@@ -154,16 +157,19 @@ def _insert(parts_arrays, alive, bufs, valid):
         out.append(ext.at[dst_safe].set(buf)[:-1])
     alive_ext = jnp.concatenate([alive, jnp.zeros((1,), bool)])
     alive = alive_ext.at[dst_safe].set(True)[:-1]
-    return out, alive, n_dropped
+    inserted = jnp.zeros((alive.shape[0] + 1,), bool).at[dst_safe].set(can)[:-1]
+    return out, alive, n_dropped, inserted
 
 
 def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_cap: int):
     """Exchange out-of-range particles along one decomposed axis.
 
-    Returns ``(pos, u, w, alive, n_send_overflow, n_recv_dropped)``:
-    send-side overflow is retryable (the particle stays resident,
-    out-of-range, and must be masked from binning/deposition until it
-    migrates); receive-side drops are destroyed particles.
+    Returns ``(pos, u, w, alive, n_send_overflow, n_recv_dropped,
+    arrived)``: send-side overflow is retryable (the particle stays
+    resident, out-of-range, and must be masked from binning/deposition
+    until it migrates); receive-side drops are destroyed particles;
+    ``arrived`` is the boolean mask of indices that received a migrated-in
+    particle this call (for churn accounting — see `_insert`).
     """
     x = pos[:, coord]
     go_hi = alive & (x >= extent)
@@ -183,10 +189,10 @@ def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_ca
     recv_valid_next = lax.ppermute(valid_lo, axis_name, _ring(axis_name, -1))
 
     arrays = [pos, u, w]
-    arrays, alive, drop1 = _insert(arrays, alive, recv_from_prev, recv_valid_prev)
-    arrays, alive, drop2 = _insert(arrays, alive, recv_from_next, recv_valid_next)
+    arrays, alive, drop1, ins1 = _insert(arrays, alive, recv_from_prev, recv_valid_prev)
+    arrays, alive, drop2, ins2 = _insert(arrays, alive, recv_from_next, recv_valid_next)
     pos, u, w = arrays
-    return pos, u, w, alive, of_hi + of_lo, drop1 + drop2
+    return pos, u, w, alive, of_hi + of_lo, drop1 + drop2, ins1 | ins2
 
 
 # ---------------------------------------------------------------------------
@@ -303,18 +309,21 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
     pos_new = pos_new.at[:, 2].set(jnp.mod(pos_new[:, 2], shape[2]))
     mig_send_overflow = jnp.int32(0)
     mig_recv_dropped = jnp.int32(0)
+    arrived = jnp.zeros_like(alive)
     for ax_name in cfg.x_axes:
-        pos_new, u_new, w, alive, of, dr = migrate_axis(
+        pos_new, u_new, w, alive, of, dr, ins = migrate_axis(
             pos_new, u_new, w, alive, coord=0, extent=shape[0], axis_name=ax_name, mig_cap=cfg.mig_cap
         )
         mig_send_overflow += of
         mig_recv_dropped += dr
+        arrived |= ins
     for ax_name in cfg.y_axes:
-        pos_new, u_new, w, alive, of, dr = migrate_axis(
+        pos_new, u_new, w, alive, of, dr, ins = migrate_axis(
             pos_new, u_new, w, alive, coord=1, extent=shape[1], axis_name=ax_name, mig_cap=cfg.mig_cap
         )
         mig_send_overflow += of
         mig_recv_dropped += dr
+        arrived |= ins
 
     # 4. incremental sort on local bins — send-overflow stragglers are kept
     # OUT of the bins (they retry migration next step; binning them would
@@ -322,7 +331,27 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
     # and deposition with out-of-range shape weights)
     binned = alive & in_domain(pos_new, shape)
     new_cells = cell_index(pos_new, shape)
+    # churn accounting for migrated-in arrivals: gpma_update counts an
+    # arrival as a move when its (stale or invalid) particle_slot maps a
+    # DIFFERENT cell, but an arrival that reuses a just-departed index whose
+    # stale slot happens to sit in the arrival's own cell looks stationary
+    # to it. A boundary crossing is one move no matter which shard observes
+    # it (the departure side frees the particle as dead, contributing
+    # nothing), so add those invisible arrivals back — keeping the
+    # moved-fraction perf proxy's churn identical to single-device.
+    stale_cell = jnp.where(particle_slot >= 0, particle_slot // cfg.capacity, -1)
+    n_arrived_invisible = jnp.sum(arrived & binned & (new_cells == stale_cell))
     layout, gstats = gpma_update(layout, new_cells, binned)
+    # ...and arrivals whose first insert hit a FULL bin: gpma only counts a
+    # fresh unslotted insert when it lands, but the crossing happened this
+    # step regardless — count it now. The particle is not recounted while
+    # it WAITS; the eventual landing does count once more (the same bounded
+    # stall-then-land overcount gpma_update documents), but on this driver
+    # the nonzero overflow mandatory-sorts the very same step, so stalled
+    # arrivals never persist into a later gpma landing in practice.
+    n_arrived_invisible = n_arrived_invisible + jnp.sum(
+        arrived & binned & (stale_cell < 0) & (layout.particle_slot < 0)
+    )
 
     # 5. deposition + guard reduction (binned particles only: the layout
     # already excludes stragglers, qw masking keeps the oracle identical)
@@ -369,7 +398,7 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
     bx2, by2, bz2 = half_b(ex1, ey1, ez1, bx1, by1, bz1, 0.5 * cfg.dt)
 
     stats = {
-        "n_moved": gstats.n_moved,
+        "n_moved": gstats.n_moved + n_arrived_invisible,
         "n_overflow": gstats.n_overflow,
         "n_empty": gstats.n_empty,
         "mig_send_overflow": mig_send_overflow,

@@ -75,21 +75,63 @@ def profiled_plasma(
     ppc_each_dim=(1, 1, 1),
     density_fn,
     u_thermal: float = 0.0,
+    jitter: float = 0.0,
     dtype=jnp.float32,
 ) -> ParticleState:
     """Plasma with z-dependent density profile: particles everywhere, weights
     scaled by density_fn(z_grid_units); zero-weight particles are marked dead
     (LWFA vacuum region)."""
-    base = uniform_plasma(key, grid, ppc_each_dim=ppc_each_dim, density=1.0, u_thermal=u_thermal, dtype=dtype)
+    base = uniform_plasma(
+        key, grid, ppc_each_dim=ppc_each_dim, density=1.0, u_thermal=u_thermal,
+        jitter=jitter, dtype=dtype,
+    )
     dens = density_fn(base.pos[:, 2]).astype(dtype)
     w = base.w * dens
     alive = w > 0
     return ParticleState(pos=base.pos, u=base.u, w=w, alive=alive)
 
 
-def perturb_velocity(particles: ParticleState, *, axis: int, amplitude: float, mode: int, grid: GridSpec) -> ParticleState:
-    """Sinusoidal velocity perturbation along `axis` — Langmuir-wave seed."""
-    k = 2.0 * jnp.pi * mode / grid.shape[axis]
-    du = amplitude * jnp.sin(k * particles.pos[:, axis])
+def apply_counter_drift(particles: ParticleState, *, u_drift: float, axis: int) -> ParticleState:
+    """Split a plasma into two symmetric counter-streaming beams: particles
+    alternate between the +/-`u_drift` beams by index, so with an even
+    per-cell particle count (lattice placement) each cell is charge- AND
+    current-neutral at t=0."""
+    sign = jnp.where(jnp.arange(particles.n) % 2 == 0, 1.0, -1.0).astype(particles.u.dtype)
+    u = particles.u.at[:, axis].add(sign * u_drift)
+    return dataclasses.replace(particles, u=u)
+
+
+def counter_streaming_plasma(
+    key,
+    grid: GridSpec,
+    *,
+    ppc_each_dim=(2, 2, 2),
+    density: float = 1.0,
+    u_drift: float = 0.2,
+    drift_axis: int = 2,
+    u_thermal: float = 0.0,
+    dtype=jnp.float32,
+) -> ParticleState:
+    """Uniform plasma split into two symmetric counter-streaming beams
+    (total density `density`) — the classic two-stream (drift along the
+    wave vector) and Weibel/filamentation (drift transverse to it)
+    unstable equilibria. See `apply_counter_drift`."""
+    base = uniform_plasma(
+        key, grid, ppc_each_dim=ppc_each_dim, density=density, u_thermal=u_thermal, dtype=dtype
+    )
+    return apply_counter_drift(base, u_drift=u_drift, axis=drift_axis)
+
+
+def perturb_velocity(
+    particles: ParticleState, *, axis: int, amplitude: float, mode: int, grid: GridSpec,
+    k_axis: int | None = None,
+) -> ParticleState:
+    """Sinusoidal velocity perturbation: u[axis] += A*sin(k x[k_axis]) with
+    k the `mode`-th harmonic of the box. ``k_axis=None`` (default) seeds the
+    longitudinal Langmuir/two-stream mode (k parallel to the perturbed
+    velocity); a transverse `k_axis` seeds filamentation/Weibel modes."""
+    k_axis = axis if k_axis is None else k_axis
+    k = 2.0 * jnp.pi * mode / grid.shape[k_axis]
+    du = amplitude * jnp.sin(k * particles.pos[:, k_axis])
     u = particles.u.at[:, axis].add(du)
     return dataclasses.replace(particles, u=u)

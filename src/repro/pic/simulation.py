@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
 
 import jax
@@ -440,6 +441,9 @@ def consume_window_bundle(host: dict, host_step: int, diagnostics_every: int,
                     "kinetic_energy": ke,
                     "total_energy": fe + ke,
                     "n_alive": int(per["n_alive"][i]),
+                    # windowed drivers only (the host loop's diagnostics()
+                    # snapshots state, which has no per-step churn counter)
+                    "n_moved": int(per["n_moved"][i]),
                 })
     return n_done, int(host["n_sorts"]), int(host["n_rebuilds"])
 
@@ -492,15 +496,61 @@ def pic_run_window(
     )
 
 
+# Sentinel distinguishing "caller said nothing" (-> spec default) from an
+# explicit window=None (-> legacy host loop) in SimDriver.run signatures.
+UNSET = object()
+
+_DEPRECATION_MSG = (
+    "{cls}(fields, particles, config) is deprecated: describe the run as a "
+    "repro.api.SimSpec (scenario registry: repro.api.scenario) and build the "
+    "driver with repro.api.make_simulation(spec). The legacy constructor "
+    "delegates to the same spec-built internals and will keep working, but "
+    "spec-built drivers additionally carry run defaults, provenance, and "
+    "checkpoint rebuild metadata."
+)
+
+
+def resolve_run_args(spec, n_steps, diagnostics_every, window):
+    """Resolve SimDriver.run() arguments against the driver's spec
+    (``None``/``UNSET`` -> spec defaults; spec-less legacy drivers keep the
+    historical defaults). Shared by Simulation and DistSimulation."""
+    run = None if spec is None else spec.run
+    if n_steps is None:
+        if run is None:
+            raise TypeError("run() needs n_steps (this driver has no spec defaults)")
+        n_steps = run.steps
+    if diagnostics_every is None:
+        diagnostics_every = 0 if run is None else run.diagnostics_every
+    if window is UNSET:
+        window = None if run is None else (run.window or None)
+    return n_steps, diagnostics_every, window
+
+
 class Simulation:
     """Host driver: jitted step + adaptive resort policy + diagnostics.
 
     ``run(n, window=K)`` uses the device-resident windowed driver (one
     compiled K-step scan + one fetched bundle per window); ``window=None``
     keeps the legacy per-step host loop.
+
+    Construct via ``repro.api.make_simulation(spec)`` — the direct
+    constructor is a deprecated shim that delegates to the same internals
+    with ``spec=None`` (no run defaults, no checkpoint rebuild metadata).
     """
 
-    def __init__(self, fields: FieldState, particles: ParticleState, config: PICConfig, policy: SortPolicyConfig | None = None):
+    def __init__(self, fields: FieldState, particles: ParticleState, config: PICConfig,
+                 policy: SortPolicyConfig | None = None, *, _spec=None):
+        if _spec is None:
+            warnings.warn(
+                _DEPRECATION_MSG.format(cls="Simulation"), DeprecationWarning, stacklevel=2
+            )
+        self.spec = _spec
+        self._setup(fields, particles, config, policy)
+
+    def _setup(self, fields: FieldState, particles: ParticleState, config: PICConfig,
+               policy: SortPolicyConfig | None) -> None:
+        """The spec-built construction path (shared by `make_simulation`
+        and the deprecated direct constructor)."""
         self.config = config
         # private copies: the drivers donate state buffers to the step, which
         # would otherwise invalidate the caller's field arrays
@@ -518,19 +568,39 @@ class Simulation:
         self.history: list[dict] = []
         self._host_step = 0  # host mirror of state.step (windowed path syncs nothing)
 
-    def run(self, n_steps: int, *, diagnostics_every: int = 0, window: int | None = None) -> None:
-        """Advance `n_steps`. ``window=K`` uses the device-resident scan
-        driver; ``window=None`` the legacy host loop.
+    def run(self, n_steps: int | None = None, *, diagnostics_every: int | None = None,
+            window: int | None = UNSET) -> None:
+        """Advance `n_steps` (default: the spec's step count). ``window=K``
+        uses the device-resident scan driver; ``window=None`` the legacy
+        host loop; unset defaults to the spec window (legacy drivers: host
+        loop).
 
         The two drivers keep INDEPENDENT policy counters (host
         ``self.policy`` vs device ``self.policy_state``) — pick one driver
         per Simulation. Switching mid-run restarts the sort cadence (both
         policies behave as if freshly reset); physics is unaffected.
         """
+        n_steps, diagnostics_every, window = resolve_run_args(
+            self.spec, n_steps, diagnostics_every, window
+        )
         if window is None:
             self._run_host(n_steps, diagnostics_every)
         else:
             self._run_windowed(n_steps, diagnostics_every, window)
+
+    def save(self, path: str) -> None:
+        """Checkpoint the full pytree (state + SortPolicyState) and host
+        counters to `path` — see repro.api.facade.save_simulation."""
+        from repro.api.facade import save_simulation
+
+        save_simulation(self, path)
+
+    def restore(self, path: str) -> None:
+        """Restore a checkpoint written by a compatible driver into this
+        one — see repro.api.facade.restore_simulation."""
+        from repro.api.facade import restore_simulation
+
+        restore_simulation(self, path)
 
     # ------------------------------------------------------------------
     # Legacy host-driven loop: one jitted step per Python iteration, policy

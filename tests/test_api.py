@@ -1,0 +1,339 @@
+"""Unified SimSpec API: serialization round-trips, scenario registry,
+facade construction (single-device and 1x1-mesh distributed), legacy
+constructor parity (deprecated shims delegate to spec-built internals), and
+checkpoint round-trips (save -> restore -> continue == uninterrupted).
+
+Multi-device (8-way) facade/checkpoint coverage lives in the slow lane
+(tests/dist_sim_check.py 'checkpoint')."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    MeshSpec,
+    SimSpec,
+    apply_overrides,
+    build_fields,
+    build_particles,
+    dist_config,
+    load_simulation,
+    make_simulation,
+    pic_config,
+    scenario,
+    scenario_names,
+)
+from repro.core import SortPolicyConfig
+from repro.pic import DistSimulation, Simulation
+
+POLICY = SortPolicyConfig(sort_interval=20, sort_trigger_perf_enable=False)
+
+
+# ---------------------------------------------------------------------------
+# Spec serialization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["uniform", "lwfa", "two_stream", "weibel"])
+def test_spec_json_roundtrip_bit_exact(name):
+    """from_json(to_json(spec)) == spec and the JSON string is stable."""
+    spec = scenario(name)
+    s = spec.to_json()
+    spec2 = SimSpec.from_json(s)
+    assert spec2 == spec
+    assert spec2.to_json() == s
+    # dict round-trip too (the checkpoint sidecar path)
+    assert SimSpec.from_dict(json.loads(s)) == spec
+
+
+def test_spec_json_roundtrip_with_mesh_and_overrides():
+    spec = scenario(
+        "lwfa", mesh="2x2", steps=33, order=2, capacity=40, use_pallas=True,
+        policy=SortPolicyConfig(sort_interval=7), diagnostics_every=3,
+    )
+    assert spec.mesh.shape == (2, 2)
+    assert spec.deposition.order == 2
+    assert spec.sort.policy.sort_interval == 7
+    spec2 = SimSpec.from_json(spec.to_json())
+    assert spec2 == spec
+
+
+def test_mesh_spec_string_and_tuple_forms():
+    assert MeshSpec("4x2").shape == (4, 2)
+    assert MeshSpec((4, 2)).shape == (4, 2)
+    assert MeshSpec([4, 2]).shape == (4, 2)
+    assert MeshSpec(None).shape is None
+    with pytest.raises(ValueError):
+        MeshSpec("4by2")
+    with pytest.raises(ValueError):
+        MeshSpec((0, 2))
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="does not divide"):
+        scenario("uniform", grid=(6, 6, 6), mesh="4x2")
+    with pytest.raises(ValueError, match="bin-based"):
+        scenario("uniform", mesh="2x2", deposition="scatter")
+    with pytest.raises(ValueError, match="incremental"):
+        scenario("uniform", mesh="2x2", sort="global")
+    with pytest.raises(ValueError, match="gather"):
+        scenario("uniform", mesh="2x2", gather="scatter")
+    with pytest.raises(ValueError, match="ckc_beta"):
+        scenario("uniform", mesh="2x2", ckc_beta=0.1)
+    with pytest.raises(ValueError, match="unknown deposition mode"):
+        scenario("uniform", deposition="nope")
+    with pytest.raises(ValueError, match="unknown keys"):
+        SimSpec.from_dict({"name": "x", "grid": {"shape": [4, 4, 4]}, "run": {"stepz": 3}})
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_ships_required_scenarios():
+    names = scenario_names()
+    for required in ("uniform", "lwfa", "two_stream", "weibel"):
+        assert required in names
+
+
+def test_registry_unknown_name_and_override():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenario("nope")
+    with pytest.raises(TypeError, match="unknown scenario override"):
+        scenario("uniform", stepz=3)
+
+
+def test_apply_overrides_routing():
+    spec = scenario("uniform")
+    out = apply_overrides(spec, steps=7, order=3, ppc=1, mesh=None, capacity=20)
+    assert out.run.steps == 7
+    assert out.deposition.order == 3
+    assert out.plasma.ppc_each_dim == (1, 1, 1)
+    assert out.sort.capacity == 20
+    # grid override keeps the scenario's dx
+    ts = scenario("two_stream", grid=(4, 4, 32))
+    assert ts.grid.shape == (4, 4, 32) and ts.grid.dx[2] == 0.125
+
+
+# ---------------------------------------------------------------------------
+# Facade + legacy-constructor parity
+# ---------------------------------------------------------------------------
+
+
+def _assert_sims_equal(a: Simulation, b: Simulation):
+    """ints exact, floats at the established rtol 2e-5 (accumulated-FMA
+    slack; see tests/test_sim_loop.py — these paths run the identical
+    compiled program, so they are typically bitwise equal)."""
+    assert int(a.state.step) == int(b.state.step)
+    assert a.config == b.config
+    assert (a.sorts, a.rebuilds) == (b.sorts, b.rebuilds)
+    for name in ("ex", "ey", "ez", "bx", "by", "bz"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(a.state.fields, name)),
+            np.asarray(getattr(b.state.fields, name)),
+            rtol=2e-5, atol=1e-6, err_msg=f"field {name} diverged",
+        )
+    for name in ("pos", "u"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(a.state.particles, name)),
+            np.asarray(getattr(b.state.particles, name)),
+            rtol=2e-5, atol=2e-5, err_msg=f"particle attr {name} diverged",
+        )
+    for name in ("w", "alive"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state.particles, name)),
+            np.asarray(getattr(b.state.particles, name)),
+        )
+    np.testing.assert_array_equal(np.asarray(a.state.layout.slots), np.asarray(b.state.layout.slots))
+
+
+@pytest.mark.parametrize("name,steps", [("uniform", 50), ("lwfa", 50)])
+def test_legacy_constructor_matches_spec_path(name, steps):
+    """Simulation(fields, particles, config) warns DeprecationWarning and
+    delegates to the spec-built internals: a 50-step windowed run from the
+    old call sites equals the make_simulation(spec) run."""
+    spec = scenario(name, grid=(6, 6, 16) if name == "uniform" else (6, 6, 32),
+                    steps=steps, window=10, policy=POLICY)
+    fields, particles = build_fields(spec), build_particles(spec)
+
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = Simulation(fields, particles, pic_config(spec), policy=spec.sort.policy)
+    via_spec = make_simulation(spec)
+    assert via_spec.spec is spec and legacy.spec is None
+
+    legacy.run(steps, window=10)
+    via_spec.run()  # spec defaults: steps, window
+    _assert_sims_equal(legacy, via_spec)
+
+
+def test_run_defaults_require_spec():
+    spec = scenario("uniform", grid=(4, 4, 4), ppc=1, steps=3, window=2)
+    fields, particles = build_fields(spec), build_particles(spec)
+    with pytest.warns(DeprecationWarning):
+        legacy = Simulation(fields, particles, pic_config(spec))
+    with pytest.raises(TypeError, match="no spec defaults"):
+        legacy.run()
+    via_spec = make_simulation(spec)
+    via_spec.run()
+    assert int(via_spec.state.step) == 3
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing: save -> restore -> continue == uninterrupted
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_spec(**kw):
+    return scenario(
+        "uniform", grid=(6, 6, 6), u_thermal=0.4, order=1, capacity=8,
+        steps=40, window=7, diagnostics_every=5, policy=POLICY, **kw,
+    )
+
+
+def test_checkpoint_roundtrip_single_device(tmp_path):
+    """Forced capacity growth BEFORE the save: the checkpoint carries the
+    grown capacity, the restored run continues step-for-step equal to an
+    uninterrupted one (ints exact, floats rtol 2e-5)."""
+    path = str(tmp_path / "ck")
+    full = make_simulation(_ckpt_spec())
+    full.run(40)
+    assert full.config.capacity > 8, "growth never fired — capacity restore untested"
+
+    part = make_simulation(_ckpt_spec())
+    part.run(21)  # mid-window save point (21 = 3 windows of 7)
+    part.save(path)
+    resumed = load_simulation(path)
+    assert resumed.spec == part.spec
+    assert resumed.config.capacity == part.config.capacity
+    resumed.run(19)
+    part.run(19)  # the saved driver continues unperturbed too
+
+    _assert_sims_equal(part, resumed)
+    _assert_sims_equal(full, resumed)
+    assert [h["step"] for h in resumed.history] == [h["step"] for h in full.history]
+    for hf, hr in zip(full.history, resumed.history):
+        assert hf == hr, f"history diverged at step {hf['step']}"
+
+
+def test_checkpoint_restore_into_existing_driver(tmp_path):
+    path = str(tmp_path / "ck")
+    a = make_simulation(_ckpt_spec())
+    a.run(14)
+    a.save(path)
+    b = make_simulation(_ckpt_spec())
+    b.restore(path)
+    assert int(b.state.step) == 14
+    a.run(7)
+    b.run(7)
+    _assert_sims_equal(a, b)
+
+
+def test_checkpoint_legacy_driver_needs_rebuilt_host(tmp_path):
+    """Legacy-constructed drivers checkpoint too, but cannot be rebuilt
+    from disk (no embedded spec) — load_simulation says so."""
+    spec = scenario("uniform", grid=(4, 4, 4), ppc=1, steps=4, window=2)
+    with pytest.warns(DeprecationWarning):
+        legacy = Simulation(build_fields(spec), build_particles(spec), pic_config(spec))
+    legacy.run(2, window=2)
+    path = str(tmp_path / "ck")
+    legacy.save(path)
+    with pytest.raises(ValueError, match="no embedded SimSpec"):
+        load_simulation(path)
+    # restore into a compatible driver still works
+    with pytest.warns(DeprecationWarning):
+        other = Simulation(build_fields(spec), build_particles(spec), pic_config(spec))
+    other.restore(path)
+    other.run(2, window=2)
+    legacy.run(2, window=2)
+    _assert_sims_equal(legacy, other)
+
+
+# ---------------------------------------------------------------------------
+# Distributed facade on a 1x1 mesh (single device — the full 8-device
+# coverage is the slow lane's job)
+# ---------------------------------------------------------------------------
+
+
+def _dist_spec(**kw):
+    return scenario(
+        "uniform", grid=(8, 8, 8), u_thermal=0.05, mesh=(1, 1),
+        steps=20, window=5, policy=POLICY, **kw,
+    )
+
+
+def test_facade_selects_driver_by_mesh_spec():
+    assert isinstance(make_simulation(scenario("uniform", grid=(4, 4, 4), ppc=1)), Simulation)
+    dist = make_simulation(_dist_spec())
+    assert isinstance(dist, DistSimulation)
+    assert dist.spec.mesh.shape == (1, 1)
+
+
+def test_dist_legacy_constructor_matches_spec_path():
+    spec = _dist_spec()
+    fields, particles = build_fields(spec), build_particles(spec)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = DistSimulation(fields, particles, dist_config(spec),
+                                mesh_shape=(1, 1), policy=spec.sort.policy)
+    via_spec = make_simulation(spec)
+    legacy.run(20, window=5)
+    via_spec.run()
+    assert (legacy.sorts, legacy.rebuilds) == (via_spec.sorts, via_spec.rebuilds)
+    assert legacy.config == via_spec.config
+    for fa, fb in zip(legacy.fields, via_spec.fields):
+        np.testing.assert_allclose(np.asarray(fa), np.asarray(fb), rtol=2e-5, atol=1e-6)
+    for attr in ("pos", "u"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(legacy, attr)), np.asarray(getattr(via_spec, attr)),
+            rtol=2e-5, atol=2e-5,
+        )
+    np.testing.assert_array_equal(np.asarray(legacy.alive), np.asarray(via_spec.alive))
+
+
+def test_dist_checkpoint_roundtrip_1x1(tmp_path):
+    path = str(tmp_path / "ck")
+    full = make_simulation(_dist_spec())
+    full.run(20)
+
+    part = make_simulation(_dist_spec())
+    part.run(10)
+    part.save(path)
+    resumed = load_simulation(path)
+    assert isinstance(resumed, DistSimulation)
+    resumed.run(10)
+    part.run(10)
+
+    for a, b in ((part, resumed), (full, resumed)):
+        assert a._host_step == b._host_step == 20
+        assert (a.sorts, a.rebuilds) == (b.sorts, b.rebuilds)
+        for fa, fb in zip(a.fields, b.fields):
+            np.testing.assert_allclose(np.asarray(fa), np.asarray(fb), rtol=2e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a.alive), np.asarray(b.alive))
+        np.testing.assert_allclose(np.asarray(a.pos), np.asarray(b.pos), rtol=2e-5, atol=2e-5)
+
+
+def test_make_simulation_rejects_oversized_mesh():
+    if jax.device_count() >= 4:
+        pytest.skip("this process has enough devices")
+    with pytest.raises(RuntimeError, match="devices"):
+        make_simulation(scenario("uniform", mesh="2x2"))
+
+
+def test_build_particles_profile_drift_perturb():
+    """The spec plasma pipeline: profile kills vacuum particles, drift
+    splits beams current-neutrally, perturbation seeds the mode."""
+    lwfa = scenario("lwfa")
+    parts = build_particles(lwfa)
+    z_on = lwfa.plasma.profile.z_on
+    dead = ~np.asarray(parts.alive)
+    assert dead.any() and not dead.all()
+    assert (np.asarray(parts.pos)[dead, 2] <= z_on + 1).all()
+
+    ts = scenario("two_stream")
+    parts = build_particles(ts)
+    uz = np.asarray(parts.u)[:, 2]
+    # symmetric counter-streams around the seed amplitude
+    assert abs(float(np.mean(uz))) < 2 * ts.plasma.perturb.amplitude
+    assert np.isclose(np.abs(uz).mean(), ts.plasma.drift.u, rtol=0.05)

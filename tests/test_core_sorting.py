@@ -137,3 +137,59 @@ def test_resort_policy_triggers():
         pol.record_step(rebuilt=False, perf=0.2)
     do, reason = pol.should_sort(empty_ratio=0.5)
     assert do and reason == "perf_degradation"
+
+
+def test_gpma_n_moved_counts_unslotted_arrivals_as_moves():
+    """Distributed sort-proxy skew regression: a live particle with no slot
+    (a migrated-in arrival on the distributed path) is one boundary
+    crossing and must count in `n_moved` exactly like a resident particle
+    changing cell — otherwise the moved-fraction perf-proxy EMA sees
+    different churn on the distributed driver than on the single-device
+    one for the same physics."""
+    cells0 = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    alive0 = jnp.asarray([True, True, True, False], bool)
+    layout, of = build_bins(cells0, alive0, n_cells=N_CELLS, capacity=CAP)
+    assert int(of) == 0
+    assert int(np.asarray(layout.particle_slot)[3]) < 0  # dead slot 3: no bin
+
+    # slot 3 becomes a migrated-in arrival (alive, unslotted) in cell 5;
+    # particle 0 moves 0 -> 4; particles 1, 2 stay put
+    cells1 = jnp.asarray([4, 1, 2, 5], jnp.int32)
+    alive1 = jnp.ones(4, bool)
+    new_layout, stats = gpma_update(layout, cells1, alive1)
+    assert int(stats.n_moved) == 2, (
+        f"expected the resident move AND the arrival to count, got {int(stats.n_moved)}"
+    )
+    check_layout_invariants(new_layout, cells1, alive1)
+
+    # a stationary step right after: nobody moves, nobody re-counts
+    _, stats2 = gpma_update(new_layout, cells1, alive1)
+    assert int(stats2.n_moved) == 0
+
+
+def test_gpma_n_moved_does_not_recount_stuck_overflow_particles():
+    """A live particle stuck at particle_slot == -1 against a FULL bin (the
+    needs_bins=False incremental configs tolerate overflow indefinitely)
+    must not inflate n_moved on every step it waits — only the step its
+    insert finally lands counts."""
+    cells0 = jnp.zeros(CAP + 2, jnp.int32)  # CAP fit in cell 0, 2 overflow
+    alive = jnp.ones(CAP + 2, bool)
+    layout, of = build_bins(cells0, alive, n_cells=N_CELLS, capacity=CAP)
+    assert int(of) == 2
+
+    # stationary steps: the 2 stuck particles keep failing to insert
+    layout1, stats1 = gpma_update(layout, cells0, alive)
+    assert int(stats1.n_overflow) == 2
+    assert int(stats1.n_moved) == 0, "stuck overflow particles recounted as moves"
+    _, stats2 = gpma_update(layout1, cells0, alive)
+    assert int(stats2.n_moved) == 0
+
+    # one slotted particle leaves cell 0 -> a gap opens -> exactly one
+    # stuck particle lands and is counted, together with the mover
+    cells2 = np.asarray(cells0).copy()
+    mover = int(np.nonzero(np.asarray(layout1.particle_slot) >= 0)[0][0])
+    cells2[mover] = 1
+    layout2, stats3 = gpma_update(layout1, jnp.asarray(cells2), alive)
+    assert int(stats3.n_moved) == 2  # the mover + the landing straggler
+    assert int(stats3.n_overflow) == 1  # one straggler still waiting
+    check_layout_invariants(layout2, jnp.asarray(cells2), jnp.asarray(np.asarray(layout2.particle_slot) >= 0))

@@ -73,6 +73,23 @@ def test_dist_simulation_single_fetch_and_compile():
     assert "FETCH OK" in out
 
 
+@pytest.mark.slow
+def test_dist_simulation_checkpoint_roundtrip():
+    """Spec-built 4x2 facade driver: save -> load_simulation -> continue
+    equals an uninterrupted run (ints exact, floats rtol 2e-5)."""
+    out = _run_check("dist_sim_check.py", "checkpoint")
+    assert "CKPT OK" in out
+
+
+@pytest.mark.slow
+def test_dist_n_moved_counts_migrated_arrivals():
+    """Sort-proxy skew regression (ROADMAP PR-3 follow-up): on a forced-
+    migration workload the psum'd per-step n_moved matches the
+    single-device count step for step — arrivals count as moves."""
+    out = _run_check("dist_sim_check.py", "moved")
+    assert "MOVED OK" in out
+
+
 # ---------------------------------------------------------------------------
 # Host-side validation (no devices needed)
 # ---------------------------------------------------------------------------
