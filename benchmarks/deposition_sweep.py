@@ -53,7 +53,8 @@ def _fused(wl, order, fused_matmul=None):
     )
 
 
-def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, label: str = "deposition_sweep"):
+def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int = 9,
+            label: str = "deposition_sweep"):
     """Run the sweep, emit CSV rows, and return the JSON-able payload."""
     from repro.kernels.deposition.ops import bin_outer_product, fused_bin_deposit
 
@@ -72,7 +73,7 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, label: str = 
             # (interpret mode off-TPU), per-component vs fused megakernel
             fns["matrix_pallas"] = partial(_per_component, "matrix", wl, order, bin_matmul=bin_outer_product)
             fns["matrix_fused_pallas"] = partial(_fused, wl, order, fused_matmul=fused_bin_deposit)
-        row = time_grid(fns)
+        row = time_grid(fns, rounds=rounds)
         results[f"order{order}"] = row
         sp = {"fused_vs_matrix": row["matrix"] / row["matrix_fused"]}
         if with_pallas:

@@ -7,45 +7,76 @@
                     attribute permutation) every step
   FullOpt           matrix deposition + incremental GPMA + adaptive policy
 
-Measured as wall time of 10 simulation steps (the sort costs only show up
-across steps)."""
+Measured as wall time of 10 simulation steps over the legacy per-step host
+loop (the sort costs only show up across steps; the host loop keeps the
+four strategies' control flow comparable).
+
+Workloads are spec-built from the scenario registry (``uniform``, shrunk);
+every result row in the returned payload embeds the exact serialized
+`SimSpec` it measured, like the BENCH_sim/BENCH_dist rows.
+"""
 
 import time
 
 import jax
 
 from benchmarks.common import emit
-from repro.pic import FieldState, GridSpec, PICConfig, Simulation, uniform_plasma
+from repro.api import make_simulation, scenario
+
+CONFIGS = [
+    ("baseline", dict(deposition="scatter", gather="scatter", sort="none")),
+    ("matrix_only", dict(deposition="matrix", gather="matrix", sort="rebuild")),
+    ("hybrid_globalsort", dict(deposition="matrix", gather="matrix", sort="global")),
+    ("fullopt", dict(deposition="matrix", gather="matrix", sort="incremental")),
+]
 
 
-def _run(name, cfg_kw, n_steps=10):
-    grid = GridSpec(shape=(12, 12, 12))
-    parts = uniform_plasma(
-        jax.random.PRNGKey(0), grid, ppc_each_dim=(2, 2, 2), density=1.0, u_thermal=0.08, jitter=1.0
+def _make_spec(cfg_kw: dict):
+    return scenario(
+        "uniform",
+        grid=(12, 12, 12),
+        ppc_each_dim=(2, 2, 2),
+        u_thermal=0.08,
+        jitter=1.0,
+        perturb=None,  # plain thermal plasma — the historical fig10 workload
+        dt=0.3,
+        order=1,
+        capacity=32,
+        **cfg_kw,
     )
-    cfg = PICConfig(grid=grid, dt=0.3, order=1, capacity=32, **cfg_kw)
-    sim = Simulation(FieldState.zeros(grid.shape), parts, cfg)
-    sim.run(2)  # warmup/compile
+
+
+def _run(spec, n_steps=10):
+    sim = make_simulation(spec)
+    sim.run(2, window=None)  # warmup/compile
     jax.block_until_ready(sim.state.fields.ex)
     t0 = time.perf_counter()
-    sim.run(n_steps)
+    sim.run(n_steps, window=None)
     jax.block_until_ready(sim.state.fields.ex)  # async dispatch otherwise
     dt = (time.perf_counter() - t0) / n_steps
     return dt * 1e6, sim
 
 
-def main():
-    configs = [
-        ("baseline", dict(deposition="scatter", gather="scatter", sort_mode="none")),
-        ("matrix_only", dict(deposition="matrix", gather="matrix", sort_mode="rebuild")),
-        ("hybrid_globalsort", dict(deposition="matrix", gather="matrix", sort_mode="global")),
-        ("fullopt", dict(deposition="matrix", gather="matrix", sort_mode="incremental")),
-    ]
+def collect(*, label: str = "fig10") -> dict:
+    """Run the ablation, emit CSV rows, and return the JSON-able payload."""
+    results: dict[str, dict] = {}
     base = None
-    for name, kw in configs:
-        us, sim = _run(name, kw)
+    for name, kw in CONFIGS:
+        spec = _make_spec(kw)
+        us, sim = _run(spec)
         base = base or us
-        emit(f"fig10/{name}", us, f"speedup={base / us:.2f}x sorts={sim.sorts}")
+        results[name] = {
+            "us_per_step": us,
+            "speedup_vs_baseline": base / us,
+            "sorts": sim.sorts,
+            "spec": spec.to_dict(),
+        }
+        emit(f"{label}/{name}", us, f"speedup={base / us:.2f}x sorts={sim.sorts}")
+    return {"results": results}
+
+
+def main():
+    collect()
 
 
 if __name__ == "__main__":

@@ -1,37 +1,64 @@
 """Paper Figure 8: end-to-end uniform-plasma performance across PPC.
 
 Full PIC step (gather + push + incremental sort + deposition + Maxwell)
-baseline (scatter/no-sort) vs MatrixPIC (matrix/GPMA), particles/second
-throughput at PPC in {1, 8, 27} (CPU-sized grid)."""
+baseline (scatter/no-sort) vs MatrixPIC (fused matrix gather+deposition /
+GPMA), particles/second throughput at PPC in {1, 8, 27} (CPU-sized grid).
 
-import jax
+Workloads are spec-built from the scenario registry (``uniform``, shrunk to
+the figure's geometry); every result row in the returned payload embeds the
+exact serialized `SimSpec` it measured, like the BENCH_sim/BENCH_dist rows.
+"""
 
 from benchmarks.common import emit, time_fn
-from repro.pic import FieldState, GridSpec, PICConfig, Simulation, pic_step, uniform_plasma
+from repro.api import make_simulation, scenario
+from repro.pic import pic_step
+
+GRID = (12, 12, 12)
+CONFIGS = {
+    "baseline": dict(deposition="scatter", gather="scatter", sort="none"),
+    "matrixpic": dict(deposition="matrix", gather="matrix", sort="incremental"),
+}
 
 
-def _sim(grid_shape, ppc_dim, cfg_kw):
-    grid = GridSpec(shape=grid_shape)
-    parts = uniform_plasma(
-        jax.random.PRNGKey(0), grid, ppc_each_dim=ppc_dim, density=1.0, u_thermal=0.05, jitter=1.0
+def _make_spec(ppc_dim: int, cfg_kw: dict):
+    return scenario(
+        "uniform",
+        grid=GRID,
+        ppc_each_dim=(ppc_dim, ppc_dim, ppc_dim),
+        u_thermal=0.05,
+        jitter=1.0,
+        perturb=None,  # plain thermal plasma — the historical fig8 workload
+        dt=0.2,
+        order=1,
+        capacity=max(16, 3 * ppc_dim**3),
+        **cfg_kw,
     )
-    cfg = PICConfig(grid=grid, dt=0.2, order=1, capacity=max(16, 3 * ppc_dim[0] ** 3), **cfg_kw)
-    sim = Simulation(FieldState.zeros(grid.shape), parts, cfg)
-    return sim
+
+
+def collect(*, label: str = "fig8") -> dict:
+    """Run the figure, emit CSV rows, and return the JSON-able payload
+    (one row per (ppc, config), each embedding its serialized spec)."""
+    results: dict[str, dict] = {}
+    for ppc_dim in (1, 2, 3):
+        ppc = ppc_dim**3
+        row = {}
+        for name, cfg_kw in CONFIGS.items():
+            spec = _make_spec(ppc_dim, cfg_kw)
+            sim = make_simulation(spec)
+            n = sim.state.particles.n
+            us = time_fn(lambda: pic_step(sim.state, sim.config))
+            row[name] = {"us_per_step": us, "particles_per_s": n / (us * 1e-6), "spec": spec.to_dict()}
+        speedup = row["baseline"]["us_per_step"] / row["matrixpic"]["us_per_step"]
+        results[f"ppc{ppc}"] = dict(row, speedup=speedup)
+        emit(f"{label}/baseline_ppc{ppc}", row["baseline"]["us_per_step"],
+             f"particles_per_s={row['baseline']['particles_per_s']:.3e}")
+        emit(f"{label}/matrixpic_ppc{ppc}", row["matrixpic"]["us_per_step"],
+             f"particles_per_s={row['matrixpic']['particles_per_s']:.3e} speedup={speedup:.2f}x")
+    return {"results": results}
 
 
 def main():
-    grid_shape = (12, 12, 12)
-    for ppc_dim in [(1, 1, 1), (2, 2, 2), (3, 3, 3)]:
-        ppc = ppc_dim[0] ** 3
-        base = _sim(grid_shape, ppc_dim, dict(deposition="scatter", gather="scatter", sort_mode="none"))
-        full = _sim(grid_shape, ppc_dim, dict(deposition="matrix", gather="matrix", sort_mode="incremental"))
-        n = base.state.particles.n
-
-        t_base = time_fn(lambda: pic_step(base.state, base.config))
-        t_full = time_fn(lambda: pic_step(full.state, full.config))
-        emit(f"fig8/baseline_ppc{ppc}", t_base, f"particles_per_s={n / (t_base * 1e-6):.3e}")
-        emit(f"fig8/matrixpic_ppc{ppc}", t_full, f"particles_per_s={n / (t_full * 1e-6):.3e} speedup={t_base / t_full:.2f}x")
+    collect()
 
 
 if __name__ == "__main__":

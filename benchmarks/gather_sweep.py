@@ -1,0 +1,137 @@
+"""Gather kernel regression sweep -> BENCH_gather.json.
+
+Times every field-gather implementation (per-particle scatter / six-call
+binned matrix / fused six-component, plus the Pallas routes) at orders 1-3
+on a table1_cic-style uniform-plasma workload, and emits machine-readable
+JSON so future PRs have a perf trajectory to compare against:
+
+    PYTHONPATH=src python -m benchmarks.run --only gather_sweep \
+        --gather-json BENCH_gather.json
+
+Each fused thunk pays the FULL staging cost (build_bin_slab + contraction +
+scatter-back), so the measured delta is exactly what the step saves: one
+slot-table staging instead of six, six shared weight sets instead of
+eighteen, one slot-map scatter-back instead of six. In the simulation loop
+the fused gather is cheaper still — the step's slab is shared with the
+fused deposition and carried across steps, so the staging it pays here is
+amortized away entirely.
+
+Schema: {"meta": {...workload/backend...},
+         "results": {"order<k>": {"<kernel>": us_per_call}},
+         "speedup_fused_vs_matrix": {"order<k>": {...}}}
+"""
+
+from __future__ import annotations
+
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_workload, time_grid
+from repro.core import (
+    EB_STAGGERS,
+    build_bin_slab,
+    gather_fields_fused,
+    gather_matrix,
+    gather_scatter,
+    max_guard,
+    unfold_guards,
+)
+
+ORDERS = (1, 2, 3)
+
+
+@partial(jax.jit, static_argnames=("grid_shape", "order", "fused_gather"))
+def _fused_with_staging(pos, padded, layout, *, grid_shape, order, fused_gather=None):
+    """The fused gather INCLUDING its slab staging (apples-to-apples with
+    the six-call path, which re-stages inside every call)."""
+    slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
+    return gather_fields_fused(
+        slab, padded, layout, grid_shape=grid_shape, order=order, fused_gather=fused_gather
+    )
+
+
+def _six_call(kind, wl, padded, order, bin_gather_op=None):
+    out = []
+    for comp, stagger in enumerate(EB_STAGGERS):
+        if kind == "scatter":
+            out.append(gather_scatter(wl["pos"], padded[comp], order=order, stagger=stagger))
+        else:
+            out.append(gather_matrix(
+                wl["pos"], padded[comp], wl["layout"], grid_shape=wl["grid"].shape,
+                order=order, stagger=stagger, bin_gather_op=bin_gather_op,
+            ))
+    return out
+
+
+def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int = 9,
+            label: str = "gather_sweep"):
+    """Run the sweep, emit CSV rows, and return the JSON-able payload."""
+    from repro.kernels.gather.ops import bin_gather, fused_bin_gather
+
+    wl = make_workload(grid_shape=grid, ppc=ppc, sorted_attrs=True)
+    fields = [
+        jax.random.normal(k, grid, jnp.float32)
+        for k in jax.random.split(jax.random.PRNGKey(42), 6)
+    ]
+    results: dict[str, dict[str, float]] = {}
+    speedups: dict[str, dict[str, float]] = {}
+    for order in ORDERS:
+        padded = tuple(unfold_guards(f, max_guard(order)) for f in fields)
+        fused = partial(
+            _fused_with_staging, wl["pos"], padded, wl["layout"],
+            grid_shape=wl["grid"].shape, order=order,
+        )
+        fns = {
+            "scatter": partial(_six_call, "scatter", wl, padded, order),
+            "matrix": partial(_six_call, "matrix", wl, padded, order),
+            "matrix_fused": fused,
+        }
+        if with_pallas:
+            # apples-to-apples kernel comparison: both routes through Pallas
+            # (interpret mode off-TPU), six-call vs fused megakernel
+            fns["matrix_pallas"] = partial(_six_call, "matrix", wl, padded, order, bin_gather_op=bin_gather)
+            fns["matrix_fused_pallas"] = partial(fused, fused_gather=fused_bin_gather)
+        row = time_grid(fns, rounds=rounds)
+        results[f"order{order}"] = row
+        sp = {"fused_vs_matrix": row["matrix"] / row["matrix_fused"]}
+        if with_pallas:
+            sp["fused_vs_matrix_pallas"] = row["matrix_pallas"] / row["matrix_fused_pallas"]
+        speedups[f"order{order}"] = sp
+        for name, us in row.items():
+            emit(f"{label}/order{order}/{name}", us, f"fused_vs_matrix={sp['fused_vs_matrix']:.2f}x")
+    return {
+        "meta": {
+            "grid": list(grid),
+            "ppc": ppc,
+            "n_particles": wl["n"],
+            "capacity": wl["cap"],
+            "backend": jax.default_backend(),
+            "note": "us_per_call for all SIX components (Ex..Bz), per-kernel median "
+                    f"over {rounds} interleaved rounds (time_grid: drift-robust on "
+                    "shared CPUs); the fused rows include their slab staging, which "
+                    "the simulation step amortizes across gather+deposition; pallas "
+                    "rows run the interpreter off-TPU and are NOT comparable to "
+                    "compiled rows there",
+        },
+        "results": results,
+        "speedup_fused_vs_matrix": speedups,
+    }
+
+
+def write_json(path: str, **kw) -> dict:
+    payload = collect(**kw)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
+    return payload
+
+
+def main():
+    collect()
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV. Usage:
     PYTHONPATH=src python -m benchmarks.run [--only table1_cic ...]
     PYTHONPATH=src python -m benchmarks.run --only deposition_sweep \
         --deposition-json BENCH_deposition.json
+    PYTHONPATH=src python -m benchmarks.run --smoke   # tiny CI drift guard
 """
 
 from __future__ import annotations
@@ -20,9 +21,21 @@ MODULES = [
     "fig10_ablation", # Fig 10: component ablation
     "table3_efficiency",  # Table 3: % of theoretical peak
     "deposition_sweep",   # per-kernel deposition regression (see --deposition-json)
+    "gather_sweep",       # per-kernel gather regression (see --gather-json)
     "sim_loop_sweep",     # host-driven vs device-resident loop (see --sim-json)
     "dist_sweep",         # distributed windowed vs per-step loop (see --dist-json)
 ]
+
+
+def run_smoke() -> None:
+    """Tiny-shape pass through the kernel-sweep drivers (every timed thunk
+    compiles and runs, CSV still emitted, no JSON written) so the benchmark
+    harness can't silently rot between BENCH_* regenerations. Fast enough
+    for a CI lane: 4^3 grid, 1 ppc, 2 interleaved rounds."""
+    from benchmarks import deposition_sweep, gather_sweep
+
+    deposition_sweep.collect(grid=(4, 4, 4), ppc=1, rounds=2, label="smoke/deposition_sweep")
+    gather_sweep.collect(grid=(4, 4, 4), ppc=1, rounds=2, label="smoke/gather_sweep")
 
 
 def main() -> None:
@@ -34,6 +47,19 @@ def main() -> None:
         default=None,
         help="also write the deposition kernel sweep as JSON (BENCH_deposition.json) "
         "so future PRs have a perf trajectory to diff against",
+    )
+    ap.add_argument(
+        "--gather-json",
+        metavar="PATH",
+        default=None,
+        help="also write the gather kernel sweep as JSON (BENCH_gather.json) "
+        "so future PRs have a perf trajectory to diff against",
+    )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny-shape smoke pass of the kernel-sweep drivers (CI drift "
+        "guard); ignores --only and the *-json flags",
     )
     ap.add_argument(
         "--sim-json",
@@ -58,9 +84,15 @@ def main() -> None:
     )
     args = ap.parse_args()
 
+    if args.smoke:
+        print("name,us_per_call,derived")
+        run_smoke()
+        return
+
     mods = args.only or MODULES
     for flag, value, mod in (
         ("--deposition-json", args.deposition_json, "deposition_sweep"),
+        ("--gather-json", args.gather_json, "gather_sweep"),
         ("--sim-json", args.sim_json, "sim_loop_sweep"),
         ("--dist-json", args.dist_json, "dist_sweep"),
     ):
@@ -78,6 +110,11 @@ def main() -> None:
                 from benchmarks.deposition_sweep import write_json
 
                 write_json(args.deposition_json)
+                continue
+            if name == "gather_sweep" and args.gather_json:
+                from benchmarks.gather_sweep import write_json
+
+                write_json(args.gather_json)
                 continue
             if name == "sim_loop_sweep" and args.sim_json:
                 from benchmarks.sim_loop_sweep import write_json

@@ -165,6 +165,7 @@ def dist_config(spec: SimSpec):
         dt=spec.dt,
         order=spec.deposition.order,
         deposition=spec.deposition.mode,
+        gather=spec.deposition.resolved_gather,
         use_pallas=spec.deposition.use_pallas,
         charge=spec.charge,
         mass=spec.mass,
@@ -355,10 +356,14 @@ def restore_simulation(sim, path: str) -> None:
         if "fields" in name:
             ok = saved == tmpl        # grid blocks: exact invariants
         elif distributed:
-            if "slots" in name:       # (sx, sy, n_cells, capacity)
+            if "slab" in name:        # (sx, sy, n_cells, capacity, ...)
+                ok = saved[:3] == tmpl[:3] and saved[4:] == tmpl[4:]
+            elif "slots" in name:     # (sx, sy, n_cells, capacity)
                 ok = saved[:3] == tmpl[:3]
             else:                     # particle arrays: (sx, sy, n_local, ...)
                 ok = saved[:2] == tmpl[:2] and saved[3:] == tmpl[3:]
+        elif "slab" in name:          # (n_cells, capacity, ...)
+            ok = saved[:1] == tmpl[:1] and saved[2:] == tmpl[2:]
         elif "slots" in name and "particle_slot" not in name:
             ok = saved[:1] == tmpl[:1]  # (n_cells, capacity)
         else:

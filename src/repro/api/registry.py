@@ -108,6 +108,7 @@ _OVERRIDE_PATHS = {
     "ppc_each_dim": ("plasma", "ppc_each_dim"),
     "density": ("plasma", "density"),
     "u_thermal": ("plasma", "u_thermal"),
+    "jitter": ("plasma", "jitter"),
     "seed": ("plasma", "seed"),
     "profile": ("plasma", "profile"),
     "drift": ("plasma", "drift"),

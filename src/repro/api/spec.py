@@ -184,18 +184,20 @@ class PlasmaSpec:
 @dataclasses.dataclass(frozen=True)
 class DepositionSpec:
     """Deposition order/mode (paper ablation axes) and the gather pairing.
-    ``gather=""`` derives the conventional pairing: matrix gather for the
-    bin-based deposition modes, scatter gather otherwise."""
+    ``gather=""`` derives the conventional pairing: fused matrix gather for
+    the bin-based deposition modes, scatter gather otherwise.
+    ``use_pallas`` routes BOTH the deposition and the gather bin
+    contractions through the Pallas kernels."""
 
     order: int = 1
     mode: str = "matrix"  # matrix (fused) | matrix_unfused | scatter | rhocell
     use_pallas: bool = False
-    gather: str = ""      # "" (auto) | matrix | scatter
+    gather: str = ""      # "" (auto) | matrix (fused) | matrix_unfused | scatter
 
     def __post_init__(self):
         if self.mode not in ("matrix", "matrix_unfused", "scatter", "rhocell"):
             raise ValueError(f"unknown deposition mode {self.mode!r}")
-        if self.gather not in ("", "matrix", "scatter"):
+        if self.gather not in ("", "matrix", "matrix_unfused", "scatter"):
             raise ValueError(f"unknown gather mode {self.gather!r}")
         if self.order not in (1, 2, 3):
             raise ValueError(f"deposition order must be 1, 2 or 3, got {self.order}")

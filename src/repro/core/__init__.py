@@ -3,6 +3,9 @@
 from repro.core.binning import (  # noqa: F401
     INVALID,
     BinnedLayout,
+    BinSlab,
+    bin_slab_values,
+    build_bin_slab,
     build_bins,
     cell_coords,
     cell_index,
@@ -23,7 +26,7 @@ from repro.core.deposition import (  # noqa: F401
     deposit_scatter,
     fused_bin_slab,
 )
-from repro.core.gather import gather_matrix, gather_scatter  # noqa: F401
+from repro.core.gather import EB_STAGGERS, gather_fields_fused, gather_matrix, gather_scatter  # noqa: F401
 from repro.core.gpma import GPMAStats, gpma_update  # noqa: F401
 from repro.core.matrix_scatter import matrix_scatter_add, scatter_add_ref  # noqa: F401
 from repro.core.resort_policy import (  # noqa: F401
@@ -39,6 +42,7 @@ from repro.core.rhocell import fold_guards, reduce_rhocell, reduce_rhocell_separ
 from repro.core.shape_functions import (  # noqa: F401
     bspline,
     max_guard,
+    packed_axis_weights,
     shape_weights,
     shape_weights_window,
     support,

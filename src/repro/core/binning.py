@@ -23,6 +23,12 @@ import jax.numpy as jnp
 
 INVALID = jnp.int32(-1)
 
+# Trace-time counter: incremented every time `build_bin_slab` is traced.
+# Tests trace a full pic_step and read the delta to assert structurally that
+# the step stages the particle slab into bin order exactly ONCE (the BinSlab
+# is shared between the fused field gather and the fused deposition).
+SLAB_BUILDS = 0
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +51,68 @@ class BinnedLayout:
 
     def n_empty(self) -> jax.Array:
         return jnp.sum(self.slots < 0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BinSlab:
+    """Bin-resident particle staging slab (pytree), built ONCE per step.
+
+    The slot-table gather of positions is the per-step staging cost every
+    bin-based kernel used to pay separately (six gather_matrix calls plus
+    the fused deposition each re-gathered `pos` into bin order). The slab
+    stages it exactly once and both the fused six-component field gather
+    and the fused deposition contract against it:
+
+      d:      (n_cells, capacity, 3) fractional offsets pos - cell.
+              Gap/overflow slots alias particle 0 — harmless, `valid`
+              (for gather) or the zeroed value slab (for deposition)
+              carries the masking.
+      valid:  (n_cells, capacity) bool, True where the slot holds a
+              particle.
+
+    Velocity-dependent deposition values (q·w·v) are NOT part of the slab:
+    they only exist after the push, and `bin_slab_values` gathers them
+    against the same slot table when the deposition needs them.
+
+    The slab is only consistent with a specific (positions, layout) pair;
+    the simulation step rebuilds it right after the bin update (and the
+    global sort rebuilds it after permuting attributes) and carries it in
+    the simulation state, so the NEXT step's gather reuses the slab the
+    deposition just consumed.
+    """
+
+    d: jax.Array
+    valid: jax.Array
+
+
+def build_bin_slab(pos, layout: BinnedLayout, *, grid_shape) -> BinSlab:
+    """THE slot-table slab gather: stage positions into bin order once.
+
+    Deliberately not jitted on its own — it inlines into the step trace so
+    the SLAB_BUILDS counter sees every staging a traced step performs.
+    """
+    global SLAB_BUILDS
+    SLAB_BUILDS += 1
+    slots = layout.slots
+    n_cells, _ = slots.shape
+    p = jnp.maximum(slots, 0)
+    valid = slots >= 0
+    pos_b = pos[p]                                   # (C, cap, 3) — once
+    cells = cell_coords(n_cells, grid_shape)
+    d = pos_b - cells[:, None, :].astype(pos.dtype)
+    return BinSlab(d=d, valid=valid)
+
+
+def bin_slab_values(vel, qw, layout: BinnedLayout, slab: BinSlab) -> jax.Array:
+    """Per-component deposition values q·w·v staged onto the slab's slot
+    table: (n_cells, capacity, 3), exactly 0 on gap/overflow slots (the
+    value slab carries the deposition masking)."""
+    p = jnp.maximum(layout.slots, 0)
+    valid = slab.valid
+    qw_b = jnp.where(valid, qw[p], jnp.zeros((), qw.dtype))
+    vel_b = jnp.where(valid[..., None], vel[p], jnp.zeros((), vel.dtype))
+    return qw_b[..., None] * vel_b
 
 
 def cell_index(pos, grid_shape) -> jax.Array:

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import shape_functions as sf
-from repro.core.binning import BinnedLayout, cell_coords
+from repro.core.binning import BinnedLayout, BinSlab, bin_slab_values, build_bin_slab, cell_coords
 from repro.core.rhocell import fold_guards, reduce_rhocell, reduce_rhocell_separable
 
 Stagger = tuple[bool, bool, bool]
@@ -193,20 +193,13 @@ def fused_bin_slab(pos, vel, qw, layout: BinnedLayout, *, grid_shape):
 
     Compare binned_shape_factors: that builds the full A:(C,cap,Tx) /
     B:(C,cap,Ty*Tz) operand tensors per component in HBM; here only these
-    two thin slabs exist outside the kernel.
+    two thin slabs exist outside the kernel. The position staging is the
+    shared `binning.build_bin_slab` (a `BinSlab`), so a caller that already
+    holds the step's slab passes it to `deposit_current_matrix_fused`
+    directly and this function never runs.
     """
-    slots = layout.slots
-    n_cells, cap = slots.shape
-    p = jnp.maximum(slots, 0)
-    valid = slots >= 0
-
-    pos_b = pos[p]                                   # (C, cap, 3) — once
-    vel_b = vel[p]
-    qw_b = jnp.where(valid, qw[p], jnp.zeros((), qw.dtype))
-    cells = cell_coords(n_cells, grid_shape)
-    d = pos_b - cells[:, None, :].astype(pos.dtype)
-    val = qw_b[..., None] * jnp.where(valid[..., None], vel_b, jnp.zeros((), vel.dtype))
-    return d, val
+    slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
+    return slab.d, bin_slab_values(vel, qw, layout, slab)
 
 
 @partial(
@@ -224,6 +217,7 @@ def deposit_current_matrix_fused(
     guard: int | None = None,
     fused_matmul: Callable | None = None,
     separable_reduce: bool = True,
+    slab: BinSlab | None = None,
 ):
     """All three Yee-staggered current components in one fused pass — the
     default `Simulation` deposition hot path (paper Alg. 2).
@@ -242,9 +236,18 @@ def deposit_current_matrix_fused(
     TRUE support (no padded FLOPs — XLA einsums pay for every zero) while
     still sharing the slab gather and per-axis weights. Identical math
     either way. Returns [Jx, Jy, Jz] guard-padded.
+
+    ``slab`` is the step's prebuilt `BinSlab` (must be consistent with
+    ``pos``/``layout``): when given, the slot-table position staging is
+    NOT repeated here — only the velocity-dependent q·w·v values are
+    gathered against the same slot table (`bin_slab_values`), so the one
+    slab the step built serves the field gather AND this deposition.
     """
     g = sf.max_guard(order) if guard is None else guard
-    d, val = fused_bin_slab(pos, vel, qw, layout, grid_shape=grid_shape)
+    if slab is None:
+        slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
+    d = slab.d
+    val = bin_slab_values(vel, qw, layout, slab)
     n_cells, cap, _ = d.shape
     reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
 

@@ -9,6 +9,23 @@ particle's value is a small contraction against its tap weights:
     E_p = sum_{m,n} wx_p[m] * (B_p[n] * G_c[m, n])     (B = wy (x) wz)
 
 which is again a batched matmul over the bin axis.
+
+Two bin-based routes live here:
+
+* `gather_matrix`   — ONE staggered component per call. Six calls per step
+                      (Ex/Ey/Ez/Bx/By/Bz), each re-staging positions into
+                      bin order and recomputing per-dim shape weights. Kept
+                      as the ``gather="matrix_unfused"`` ablation mode.
+* `gather_fields_fused` — all six components in one pass against a
+                      prebuilt `BinSlab`: the slot-table position staging
+                      happens ONCE per step (shared with the fused
+                      deposition), the six 1-D weight sets (centered +
+                      staggered per axis) are computed once and shared
+                      across components, and the results scatter back to
+                      particle order through one slot-map gather. The
+                      default ``gather="matrix"`` hot path, with a Pallas
+                      megakernel route (kernels/gather) that builds the
+                      weights in-kernel.
 """
 
 from __future__ import annotations
@@ -19,8 +36,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import shape_functions as sf
-from repro.core.binning import BinnedLayout, cell_coords
+from repro.core.binning import BinnedLayout, BinSlab, cell_coords
 from repro.core.deposition import NO_STAGGER, Stagger, _per_dim_weights, _taps_and_bases
+
+# Component order of the fused six-component gather: Ex Ey Ez Bx By Bz on
+# the standard Yee staggers (must equal pic.grid.E_STAGGER + B_STAGGER —
+# pinned by a test; core cannot import pic). Every component is either
+# centered or staggered per axis, so the six share the six per-axis weight
+# sets of shape_functions.packed_axis_weights.
+EB_STAGGERS: tuple[Stagger, ...] = (
+    (True, False, False), (False, True, False), (False, False, True),
+    (False, True, True), (True, False, True), (True, True, False),
+)
 
 
 @partial(jax.jit, static_argnames=("order", "stagger", "guard"))
@@ -64,9 +91,14 @@ def extract_neighborhoods(grid_padded, grid_shape, *, taps, bases, guard: int):
     return stacked.reshape(nx * ny * nz, tx, ty, tz)
 
 
-@partial(jax.jit, static_argnames=("grid_shape", "order", "stagger", "guard"))
-def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None):
-    """Binned matrix gather. Returns (Np,) values (0 for unslotted particles).
+@partial(jax.jit, static_argnames=("grid_shape", "order", "stagger", "guard", "bin_gather_op"))
+def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None, bin_gather_op=None):
+    """Binned matrix gather, one component. Returns (Np,) values (0 for
+    unslotted particles).
+
+    `bin_gather_op` lets the Pallas kernel (kernels/gather.bin_gather)
+    replace the einsum + tap reduction — the ``gather="matrix_unfused"`` +
+    ``use_pallas`` route; default is the jnp contraction (identical math).
     """
     g = sf.max_guard(order) if guard is None else guard
     taps, bases = _taps_and_bases(order, stagger)
@@ -87,11 +119,103 @@ def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: 
     wz = sf.shape_weights(d[..., 2], order, stagger[2])
     byz = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, ty * tz)
 
-    # H[c,p,m] = sum_n B[c,p,n] G[c,m,n]; E[c,p] = sum_m wx[c,p,m] H[c,p,m]
-    h = jnp.einsum("cpn,cmn->cpm", byz, neigh)
-    e_bins = jnp.sum(wx * h, axis=-1) * valid
+    if bin_gather_op is not None:
+        e_bins = bin_gather_op(wx, byz, neigh).astype(pos_b.dtype) * valid
+    else:
+        # H[c,p,m] = sum_n B[c,p,n] G[c,m,n]; E[c,p] = sum_m wx[c,p,m] H[c,p,m]
+        h = jnp.einsum("cpn,cmn->cpm", byz, neigh)
+        e_bins = jnp.sum(wx * h, axis=-1) * valid
 
     # scatter back to particle order via the slot map
     e_flat = e_bins.reshape(-1)
     pslot = layout.particle_slot
     return jnp.where(pslot >= 0, e_flat[jnp.maximum(pslot, 0)], jnp.zeros((), e_flat.dtype))
+
+
+@partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "fused_gather"))
+def gather_fields_fused(
+    slab: BinSlab,
+    padded_fields,
+    layout: BinnedLayout,
+    *,
+    grid_shape,
+    order: int,
+    guard: int | None = None,
+    fused_gather=None,
+):
+    """All six Yee-staggered field components in one fused pass — the
+    default ``gather="matrix"`` hot path (the dual of the fused
+    three-component deposition).
+
+    The slot-table position staging is NOT repeated here: ``slab`` is the
+    step's one `BinSlab` (fractional offsets + validity, already in bin
+    order) and must be consistent with ``layout`` and the positions the
+    fields are gathered at. The six per-axis 1-D weight sets (centered +
+    staggered per axis — every component uses one of the two variants per
+    axis) are computed once and shared, the four distinct wy⊗wz tap
+    products are reused across the component pairs that share them
+    (Ey/Bz, Ez/By), and the six per-bin results scatter back to particle
+    order through ONE slot-map gather.
+
+    ``padded_fields``: the six guard-padded grids in `EB_STAGGERS` order
+    (Ex, Ey, Ez, Bx, By, Bz).
+
+    ``fused_gather`` is the packed slab -> (C, cap, 6) contraction:
+    kernels.gather.fused_bin_gather (the Pallas megakernel — in-kernel
+    weight build on the VPU + six shared-weight MXU contractions against
+    one packed (C, 6, T, T·T) neighborhood tensor on the unified tap
+    window, so the weight/byz operands never round-trip through HBM) or
+    None for the pure-XLA reference, which contracts each component on its
+    TRUE support (no padded FLOPs — XLA einsums pay for every zero) while
+    still sharing the slab, the weights, and the byz products. Identical
+    math either way.
+
+    Returns ``(e_p, b_p)``: (Np, 3) each, 0 for unslotted particles.
+    """
+    g = sf.max_guard(order) if guard is None else guard
+    d = slab.d
+    n_cells, cap = slab.valid.shape
+
+    if fused_gather is not None:
+        t, base = sf.unified_support(order)
+        packed = jnp.stack(
+            [
+                extract_neighborhoods(
+                    f, grid_shape, taps=(t, t, t), bases=(base, base, base), guard=g
+                ).reshape(n_cells, t, t * t)
+                for f in padded_fields
+            ],
+            axis=1,
+        )  # (C, 6, T, T*T)
+        e_bins = fused_gather(d, packed, order=order).astype(d.dtype)
+    else:
+        # six weight sets on their true supports, shared across components
+        w_u = [sf.shape_weights(d[..., k], order, False) for k in range(3)]
+        w_s = [sf.shape_weights(d[..., k], order, True) for k in range(3)]
+        byz = {}  # four distinct wy (x) wz products over the six components
+        comps = []
+        for comp, stagger in enumerate(EB_STAGGERS):
+            taps, bases = _taps_and_bases(order, stagger)
+            tx, ty, tz = taps
+            neigh = extract_neighborhoods(
+                padded_fields[comp], grid_shape, taps=taps, bases=bases, guard=g
+            ).reshape(n_cells, tx, ty * tz)
+            key = (stagger[1], stagger[2])
+            if key not in byz:
+                wy = w_s[1] if stagger[1] else w_u[1]
+                wz = w_s[2] if stagger[2] else w_u[2]
+                byz[key] = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, ty * tz)
+            wx = w_s[0] if stagger[0] else w_u[0]
+            h = jnp.einsum("cpn,cmn->cpm", byz[key], neigh)
+            comps.append(jnp.sum(wx * h, axis=-1))
+        e_bins = jnp.stack(comps, axis=-1)  # (C, cap, 6)
+
+    # ONE scatter back to particle order for all six components (the
+    # six-call path pays this slot-map gather per component); slots without
+    # a particle are simply never read, unslotted particles read 0
+    flat = e_bins.reshape(n_cells * cap, 6)
+    pslot = layout.particle_slot
+    vals = jnp.where(
+        pslot[:, None] >= 0, flat[jnp.maximum(pslot, 0)], jnp.zeros((), flat.dtype)
+    )
+    return vals[:, :3], vals[:, 3:]

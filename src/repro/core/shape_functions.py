@@ -121,6 +121,35 @@ def unified_support(order: int) -> tuple[int, int]:
     return hi - base, base
 
 
+def packed_axis_weights(d, order: int):
+    """The six 1-D shape-weight sets of a fused six-component kernel —
+    ``(axis, staggered) -> (..., T)`` — all on the order's *unified* tap
+    window, computed once and shared by every field/current component.
+
+    Each axis has exactly two variants (centered and staggered: a component
+    is staggered on an axis or it is not), so six sets cover all six
+    E/B staggers and all three current staggers. On the unified window the
+    off-support taps are exactly 0, so every component can contract against
+    one packed ``(…, T)`` / ``(…, T·T)`` operand shape — the same sharing
+    trick as the fused deposition, here with E and B staggers packed
+    together. Pure elementwise jnp on ``d`` (shape_weights_window), so it
+    traces inside a Pallas kernel body.
+
+    Args:
+      d: (..., 3) fractional in-cell offsets.
+    Returns:
+      dict {(axis, staggered): (..., T) weights}, T = unified_support(order).
+    """
+    t, base = unified_support(order)
+    return {
+        (axis, staggered): shape_weights_window(
+            d[..., axis], order, staggered, n_taps=t, base=base
+        )
+        for axis in (0, 1, 2)
+        for staggered in (False, True)
+    }
+
+
 def max_guard(order: int) -> int:
     """Guard-cell width needed so every tap of every stagger stays in-range.
 

@@ -13,7 +13,7 @@ from repro.kernels.deposition.ops import (  # noqa: F401
     fused_bin_deposit,
     fused_bin_deposit_ref,
 )
-from repro.kernels.gather.ops import bin_gather  # noqa: F401
-from repro.kernels.gather.ref import bin_gather_ref  # noqa: F401
+from repro.kernels.gather.ops import bin_gather, fused_bin_gather  # noqa: F401
+from repro.kernels.gather.ref import bin_gather_ref, fused_bin_gather_ref  # noqa: F401
 from repro.kernels.scatter_matrix.ops import segment_accumulate  # noqa: F401
 from repro.kernels.scatter_matrix.ref import segment_accumulate_ref  # noqa: F401

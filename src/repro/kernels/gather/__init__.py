@@ -1,2 +1,2 @@
-from repro.kernels.gather.ops import bin_gather  # noqa: F401
-from repro.kernels.gather.ref import bin_gather_ref  # noqa: F401
+from repro.kernels.gather.ops import bin_gather, fused_bin_gather  # noqa: F401
+from repro.kernels.gather.ref import bin_gather_ref, fused_bin_gather_ref  # noqa: F401

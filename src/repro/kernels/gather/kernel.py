@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: binned field gather (inverse of the deposition kernel).
+"""Pallas TPU kernels: binned field gather (inverse of the deposition
+kernels).
 
 Per cell, the (Tx, Ty*Tz) node neighbourhood G_c is shared by every particle
 in the bin (the locality the GPMA sorter establishes); each particle's value
@@ -8,6 +9,32 @@ is
 
 i.e. one batched matmul (contract the tap product axis on the MXU) plus a
 small VPU reduction over the Tx taps.
+
+Two kernels live here.
+
+`bin_gather_pallas` — the single-component contraction with the weight
+  operands wx/byz built *outside* the kernel (they round-trip through HBM).
+  The ``gather="matrix_unfused"`` + ``use_pallas`` comparison route.
+
+`fused_gather_pallas` — the fused six-component megakernel (the dual of
+`fused_deposition_pallas`). Per cell-block it:
+
+  (a) loads the step's `BinSlab` offsets ``d:(C, cap, 3)`` — staged ONCE
+      per step and shared with the fused deposition — plus one packed
+      neighborhood tensor ``g:(C, 6, T, T*T)`` holding all six field
+      components (Ex..Bz) on the order's *unified* tap window
+      (shape_functions.unified_support), E and B staggers packed together;
+  (b) computes the six 1-D shape-weight sets (centered + staggered per
+      axis) in-kernel on the VPU via `shape_functions.packed_axis_weights`
+      — off-support taps are exactly 0, so the unified window changes
+      nothing but the (shared) operand shapes;
+  (c) reuses the four distinct wy⊗wz tap products across the component
+      pairs that share them and runs the six MXU contractions against the
+      packed neighborhoods;
+  (d) writes one ``(C, cap, 6)`` per-bin value tile.
+
+The weight and byz operand tensors therefore never exist in HBM — only the
+thin (C, cap, 3) slab and the neighborhood tiles stream in.
 """
 
 from __future__ import annotations
@@ -16,6 +43,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.gather import EB_STAGGERS
+from repro.core.shape_functions import packed_axis_weights, unified_support
 from repro.kernels.common import (
     DEFAULT_VMEM_BUDGET_BYTES,
     choose_block_cells,
@@ -68,3 +97,101 @@ def bin_gather_pallas(
         out_shape=jax.ShapeDtypeStruct((c, cap), jnp.float32),
         interpret=interpret,
     )(wx, byz, g)
+
+
+# ---------------------------------------------------------------------------
+# Fused six-component megakernel
+# ---------------------------------------------------------------------------
+
+
+def _make_fused_gather_kernel(order: int):
+    t, _ = unified_support(order)
+
+    def kernel(d_ref, g_ref, o_ref):
+        d = d_ref[...]  # (CB, cap, 3) fractional in-cell offsets
+        g = g_ref[...]  # (CB, 6, T, T*T) packed neighborhoods, Ex..Bz
+        cb, cap = d.shape[0], d.shape[1]
+
+        # (b) six 1-D weight sets on the VPU, one evaluation for all six
+        # components (every component is centered or staggered per axis)
+        w = packed_axis_weights(d, order)
+
+        # (c) six MXU contractions sharing the weights; the four distinct
+        # wy (x) wz products are built once and reused across the component
+        # pairs that share them (Ey/Bz and Ez/By)
+        byz = {}
+        outs = []
+        for comp, stagger in enumerate(EB_STAGGERS):
+            key = (stagger[1], stagger[2])
+            if key not in byz:
+                wy = w[(1, stagger[1])]
+                wz = w[(2, stagger[2])]
+                byz[key] = (wy[..., :, None] * wz[..., None, :]).reshape(cb, cap, t * t)
+            # H[c,p,m] = sum_n byz[c,p,n] * G[c,comp,m,n]   (MXU)
+            h = jax.lax.dot_general(
+                byz[key],
+                g[:, comp],
+                dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )
+            # e[c,p] = sum_m wx * H                         (VPU)
+            outs.append(jnp.sum(w[(0, stagger[0])] * h, axis=-1))
+        # (d) one packed per-bin value tile
+        o_ref[...] = jnp.stack(outs, axis=-1)
+
+    return kernel
+
+
+def fused_gather_bytes_per_cell(cap: int, order: int) -> int:
+    """VMEM working set of one cell in the fused gather kernel, in bytes:
+    the (cap, 3) slab, the packed (6, T, T*T) neighborhoods, six (cap, T)
+    weight sets, the four (cap, T*T) byz products, the (cap, T) live H, and
+    the (cap, 6) output tile twice (stack temp + output block)."""
+    t, _ = unified_support(order)
+    return 4 * (cap * 3 + 6 * t * t * t + 6 * cap * t + 4 * cap * t * t + cap * t + 2 * cap * 6)
+
+
+def fused_gather_pallas(
+    d: jax.Array,
+    g: jax.Array,
+    *,
+    order: int,
+    block_cells: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> jax.Array:
+    """Fused Ex/Ey/Ez/Bx/By/Bz gather contraction.
+
+    d: (C, cap, 3) fractional offsets pos - cell (gap slots: any value —
+       their outputs are never read back through the slot map).
+    g: (C, 6, T, T*T) packed per-cell neighborhoods of the six field
+       components on the unified window of ``order``.
+    Returns (C, cap, 6) float32 per-bin field values in EB_STAGGERS order.
+    """
+    c, cap, three = d.shape
+    assert three == 3
+    t, _ = unified_support(order)
+    assert g.shape == (c, 6, t, t * t), f"expected {(c, 6, t, t * t)}, got {g.shape}"
+
+    interpret = resolve_interpret(interpret)
+    if block_cells is None:
+        block_cells = choose_block_cells(
+            c,
+            fused_gather_bytes_per_cell(cap, order),
+            vmem_budget_bytes=vmem_budget_bytes,
+            interpret=interpret,
+        )
+    cb = min(block_cells, c)
+
+    grid = (pl.cdiv(c, cb),)
+    return pl.pallas_call(
+        _make_fused_gather_kernel(order),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cb, cap, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb, 6, t, t * t), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((cb, cap, 6), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, cap, 6), jnp.float32),
+        interpret=interpret,
+    )(d, g)

@@ -1,4 +1,11 @@
-"""Jit'd wrapper for the binned gather kernel (interpret auto-detected)."""
+"""Jit'd wrappers for the binned gather kernels (interpret auto-detected).
+
+`bin_gather` is the single-component contraction that `gather_matrix` plugs
+in as `bin_gather_op` (the ``gather="matrix_unfused"`` + ``use_pallas``
+comparison route). `fused_bin_gather` is the six-component megakernel that
+`gather_fields_fused` plugs in as `fused_gather` — the default gather hot
+path of ``PICConfig(use_pallas=True)``.
+"""
 
 from __future__ import annotations
 
@@ -6,10 +13,15 @@ from functools import partial
 
 import jax
 
-from repro.kernels.gather.kernel import bin_gather_pallas
-from repro.kernels.gather.ref import bin_gather_ref  # noqa: F401
+from repro.kernels.gather.kernel import bin_gather_pallas, fused_gather_pallas
+from repro.kernels.gather.ref import bin_gather_ref, fused_bin_gather_ref  # noqa: F401
 
 
 @partial(jax.jit, static_argnames=("block_cells",))
 def bin_gather(wx, byz, g, *, block_cells: int | None = None):
     return bin_gather_pallas(wx, byz, g, block_cells=block_cells)
+
+
+@partial(jax.jit, static_argnames=("order", "block_cells"))
+def fused_bin_gather(d, g, *, order: int, block_cells: int | None = None):
+    return fused_gather_pallas(d, g, order=order, block_cells=block_cells)

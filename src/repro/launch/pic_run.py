@@ -55,6 +55,8 @@ def build_spec(args) -> SimSpec:
         overrides["order"] = args.order
     if args.deposition is not None:
         overrides["deposition"] = args.deposition
+    if args.gather is not None:
+        overrides["gather"] = args.gather
     if args.sort is not None:
         overrides["sort"] = args.sort
     if args.mesh is not None:
@@ -96,6 +98,8 @@ def main() -> None:
     ov.add_argument("--ppc", type=int, default=None, help="particles per cell per dim")
     ov.add_argument("--order", type=int, default=None, choices=[1, 2, 3])
     ov.add_argument("--deposition", choices=["scatter", "rhocell", "matrix", "matrix_unfused"], default=None)
+    ov.add_argument("--gather", choices=["matrix", "matrix_unfused", "scatter"], default=None,
+                    help="field-gather mode (default: auto-paired — fused matrix for bin depositions)")
     ov.add_argument("--sort", choices=["incremental", "rebuild", "global", "none"], default=None)
     ov.add_argument("--grid", type=int, nargs=3, default=None)
     ov.add_argument("--use-pallas", action="store_true", dest="use_pallas")

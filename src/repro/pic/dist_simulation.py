@@ -141,13 +141,14 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
     n_slots_total = n_shards * cfg.local_grid.n_cells * cfg.capacity
 
     def window_step(carry, i):
-        fields, pos, u, w, alive, slots, pslot, pstate, halted, halt_code, sorts, rebuilds, n_target = carry
+        (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+         pstate, halted, halt_code, sorts, rebuilds, n_target) = carry
 
         # the step always executes (its ppermutes must run on every shard
         # every iteration); outputs are masked once the window is halted —
         # same masked pass-through trick as the single-device window
-        nf, npos, nu, nw, nalive, nslots, npslot, stats = dist_pic_step_local(
-            fields, pos, u, w, alive, slots, pslot, cfg
+        nf, npos, nu, nw, nalive, nslots, npslot, nslab_d, nslab_valid, stats = dist_pic_step_local(
+            fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, cfg
         )
 
         # in-graph re-sort policy over the psum-reduced stats: the reduced
@@ -164,16 +165,16 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
         reason = jnp.where(mandatory, jnp.int32(REASON_OVERFLOW), reason_pol).astype(jnp.int32)
 
         # per-shard global sort under lax.cond — purely local work (attribute
-        # permutation + bin rebuild), so no collective sits inside the cond;
-        # the local overflow is psum-reduced afterwards
+        # permutation + bin/slab rebuild), so no collective sits inside the
+        # cond; the local overflow is psum-reduced afterwards
         def sort_branch(args):
             return dist_global_sort_device(*args, cfg)
 
         def no_sort(args):
             pos, u, w, alive = args
-            return pos, u, w, alive, nslots, npslot, jnp.zeros((), jnp.int32)
+            return pos, u, w, alive, nslots, npslot, nslab_d, nslab_valid, jnp.zeros((), jnp.int32)
 
-        npos, nu, nw, nalive, nslots, npslot, overflow_local = lax.cond(
+        npos, nu, nw, nalive, nslots, npslot, nslab_d, nslab_valid, overflow_local = lax.cond(
             do_sort, sort_branch, no_sort, (npos, nu, nw, nalive)
         )
         overflow_after = psum_all(overflow_local, cfg)
@@ -201,6 +202,7 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
         fields = keep(fields, nf)
         pos, u, w, alive = keep((pos, u, w, alive), (npos, nu, nw, nalive))
         slots, pslot = keep((slots, pslot), (nslots, npslot))
+        slab_d, slab_valid = keep((slab_d, slab_valid), (nslab_d, nslab_valid))
         pstate = jax.tree.map(lambda o, n: jnp.where(counted, n, o), pstate, pstate_new)
         sorts = sorts + (counted & do_pol).astype(jnp.int32)
         rebuilds = rebuilds + (counted & mandatory).astype(jnp.int32)
@@ -229,21 +231,40 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
             "field_energy": jnp.where(counted, field_e, 0.0),
             "kinetic_energy": jnp.where(counted, kinetic, 0.0),
         }
-        carry = (fields, pos, u, w, alive, slots, pslot, pstate, halted, halt_code, sorts, rebuilds, n_target)
+        carry = (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+                 pstate, halted, halt_code, sorts, rebuilds, n_target)
         return carry, diag
 
-    def window_body(fields, pos, u, w, alive, slots, pslot, pstate, n_target):
+    def window_body(fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+                    pstate, n_target, presort):
         global _window_trace_count
         _window_trace_count += 1
         sq = lambda a: a.reshape(a.shape[2:])
-        pos, u, w, alive, slots, pslot = map(sq, (pos, u, w, alive, slots, pslot))
+        pos, u, w, alive, slots, pslot, slab_d, slab_valid = map(
+            sq, (pos, u, w, alive, slots, pslot, slab_d, slab_valid)
+        )
+        # capacity-growth re-entry (the windowed halt-and-grow protocol):
+        # the host PADDED the slot table / slab to the doubled capacity and
+        # asks for one in-graph per-shard sort BEFORE the first step, so the
+        # overflowed stragglers are slotted at the new capacity without a
+        # separate compiled sort program or an extra host round-trip. Purely
+        # local work under lax.cond (presort is replicated — every shard
+        # takes the same branch); a still-persisting overflow is caught by
+        # the first step's mandatory-sort machinery and halts again.
+        pos, u, w, alive, slots, pslot, slab_d, slab_valid = lax.cond(
+            presort > 0,
+            lambda a: dist_global_sort_device(a[0], a[1], a[2], a[3], cfg)[:8],
+            lambda a: a,
+            (pos, u, w, alive, slots, pslot, slab_d, slab_valid),
+        )
         zero = jnp.zeros((), jnp.int32)
         carry0 = (
-            fields, pos, u, w, alive, slots, pslot, pstate,
+            fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, pstate,
             n_target <= jnp.int32(0), zero, zero, zero, n_target,
         )
         carry, per_step = lax.scan(window_step, carry0, jnp.arange(n_steps, dtype=jnp.int32))
-        fields, pos, u, w, alive, slots, pslot, pstate, halted, halt_code, sorts, rebuilds, _ = carry
+        (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+         pstate, halted, halt_code, sorts, rebuilds, _) = carry
         bundle = {
             "n_done": jnp.sum(per_step["active"]).astype(jnp.int32),
             "n_sorts": sorts,
@@ -252,8 +273,10 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
             "per_step": per_step,
         }
         ex = lambda a: a.reshape((1, 1) + a.shape)
-        pos, u, w, alive, slots, pslot = map(ex, (pos, u, w, alive, slots, pslot))
-        return fields, pos, u, w, alive, slots, pslot, pstate, bundle
+        pos, u, w, alive, slots, pslot, slab_d, slab_valid = map(
+            ex, (pos, u, w, alive, slots, pslot, slab_d, slab_valid)
+        )
+        return fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, pstate, bundle
 
     fspec = P(cfg.x_axes, cfg.y_axes, None)
 
@@ -264,13 +287,17 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
         (fspec,) * 6,
         spec(None, None), spec(None, None), spec(None), spec(None),
         spec(None, None), spec(None),
+        spec(None, None, None),  # slab_d
+        spec(None, None),        # slab_valid
         P(),  # policy state (replicated scalars)
         P(),  # n_target
+        P(),  # presort flag (capacity-growth re-entry)
     )
     out_specs = (
         (fspec,) * 6,
         spec(None, None), spec(None, None), spec(None), spec(None),
         spec(None, None), spec(None),
+        spec(None, None, None), spec(None, None),
         P(),  # policy state
         P(),  # bundle (everything psum-reduced / replicated)
     )
@@ -281,7 +308,7 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
     sm = shard_map_compat(
         window_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
-    return jax.jit(sm, donate_argnums=tuple(range(8)))
+    return jax.jit(sm, donate_argnums=tuple(range(10)))
 
 
 # ---------------------------------------------------------------------------
@@ -355,11 +382,14 @@ class DistSimulation:
         # initial binning; grow capacity up front if the initial density
         # already overflows (mirrors Simulation.__init__)
         while True:
-            slots, pslot, overflow = build_local_bins(self.pos, self.alive, local, self.config.capacity)
+            slots, pslot, slab_d, slab_valid, overflow = build_local_bins(
+                self.pos, self.alive, local, self.config.capacity
+            )
             if not overflow:
                 break
             self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
         self.slots, self.pslot = slots, pslot
+        self.slab_d, self.slab_valid = slab_d, slab_valid
 
         # private copies (the windowed program donates its inputs)
         self.fields = tuple(jnp.asarray(f).copy() for f in (
@@ -370,6 +400,7 @@ class DistSimulation:
         self.policy_state = policy_init()
         self.sorts = 0
         self.rebuilds = 0
+        self._pending_presort = False  # capacity-growth re-entry flag
         self.growths = {"capacity": 0, "mig_cap": 0, "n_local": 0}
         self.mig_recv_dropped = 0  # host loop only; the windowed driver never drops
         self.history: list[dict] = []
@@ -433,10 +464,12 @@ class DistSimulation:
         while done < n_steps:
             k = min(window, n_steps - done)
             fn = self._window_fn(window, bool(diagnostics_every))
+            presort = jnp.int32(1 if self._pending_presort else 0)
+            self._pending_presort = False
             (self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
-             self.policy_state, bundle) = fn(
+             self.slab_d, self.slab_valid, self.policy_state, bundle) = fn(
                 self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
-                self.policy_state, jnp.int32(k),
+                self.slab_d, self.slab_valid, self.policy_state, jnp.int32(k), presort,
             )
             host = _fetch_bundle(bundle)  # the single device->host sync of this window
             n_done, n_sorts, n_rebuilds = consume_window_bundle(
@@ -464,8 +497,9 @@ class DistSimulation:
             n_slots_total = self.sx * self.sy * self.config.local_grid.n_cells * self.config.capacity
             t0 = time.perf_counter()
             (self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
-             stats) = self._step_fn()(
-                self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot
+             self.slab_d, self.slab_valid, stats) = self._step_fn()(
+                self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
+                self.slab_d, self.slab_valid,
             )
             # the per-step host sync: ONE transfer for all stat scalars (a
             # per-key int() would cost a blocking round-trip each)
@@ -501,10 +535,14 @@ class DistSimulation:
 
     def _dist_sort(self) -> None:
         """Per-shard global sort at the current capacity; grows capacity
-        until the bins absorb every resident particle."""
+        until the bins absorb every resident particle. Host-loop escape
+        hatch only — the windowed driver grows through `_grow_capacity`
+        (pad + in-graph presort, no separate sort program)."""
         while True:
             (self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
-             overflow) = self._sort_fn()(self.pos, self.u, self.w, self.alive)
+             self.slab_d, self.slab_valid, overflow) = self._sort_fn()(
+                self.pos, self.u, self.w, self.alive
+            )
             if int(overflow) == 0:
                 return
             self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
@@ -514,9 +552,33 @@ class DistSimulation:
             )
 
     def _grow_capacity(self) -> None:
-        self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
+        """Windowed halt-and-grow (HALT_BIN_OVERFLOW): double the bin
+        capacity by PADDING the carried slot table / slab arrays — a pure
+        device-side reshape, no separate compiled sort program and no
+        overflow fetch (the host round-trip `_dist_sort` used to pay) —
+        and flag the next window entry to run the in-graph per-shard
+        presort, which slots the overflowed stragglers at the new capacity
+        before the first step."""
+        old_cap = self.config.capacity
+        self.config = dataclasses.replace(self.config, capacity=old_cap * 2)
         self.growths["capacity"] += 1
-        self._dist_sort()
+        assert self.config.capacity <= 2 * max(self.n_local, 1), (
+            "binning overflow persists with capacity > n_local"
+        )
+        pad = lambda a, fill: jnp.concatenate(
+            [a, jnp.full(a.shape[:3] + (old_cap,) + a.shape[4:], fill, a.dtype)], axis=3
+        )
+        self.slots = pad(self.slots, np.int32(-1))
+        self.slab_d = pad(self.slab_d, 0.0)
+        self.slab_valid = pad(self.slab_valid, False)
+        # flat slot ids encode cell * capacity + rank — remap to the new row
+        # stride so the padded table stays self-consistent (the presort
+        # rebuilds everything anyway, but a consistent state never hurts)
+        ps = self.pslot
+        self.pslot = jnp.where(
+            ps >= 0, (ps // old_cap) * self.config.capacity + ps % old_cap, ps
+        )
+        self._pending_presort = True
 
     def _grow_mig_cap(self) -> None:
         self.config = dataclasses.replace(self.config, mig_cap=self.config.mig_cap * 2)
@@ -545,12 +607,13 @@ class DistSimulation:
     @property
     def state(self) -> dict:
         """The device-resident simulation pytree (SimDriver protocol view):
-        sharded field blocks + shard-local particle/bin arrays. Plays the
-        same role `PICState` plays for the single-device driver."""
+        sharded field blocks + shard-local particle/bin/slab arrays. Plays
+        the same role `PICState` plays for the single-device driver."""
         return {
             "fields": self.fields,
             "pos": self.pos, "u": self.u, "w": self.w, "alive": self.alive,
             "slots": self.slots, "pslot": self.pslot,
+            "slab_d": self.slab_d, "slab_valid": self.slab_valid,
         }
 
     @state.setter
@@ -558,6 +621,7 @@ class DistSimulation:
         self.fields = tuple(tree["fields"])
         self.pos, self.u, self.w = tree["pos"], tree["u"], tree["w"]
         self.alive, self.slots, self.pslot = tree["alive"], tree["slots"], tree["pslot"]
+        self.slab_d, self.slab_valid = tree["slab_d"], tree["slab_valid"]
 
     def save(self, path: str) -> None:
         """Checkpoint the full pytree (state + SortPolicyState) and host

@@ -44,15 +44,17 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (
+    build_bin_slab,
     build_bins,
     cell_index,
     deposit_current_matrix_fused,
     deposit_matrix,
+    gather_fields_fused,
     gather_matrix,
     gpma_update,
     sort_permutation,
 )
-from repro.core.binning import BinnedLayout
+from repro.core.binning import BinnedLayout, BinSlab
 from repro.pic.grid import B_STAGGER, E_STAGGER, GridSpec
 from repro.pic.maxwell import curl_b_padded, curl_e_padded
 from repro.pic.plasma import ParticleState
@@ -205,7 +207,8 @@ class DistConfig:
     dt: float
     order: int = 1
     deposition: str = "matrix"    # matrix (fused megakernel) | matrix_unfused
-    use_pallas: bool = False      # route the bin contraction through Pallas
+    gather: str = "matrix"        # matrix (fused six-component) | matrix_unfused
+    use_pallas: bool = False      # route the bin contractions through Pallas
     charge: float = -1.0
     mass: float = 1.0
     capacity: int = 16
@@ -220,10 +223,23 @@ class DistConfig:
                 f"DistConfig.deposition must be 'matrix' or 'matrix_unfused', got {self.deposition!r} "
                 "(the distributed step is bin-based; scatter/rhocell modes are single-device only)"
             )
+        if self.gather not in ("matrix", "matrix_unfused"):
+            raise ValueError(
+                f"DistConfig.gather must be 'matrix' or 'matrix_unfused', got {self.gather!r} "
+                "(the distributed step gathers through the bins; scatter gather is single-device only)"
+            )
 
     @property
     def guard(self) -> int:
         return max_guard(self.order)
+
+    @property
+    def needs_slab(self) -> bool:
+        """Whether the step rebuilds the carried `BinSlab` (a fused kernel
+        consumes it). The slab arrays are always carried — the shard_map
+        specs stay config-independent — but pure-unfused ablation configs
+        pass them through untouched."""
+        return self.deposition == "matrix" or self.gather == "matrix"
 
 
 def validate_shard_guard(local_grid: GridSpec, order: int) -> None:
@@ -276,9 +292,12 @@ def in_domain(pos, shape):
     return (x >= 0) & (x < shape[0]) & (y >= 0) & (y < shape[1])
 
 
-def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: DistConfig):
+def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, slab_valid, cfg: DistConfig):
     """Body executed per shard inside shard_map. fields: 6-tuple of local
-    blocks; particle arrays local. Returns updated locals + stats dict."""
+    blocks; particle arrays local; ``slab_d``/``slab_valid`` the carried
+    `BinSlab` arrays (consistent with the incoming bins — rebuilt below
+    right after the bin update, exactly like the single-device step).
+    Returns updated locals + stats dict."""
     ex, ey, ez, bx, by, bz = fields
     g = cfg.guard
     shape = cfg.local_grid.shape
@@ -292,12 +311,30 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
     # 1. halo-extended fields + gather
     pe = [_extend_all(f, g, cfg) for f in (ex, ey, ez)]
     pb = [_extend_all(f, g, cfg) for f in (bx, by, bz)]
-    e_p = jnp.stack(
-        [gather_matrix(pos, pe[k], layout, grid_shape=shape, order=cfg.order, stagger=E_STAGGER[k]) for k in range(3)], -1
-    )
-    b_p = jnp.stack(
-        [gather_matrix(pos, pb[k], layout, grid_shape=shape, order=cfg.order, stagger=B_STAGGER[k]) for k in range(3)], -1
-    )
+    if cfg.gather == "matrix":
+        # fused six-component pass over the carried slab (one staging, six
+        # shared weight sets, one slot-map scatter-back)
+        fused_gather = None
+        if cfg.use_pallas:
+            from repro.kernels.gather.ops import fused_bin_gather
+
+            fused_gather = fused_bin_gather
+        e_p, b_p = gather_fields_fused(
+            BinSlab(d=slab_d, valid=slab_valid), tuple(pe) + tuple(pb), layout,
+            grid_shape=shape, order=cfg.order, fused_gather=fused_gather,
+        )
+    else:  # matrix_unfused: six-call comparison mode
+        bin_gather_op = None
+        if cfg.use_pallas:
+            from repro.kernels.gather.ops import bin_gather
+
+            bin_gather_op = bin_gather
+        e_p = jnp.stack(
+            [gather_matrix(pos, pe[k], layout, grid_shape=shape, order=cfg.order, stagger=E_STAGGER[k], bin_gather_op=bin_gather_op) for k in range(3)], -1
+        )
+        b_p = jnp.stack(
+            [gather_matrix(pos, pb[k], layout, grid_shape=shape, order=cfg.order, stagger=B_STAGGER[k], bin_gather_op=bin_gather_op) for k in range(3)], -1
+        )
 
     # 2. push (positions NOT wrapped: out-of-range triggers migration);
     # frozen out-of-domain particles keep position AND momentum so they
@@ -353,6 +390,15 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
         arrived & binned & (stale_cell < 0) & (layout.particle_slot < 0)
     )
 
+    # 4b. the step's ONE slab staging, consistent with (pos_new, layout):
+    # consumed by the fused deposition below and carried for the next
+    # step's fused gather (pure-unfused ablation configs carry the input
+    # slab through untouched — nothing consumes it)
+    if cfg.needs_slab:
+        slab = build_bin_slab(pos_new, layout, grid_shape=shape)
+    else:
+        slab = BinSlab(d=slab_d, valid=slab_valid)
+
     # 5. deposition + guard reduction (binned particles only: the layout
     # already excludes stragglers, qw masking keeps the oracle identical)
     gamma = lorentz_gamma(u_new)
@@ -366,7 +412,8 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
 
             fused_matmul = fused_bin_deposit
         j3 = deposit_current_matrix_fused(
-            pos_new, v, qw, layout, grid_shape=shape, order=cfg.order, fused_matmul=fused_matmul
+            pos_new, v, qw, layout, grid_shape=shape, order=cfg.order,
+            fused_matmul=fused_matmul, slab=slab,
         )
         j = [_reduce_all(jp, g, cfg) * inv_vol for jp in j3]
     else:  # matrix_unfused: per-component comparison mode
@@ -410,7 +457,7 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, cfg: Dis
     for k in list(stats):
         stats[k] = psum_all(stats[k], cfg)
 
-    return (ex1, ey1, ez1, bx2, by2, bz2), pos_new, u_new, w, alive, layout.slots, layout.particle_slot, stats
+    return (ex1, ey1, ez1, bx2, by2, bz2), pos_new, u_new, w, alive, layout.slots, layout.particle_slot, slab.d, slab.valid, stats
 
 
 def psum_all(value, cfg: DistConfig):
@@ -429,8 +476,9 @@ STAT_KEYS = (
 def dist_global_sort_device(pos, u, w, alive, cfg: DistConfig):
     """Per-shard GlobalSortParticlesByCell, traceable (runs under `lax.cond`
     inside the windowed shard_map driver): permute the shard's attribute
-    arrays into cell order + rebuild the local bins, returning the LOCAL
-    overflow as a traced int32 (callers psum it).
+    arrays into cell order + rebuild the local bins AND the staging slab
+    (the permutation invalidates both), returning the LOCAL overflow as a
+    traced int32 (callers psum it).
 
     Unmigrated send-overflow stragglers (alive, out-of-domain) sort to the
     back with the dead particles and stay out of the bins, but keep their
@@ -444,7 +492,8 @@ def dist_global_sort_device(pos, u, w, alive, cfg: DistConfig):
     layout, overflow = build_bins(
         cell_index(pos, shape), binned, n_cells=cfg.local_grid.n_cells, capacity=cfg.capacity
     )
-    return pos, u, w, alive, layout.slots, layout.particle_slot, overflow.astype(jnp.int32)
+    slab = build_bin_slab(pos, layout, grid_shape=shape)
+    return pos, u, w, alive, layout.slots, layout.particle_slot, slab.d, slab.valid, overflow.astype(jnp.int32)
 
 
 def make_dist_step(mesh, cfg: DistConfig):
@@ -460,28 +509,33 @@ def make_dist_step(mesh, cfg: DistConfig):
 
     in_specs = (
         (fspec,) * 6,
-        spec(None, None),  # pos (SX,SY,Nloc,3)
-        spec(None, None),  # u
-        spec(None),        # w
-        spec(None),        # alive
-        spec(None, None),  # slots
-        spec(None),        # particle_slot
+        spec(None, None),        # pos (SX,SY,Nloc,3)
+        spec(None, None),        # u
+        spec(None),              # w
+        spec(None),              # alive
+        spec(None, None),        # slots
+        spec(None),              # particle_slot
+        spec(None, None, None),  # slab_d (SX,SY,C,cap,3)
+        spec(None, None),        # slab_valid (SX,SY,C,cap)
     )
     out_specs = (
         (fspec,) * 6,
         spec(None, None), spec(None, None), spec(None), spec(None),
         spec(None, None), spec(None),
+        spec(None, None, None), spec(None, None),
         {k: P() for k in STAT_KEYS},
     )
 
-    def body(fields, pos, u, w, alive, slots, pslot):
+    def body(fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid):
         # strip the (1,1) leading shard dims from particle arrays
         sq = lambda a: a.reshape(a.shape[2:])
-        fields, pos, u, w, alive, slots, pslot, stats = dist_pic_step_local(
-            fields, sq(pos), sq(u), sq(w), sq(alive), sq(slots), sq(pslot), cfg
+        fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, stats = dist_pic_step_local(
+            fields, sq(pos), sq(u), sq(w), sq(alive), sq(slots), sq(pslot),
+            sq(slab_d), sq(slab_valid), cfg
         )
         ex = lambda a: a.reshape((1, 1) + a.shape)
-        return fields, ex(pos), ex(u), ex(w), ex(alive), ex(slots), ex(pslot), stats
+        return (fields, ex(pos), ex(u), ex(w), ex(alive), ex(slots), ex(pslot),
+                ex(slab_d), ex(slab_valid), stats)
 
     sm = shard_map_compat(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(sm)
@@ -489,25 +543,29 @@ def make_dist_step(mesh, cfg: DistConfig):
 
 def make_dist_sort(mesh, cfg: DistConfig):
     """Jitted shard_map per-shard global sort (attribute permutation + bin
-    rebuild at ``cfg.capacity``). Host escape hatch for bin-capacity growth:
-    rebuild at a doubled capacity without re-partitioning. Returns
-    ``(pos, u, w, alive, slots, pslot, overflow)`` with overflow psum-reduced
-    (replicated scalar)."""
+    AND slab rebuild at ``cfg.capacity``). Host escape hatch used by the
+    per-step host loop; the windowed driver grows capacity through the
+    halt-and-grow protocol instead (pad + in-graph presort — see
+    DistSimulation._grow_capacity). Returns
+    ``(pos, u, w, alive, slots, pslot, slab_d, slab_valid, overflow)`` with
+    overflow psum-reduced (replicated scalar)."""
 
     def spec(*extra):
         return P(cfg.x_axes, cfg.y_axes, *extra)
 
     part_specs = (spec(None, None), spec(None, None), spec(None), spec(None))
     in_specs = part_specs
-    out_specs = (*part_specs, spec(None, None), spec(None), P())
+    out_specs = (*part_specs, spec(None, None), spec(None),
+                 spec(None, None, None), spec(None, None), P())
 
     def body(pos, u, w, alive):
         sq = lambda a: a.reshape(a.shape[2:])
-        pos, u, w, alive, slots, pslot, overflow = dist_global_sort_device(
+        pos, u, w, alive, slots, pslot, slab_d, slab_valid, overflow = dist_global_sort_device(
             sq(pos), sq(u), sq(w), sq(alive), cfg
         )
         ex = lambda a: a.reshape((1, 1) + a.shape)
-        return ex(pos), ex(u), ex(w), ex(alive), ex(slots), ex(pslot), psum_all(overflow, cfg)
+        return (ex(pos), ex(u), ex(w), ex(alive), ex(slots), ex(pslot),
+                ex(slab_d), ex(slab_valid), psum_all(overflow, cfg))
 
     sm = shard_map_compat(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(sm)
@@ -552,17 +610,24 @@ def partition_particles(parts: ParticleState, global_grid: GridSpec, sx: int, sy
 
 
 def build_local_bins(pos, alive, local_grid: GridSpec, capacity: int):
-    """Vectorized over the two leading shard dims (host-side init)."""
+    """Vectorized over the two leading shard dims (host-side init). Returns
+    the per-shard bins AND the initial `BinSlab` staging arrays (the first
+    step's gather consumes the slab, like the single-device init)."""
     sx, sy = pos.shape[:2]
     f = lambda p, a: build_bins(cell_index(p, local_grid.shape), a, n_cells=local_grid.n_cells, capacity=capacity)
-    slots, pslot, overflow = [], [], 0
+    slots, pslot, slab_d, slab_valid, overflow = [], [], [], [], 0
     for a in range(sx):
-        srow, prow = [], []
+        srow, prow, drow, vrow = [], [], [], []
         for b in range(sy):
             layout, of = f(pos[a, b], alive[a, b])
+            slab = build_bin_slab(pos[a, b], layout, grid_shape=local_grid.shape)
             srow.append(layout.slots)
             prow.append(layout.particle_slot)
+            drow.append(slab.d)
+            vrow.append(slab.valid)
             overflow += int(of)
         slots.append(jnp.stack(srow))
         pslot.append(jnp.stack(prow))
-    return jnp.stack(slots), jnp.stack(pslot), overflow
+        slab_d.append(jnp.stack(drow))
+        slab_valid.append(jnp.stack(vrow))
+    return jnp.stack(slots), jnp.stack(pslot), jnp.stack(slab_d), jnp.stack(slab_valid), overflow

@@ -51,9 +51,11 @@ from jax import lax
 
 from repro.core import (
     REASON_NAMES,
+    BinSlab,
     ResortPolicy,
     SortPolicyConfig,
     SortPolicyState,
+    build_bin_slab,
     build_bins,
     cell_index,
     choose_capacity,
@@ -62,6 +64,7 @@ from repro.core import (
     deposit_rhocell,
     deposit_scatter,
     fold_guards,
+    gather_fields_fused,
     gather_matrix,
     gather_scatter,
     gpma_update,
@@ -87,13 +90,14 @@ class PICConfig:
     dt: float
     order: int = 1
     deposition: str = "matrix"   # scatter | rhocell | matrix (fused) | matrix_unfused
-    gather: str = "matrix"       # scatter | matrix
+    gather: str = "matrix"       # scatter | matrix (fused) | matrix_unfused (six-call)
     sort_mode: str = "incremental"
     charge: float = -1.0
     mass: float = 1.0
     ckc_beta: float = 0.0
     capacity: int = 16
-    use_pallas: bool = False     # route bin contraction through the Pallas op
+    use_pallas: bool = False     # route the bin contractions (deposition AND
+                                 # gather) through the Pallas kernels
 
     @property
     def q_over_m(self) -> float:
@@ -105,7 +109,14 @@ class PICConfig:
 
     @property
     def needs_bins(self) -> bool:
-        return self.deposition in ("matrix", "matrix_unfused") or self.gather == "matrix"
+        return self.deposition in ("matrix", "matrix_unfused") or self.gather in ("matrix", "matrix_unfused")
+
+    @property
+    def needs_slab(self) -> bool:
+        """Whether the step stages (and the state carries) a `BinSlab` —
+        exactly when a FUSED bin kernel consumes it. The unfused ablation
+        modes keep their historical per-call staging."""
+        return self.deposition == "matrix" or self.gather == "matrix"
 
 
 @jax.tree_util.register_dataclass
@@ -115,6 +126,19 @@ class PICState:
     particles: ParticleState
     layout: BinnedLayout
     step: jax.Array
+    # The step's one bin-resident staging slab (None unless a fused bin
+    # kernel consumes it — config.needs_slab). Always consistent with
+    # (particles.pos, layout): rebuilt right after every bin update and
+    # after every global sort, so the slab the deposition of step n
+    # contracts against is the slab the gather of step n+1 reuses.
+    slab: BinSlab | None = None
+
+
+def _state_slab(particles: ParticleState, layout: BinnedLayout, config: PICConfig) -> BinSlab | None:
+    """The ONE slot-table slab staging of a step (see binning.BinSlab)."""
+    if not config.needs_slab:
+        return None
+    return build_bin_slab(particles.pos, layout, grid_shape=config.grid.shape)
 
 
 def init_state(fields: FieldState, particles: ParticleState, config: PICConfig) -> tuple[PICState, int]:
@@ -124,39 +148,64 @@ def init_state(fields: FieldState, particles: ParticleState, config: PICConfig) 
     particles = jax.tree.map(lambda a: a[perm], particles)
     cells = cell_index(particles.pos, config.grid.shape)
     layout, overflow = build_bins(cells, particles.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
-    return PICState(fields=fields, particles=particles, layout=layout, step=jnp.int32(0)), int(overflow)
+    state = PICState(
+        fields=fields, particles=particles, layout=layout, step=jnp.int32(0),
+        slab=_state_slab(particles, layout, config),
+    )
+    return state, int(overflow)
 
 
-def _gather_fields(pos, fields: FieldState, layout, config: PICConfig):
+def _gather_fields(pos, fields: FieldState, layout, slab: BinSlab | None, config: PICConfig):
     g = config.guard
     shape = config.grid.shape
+    pe = [unfold_guards(f, g) for f in fields.e()]
+    pb = [unfold_guards(f, g) for f in fields.b()]
+    if config.gather == "matrix":
+        # default hot path: fused six-component pass over the step's slab —
+        # no re-staging, six shared weight sets, one slot-map scatter-back
+        fused_gather = None
+        if config.use_pallas:
+            from repro.kernels.gather.ops import fused_bin_gather
+
+            fused_gather = fused_bin_gather
+        return gather_fields_fused(
+            slab, tuple(pe) + tuple(pb), layout,
+            grid_shape=shape, order=config.order, fused_gather=fused_gather,
+        )
     comps_e, comps_b = [], []
-    for k in range(3):
-        pe = unfold_guards(fields.e()[k], g)
-        pb = unfold_guards(fields.b()[k], g)
-        if config.gather == "matrix":
-            comps_e.append(gather_matrix(pos, pe, layout, grid_shape=shape, order=config.order, stagger=E_STAGGER[k]))
-            comps_b.append(gather_matrix(pos, pb, layout, grid_shape=shape, order=config.order, stagger=B_STAGGER[k]))
-        else:
-            comps_e.append(gather_scatter(pos, pe, order=config.order, stagger=E_STAGGER[k]))
-            comps_b.append(gather_scatter(pos, pb, order=config.order, stagger=B_STAGGER[k]))
+    if config.gather == "matrix_unfused":
+        # six-call ablation mode: each component re-stages the slab and
+        # recomputes its three weight sets
+        bin_gather_op = None
+        if config.use_pallas:
+            from repro.kernels.gather.ops import bin_gather
+
+            bin_gather_op = bin_gather
+        for k in range(3):
+            comps_e.append(gather_matrix(pos, pe[k], layout, grid_shape=shape, order=config.order, stagger=E_STAGGER[k], bin_gather_op=bin_gather_op))
+            comps_b.append(gather_matrix(pos, pb[k], layout, grid_shape=shape, order=config.order, stagger=B_STAGGER[k], bin_gather_op=bin_gather_op))
+    else:
+        for k in range(3):
+            comps_e.append(gather_scatter(pos, pe[k], order=config.order, stagger=E_STAGGER[k]))
+            comps_b.append(gather_scatter(pos, pb[k], order=config.order, stagger=B_STAGGER[k]))
     return jnp.stack(comps_e, -1), jnp.stack(comps_b, -1)
 
 
-def _deposit_current(pos, v, qw, layout, cells, config: PICConfig):
+def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig):
     shape = config.grid.shape
     inv_vol = 1.0 / config.grid.cell_volume
 
     if config.deposition == "matrix":
-        # default hot path: fused three-component megakernel — one bin
-        # gather, shared shape weights, packed Jx/Jy/Jz contraction
+        # default hot path: fused three-component megakernel consuming the
+        # step's slab — shared shape weights, packed Jx/Jy/Jz contraction
         fused_matmul = None
         if config.use_pallas:
             from repro.kernels.deposition.ops import fused_bin_deposit
 
             fused_matmul = fused_bin_deposit
         j3 = deposit_current_matrix_fused(
-            pos, v, qw, layout, grid_shape=shape, order=config.order, fused_matmul=fused_matmul
+            pos, v, qw, layout, grid_shape=shape, order=config.order,
+            fused_matmul=fused_matmul, slab=slab,
         )
         return [fold_guards(j, config.guard) * inv_vol for j in j3]
 
@@ -187,8 +236,10 @@ def _pic_step(state: PICState, config: PICConfig) -> tuple[PICState, GPMAStats]:
     p = state.particles
     alive_f = p.alive.astype(p.pos.dtype)
 
-    # 1. field gather (bins are current w.r.t. pre-push positions)
-    e_p, b_p = _gather_fields(p.pos, state.fields, state.layout, config)
+    # 1. field gather (bins AND the carried slab are current w.r.t.
+    #    pre-push positions: the slab the previous step staged for its
+    #    deposition is exactly this step's gather staging)
+    e_p, b_p = _gather_fields(p.pos, state.fields, state.layout, state.slab, config)
 
     # 2. push
     u_new = boris_push(p.u, e_p, b_p, config.q_over_m, config.dt)
@@ -215,17 +266,21 @@ def _pic_step(state: PICState, config: PICConfig) -> tuple[PICState, GPMAStats]:
             n_empty=jnp.int32(0), n_alive=jnp.sum(p.alive),
         )
 
+    # 3b. the step's ONE slab staging, consistent with (pos_new, layout):
+    # consumed by the deposition below and carried for the next gather
+    particles = dataclasses.replace(p, pos=pos_new, u=u_new)
+    slab = _state_slab(particles, layout, config)
+
     # 4. deposition at x^{n+1}, v^{n+1/2}
     gamma = lorentz_gamma(u_new)
     v = u_new / gamma[:, None]
     qw = config.charge * p.w * alive_f
-    j = _deposit_current(pos_new, v, qw, layout, new_cells, config)
+    j = _deposit_current(pos_new, v, qw, layout, slab, new_cells, config)
 
     # 5. fields
     fields = maxwell_step(state.fields, j, dx=config.grid.dx, dt=config.dt, ckc_beta=config.ckc_beta)
 
-    particles = dataclasses.replace(p, pos=pos_new, u=u_new)
-    return PICState(fields=fields, particles=particles, layout=layout, step=state.step + 1), stats
+    return PICState(fields=fields, particles=particles, layout=layout, step=state.step + 1, slab=slab), stats
 
 
 pic_step = partial(jax.jit, static_argnames=("config",))(_pic_step)
@@ -240,14 +295,19 @@ pic_step_donated = partial(jax.jit, static_argnames=("config",), donate_argnums=
 
 def global_sort_device(state: PICState, config: PICConfig) -> tuple[PICState, jax.Array]:
     """GlobalSortParticlesByCell, traceable: permute attributes + rebuild
-    bins, returning overflow as a traced int32 scalar so the sort can run
-    inside jit / under `lax.cond` in the scan window."""
+    bins (and the staging slab — the sort invalidates both), returning
+    overflow as a traced int32 scalar so the sort can run inside jit /
+    under `lax.cond` in the scan window."""
     cells = cell_index(state.particles.pos, config.grid.shape)
     perm = sort_permutation(cells, state.particles.alive)
     particles = jax.tree.map(lambda a: a[perm], state.particles)
     cells = cell_index(particles.pos, config.grid.shape)
     layout, overflow = build_bins(cells, particles.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
-    return dataclasses.replace(state, particles=particles, layout=layout), overflow.astype(jnp.int32)
+    state = dataclasses.replace(
+        state, particles=particles, layout=layout,
+        slab=_state_slab(particles, layout, config),
+    )
+    return state, overflow.astype(jnp.int32)
 
 
 def global_sort(state: PICState, config: PICConfig) -> tuple[PICState, int]:

@@ -53,7 +53,7 @@ def main() -> None:
 
     cfg = DistConfig(local_grid=local, dt=DT, order=1, charge=Q, capacity=8, mig_cap=1)
     ppos, pu, pw, palive = partition_particles(parts, grid, 2, 1, n_local=8)
-    slots, pslot, overflow = build_local_bins(ppos, palive, local, cfg.capacity)
+    slots, pslot, slab_d, slab_valid, overflow = build_local_bins(ppos, palive, local, cfg.capacity)
     assert overflow == 0
 
     fields = tuple(jnp.zeros(grid.shape, jnp.float32) for _ in range(6))
@@ -66,8 +66,8 @@ def main() -> None:
     with set_mesh_compat(mesh):
         for n in range(1, 5):
             ex_before = np.asarray(fields[0]).sum(dtype=np.float64)
-            fields, ppos, pu, pw, palive, slots, pslot, stats = step(
-                fields, ppos, pu, pw, palive, slots, pslot
+            fields, ppos, pu, pw, palive, slots, pslot, slab_d, slab_valid, stats = step(
+                fields, ppos, pu, pw, palive, slots, pslot, slab_d, slab_valid
             )
             # --- the current identity: deposited Jx == q*w*vx of BINNED particles
             ex_after = np.asarray(fields[0]).sum(dtype=np.float64)

@@ -36,14 +36,16 @@ def main() -> None:
     local = GridSpec(shape=(4, 4, 8))
     dcfg = DistConfig(local_grid=local, dt=0.2, order=1, capacity=32, mig_cap=128)
     pos, u, w, alive = partition_particles(parts, grid, 2, 2, n_local=2048)
-    slots, pslot, overflow = build_local_bins(pos, alive, local, capacity=32)
+    slots, pslot, slab_d, slab_valid, overflow = build_local_bins(pos, alive, local, capacity=32)
     assert overflow == 0
 
     fields = tuple(jnp.zeros(grid.shape, jnp.float32) for _ in range(6))
     step = make_dist_step(mesh, dcfg)
     with set_mesh_compat(mesh):
         for _ in range(steps):
-            fields, pos, u, w, alive, slots, pslot, stats = step(fields, pos, u, w, alive, slots, pslot)
+            fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, stats = step(
+                fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid
+            )
     assert int(stats["mig_send_overflow"]) == 0
     assert int(stats["mig_recv_dropped"]) == 0
     assert int(stats["n_unmigrated"]) == 0

@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import build_bins, cell_index, choose_capacity, deposit_matrix, deposit_scatter
+from repro.core import build_bins, cell_index, choose_capacity, deposit_matrix, deposit_scatter, unified_support
 from repro.kernels.deposition import bin_outer_product, bin_outer_product_ref
-from repro.kernels.gather import bin_gather, bin_gather_ref
+from repro.kernels.gather import bin_gather, bin_gather_ref, fused_bin_gather, fused_bin_gather_ref
 from repro.kernels.scatter_matrix import segment_accumulate, segment_accumulate_ref
 
 # (n_cells, cap, M, N) sweep — CIC (2x4), QSP (4x16), staggered widths (3/5),
@@ -65,6 +65,39 @@ def test_bin_gather_matches_ref(shape, dtype):
     g = jax.random.normal(k3, (c, m, n), dtype)
     got = bin_gather(wx, byz, g)
     want = bin_gather_ref(wx, byz, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# (n_cells, cap) sweep for the fused six-component gather megakernel —
+# ragged cell counts, MXU-depth capacity, single-cell edge.
+FUSED_GATHER_SHAPES = [(16, 8), (100, 16), (37, 8), (1, 8), (128, 128)]
+
+
+@pytest.mark.parametrize("shape", FUSED_GATHER_SHAPES)
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_fused_bin_gather_matches_ref(shape, order):
+    """Pallas fused gather (in-kernel weight build) vs the pure-jnp oracle
+    on packed unified-window operands."""
+    c, cap = shape
+    t, _ = unified_support(order)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(c * cap + order))
+    # offsets in [0, 1) like real fractional positions (weights well-defined)
+    d = jax.random.uniform(k1, (c, cap, 3))
+    g = jax.random.normal(k2, (c, 6, t, t * t))
+    got = fused_bin_gather(d, g, order=order)
+    want = fused_bin_gather_ref(d, g, order=order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("order", [1, 3])
+def test_fused_bin_gather_block_boundaries(order):
+    """Force a small block size so the grid has ragged final blocks."""
+    c, cap = 23, 8
+    t, _ = unified_support(order)
+    d = jax.random.uniform(jax.random.PRNGKey(0), (c, cap, 3))
+    g = jax.random.normal(jax.random.PRNGKey(1), (c, 6, t, t * t))
+    got = fused_bin_gather(d, g, order=order, block_cells=7)
+    want = fused_bin_gather_ref(d, g, order=order)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
