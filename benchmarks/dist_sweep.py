@@ -105,6 +105,9 @@ def _loop_thunk(sim, window: int | None):
         sim.policy = ResortPolicy(policy_cfg)
         sim.policy_state = policy_init()
         sim.sorts = sim.rebuilds = 0
+        sim.halts = {}
+        sim.retries = sim.restarts = sim.discarded_steps = 0
+        sim._pending_presort = sim._pending_resume = False
         sim._host_step = 0
         sim.history = []
         sim.run(STEPS, window=window)
@@ -159,6 +162,14 @@ def collect(*, label: str = "dist_sweep", scenario_name: str = "uniform") -> dic
                 "host_us": row["host"],
                 "device_us": row["device"],
                 "speedup": speedup,
+                # fault-tolerance counters of the final measured run
+                # (docs/robustness.md): a clean benchmark run reports zeros —
+                # any non-zero value means the timing absorbed rollback/replay
+                # work and the row is not comparable to the trajectory
+                "halts": dict(sim.halts),
+                "retries": sim.retries,
+                "restarts": sim.restarts,
+                "discarded_steps": sim.discarded_steps,
                 "spec": spec.to_dict(),
             },
         },

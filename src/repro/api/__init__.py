@@ -12,6 +12,7 @@ See docs/api.md.
 """
 
 from repro.api.facade import (  # noqa: F401
+    SimCheckpointer,
     SimDriver,
     build_fields,
     build_particles,
@@ -33,6 +34,8 @@ from repro.api.registry import (  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     DepositionSpec,
     DriftSpec,
+    FaultSpec,
+    HealthConfig,
     MeshSpec,
     PerturbSpec,
     PlasmaSpec,

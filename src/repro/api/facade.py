@@ -32,7 +32,12 @@ import jax
 import numpy as np
 
 from repro.api.spec import SimSpec
-from repro.checkpoint.checkpoint import _flatten_with_names
+from repro.checkpoint.checkpoint import (
+    _flatten_with_names,
+    array_checksums,
+    clean_stale_tmp,
+    verify_checksums,
+)
 from repro.pic.grid import FieldState, GridSpec
 from repro.pic.laser import inject_laser
 from repro.pic.plasma import (
@@ -44,6 +49,7 @@ from repro.pic.plasma import (
 )
 
 __all__ = [
+    "SimCheckpointer",
     "SimDriver",
     "build_fields",
     "build_particles",
@@ -234,7 +240,7 @@ def _write_dir(path: str, tree, meta: dict) -> None:
     os.makedirs(tmp)
     np.savez(os.path.join(tmp, _ARRAYS), **{f"a{i}": a for i, a in enumerate(host)})
     with open(os.path.join(tmp, _META), "w") as f:
-        json.dump(dict(meta, names=names), f, indent=1)
+        json.dump(dict(meta, names=names, checksums=array_checksums(host)), f, indent=1)
     # overwrite without a window where NO checkpoint exists: move the old
     # one aside, rename the new one in, only then delete the old — a crash
     # in between leaves either the old or the new checkpoint intact
@@ -255,10 +261,18 @@ def _read_meta(path: str) -> dict:
 
 
 def _read_dir(path: str) -> tuple[dict, dict]:
-    """-> (name -> numpy array, meta dict)."""
-    meta = _read_meta(path)
-    data = np.load(os.path.join(path, _ARRAYS))
-    arrays = {name: data[f"a{i}"] for i, name in enumerate(meta["names"])}
+    """-> (name -> numpy array, meta dict). Integrity is checked here: a
+    truncated npz, an unreadable sidecar, or a checksum mismatch all fail
+    LOUDLY instead of installing silently corrupt state."""
+    try:
+        meta = _read_meta(path)
+        with np.load(os.path.join(path, _ARRAYS)) as data:
+            host = [np.asarray(data[f"a{i}"]) for i in range(len(meta["names"]))]
+    except Exception as exc:
+        raise ValueError(f"corrupt or truncated checkpoint at {path}: {exc}") from exc
+    if "checksums" in meta:  # absent only in pre-robustness checkpoints
+        verify_checksums(host, meta["checksums"], meta["names"], path)
+    arrays = dict(zip(meta["names"], host))
     return arrays, meta
 
 
@@ -305,14 +319,23 @@ def save_simulation(sim, path: str) -> None:
         "capacity": sim.config.capacity,
         "host_policy": _host_policy_scalars(sim),
         "history": sim.history,
+        # fault-tolerance counters (docs/robustness.md). A crash-recovery
+        # restore would clobber sim.restarts with the pre-crash value, so
+        # the supervisor re-asserts its live count after restoring.
+        "growths": dict(sim.growths),
+        "halts": dict(sim.halts),
+        "retries": sim.retries,
+        "restarts": sim.restarts,
+        "discarded_steps": sim.discarded_steps,
     }
     if distributed:
         scalars.update(
             mig_cap=sim.config.mig_cap,
             n_local=sim.n_local,
             mesh_shape=list(sim.spec.mesh.shape) if sim.spec is not None else [sim.sx, sim.sy],
-            growths=sim.growths,
             mig_recv_dropped=sim.mig_recv_dropped,
+            pending_presort=bool(sim._pending_presort),
+            pending_resume=bool(sim._pending_resume),
         )
     tree = {"state": sim.state, "policy_state": sim.policy_state}
     meta = {
@@ -379,9 +402,18 @@ def restore_simulation(sim, path: str) -> None:
             sim.config, capacity=scal["capacity"], mig_cap=scal["mig_cap"]
         )
         sim.n_local = scal["n_local"]
-        sim.growths = dict(scal["growths"])
         sim.mig_recv_dropped = scal["mig_recv_dropped"]
+        sim._pending_presort = bool(scal.get("pending_presort", False))
+        sim._pending_resume = bool(scal.get("pending_resume", False))
         sim._fns.clear()
+        # pre-robustness checkpoints carry no replay snapshot: substitute
+        # zeros of the saved particle shapes (always valid — a checkpoint
+        # boundary never has a pending resume)
+        for name in list(arrays):
+            for mid, src in (("mid_pos", "pos"), ("mid_u", "u")):
+                cand = name.replace(src, mid)
+                if name.endswith(f"'{src}']") and cand not in arrays:
+                    arrays[cand] = np.zeros_like(arrays[name])
     else:
         sim.config = dataclasses.replace(sim.config, capacity=scal["capacity"])
 
@@ -392,6 +424,12 @@ def restore_simulation(sim, path: str) -> None:
     sim.rebuilds = scal["rebuilds"]
     sim._host_step = scal["host_step"]
     sim.history = list(scal["history"])
+    sim.growths = dict(scal.get("growths", sim.growths))
+    sim.halts = dict(scal.get("halts", {}))
+    sim.retries = int(scal.get("retries", 0))
+    sim.restarts = int(scal.get("restarts", 0))
+    sim.discarded_steps = int(scal.get("discarded_steps", 0))
+    sim._remedy_level = 0
     _restore_host_policy(sim, scal["host_policy"])
 
 
@@ -408,3 +446,61 @@ def load_simulation(path: str) -> "SimDriver":
     sim = make_simulation(spec)
     restore_simulation(sim, path)
     return sim
+
+
+class SimCheckpointer:
+    """Rolling autosave for a driver: step-stamped `save_simulation`
+    directories under one root, a keep-`keep` GC, and crash recovery via
+    `latest_path()`. Wired in automatically by
+    ``run(..., autosave_every=N)`` (distributed.fault.run_supervised_windows);
+    stale ``*.tmp-<pid>`` debris from dead writers is swept at construction.
+
+    `maybe_save(step)` saves once at least `every` steps have elapsed since
+    the last save — window-grained progress rarely lands exactly on a
+    multiple, so the cadence is "every N or the first boundary after it".
+    """
+
+    def __init__(self, sim, directory: str, *, every: int, keep: int = 2):
+        if every <= 0:
+            raise ValueError(f"autosave interval must be positive, got {every}")
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.sim = sim
+        self.directory = directory or "checkpoints"
+        self.every = every
+        self.keep = keep
+        os.makedirs(self.directory, exist_ok=True)
+        clean_stale_tmp(self.directory)
+        self._last: int | None = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}")
+
+    def _steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if not name.startswith("step_") or ".tmp-" in name or ".old-" in name:
+                continue
+            try:
+                out.append(int(name[len("step_"):]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def latest_path(self) -> str:
+        steps = self._steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        return self._path(steps[-1])
+
+    def maybe_save(self, step: int, force: bool = False) -> bool:
+        if not force and self._last is not None and step - self._last < self.every:
+            return False
+        if not force and self._last is None:
+            self._last = step  # baseline: count `every` steps from here
+            return False
+        save_simulation(self.sim, self._path(step))
+        self._last = step
+        for old in self._steps()[: -self.keep]:
+            shutil.rmtree(self._path(old), ignore_errors=True)
+        return True

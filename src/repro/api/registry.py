@@ -39,6 +39,8 @@ from typing import Callable
 
 from repro.api.spec import (
     DriftSpec,
+    FaultSpec,
+    HealthConfig,
     PerturbSpec,
     PlasmaSpec,
     ProfileSpec,
@@ -94,6 +96,10 @@ _OVERRIDE_PATHS = {
     "diagnostics_every": ("run", "diagnostics_every"),
     "dt": ("run", "dt"),
     "cfl_safety": ("run", "cfl_safety"),
+    "autosave_every": ("run", "autosave_every"),
+    "autosave_path": ("run", "autosave_path"),
+    "health": ("health",),
+    "fault": ("fault",),
     "order": ("deposition", "order"),
     "deposition": ("deposition", "mode"),
     "use_pallas": ("deposition", "use_pallas"),
@@ -139,6 +145,10 @@ def apply_overrides(spec: SimSpec, **overrides) -> SimSpec:
             value = (value, value, value)
         if key == "grid" and not isinstance(value, GridSpec):
             value = GridSpec(shape=tuple(int(v) for v in value), dx=spec.grid.dx)
+        if key == "health" and isinstance(value, dict):
+            value = HealthConfig.from_dict(value)
+        if key == "fault" and isinstance(value, dict):
+            value = FaultSpec.from_dict(value)
         if len(path) == 1:
             top[path[0]] = value
         else:

@@ -29,13 +29,17 @@ import json
 import math
 from typing import Any
 
+from repro.core.health import HealthConfig
 from repro.core.resort_policy import SortPolicyConfig
+from repro.distributed.fault import FaultSpec
 from repro.pic.grid import GridSpec
 from repro.pic.laser import LaserSpec
 
 __all__ = [
     "DepositionSpec",
     "DriftSpec",
+    "FaultSpec",
+    "HealthConfig",
     "MeshSpec",
     "PerturbSpec",
     "PlasmaSpec",
@@ -281,13 +285,22 @@ class MeshSpec:
 class RunSpec:
     """Run schedule: default step count, scan-window length (``window=0``
     selects the legacy host-driven per-step loop), diagnostics cadence, and
-    the timestep (``dt=0`` derives the Courant limit at ``cfl_safety``)."""
+    the timestep (``dt=0`` derives the Courant limit at ``cfl_safety``).
+    ``autosave_every=N`` wires a crash-safe ``SimCheckpointer`` into the
+    windowed run (``autosave_path`` names the directory; empty derives
+    ``checkpoints/<spec.name>``)."""
 
     steps: int = 50
     window: int = 16
     diagnostics_every: int = 0
     dt: float = 0.0
     cfl_safety: float = 0.5
+    autosave_every: int = 0
+    autosave_path: str = ""
+
+    def __post_init__(self):
+        if self.autosave_every < 0:
+            raise ValueError(f"autosave_every must be >= 0, got {self.autosave_every}")
 
     @staticmethod
     def from_dict(d: dict) -> "RunSpec":
@@ -313,6 +326,8 @@ class SimSpec:
     sort: SortSpec = SortSpec()
     mesh: MeshSpec = MeshSpec()
     run: RunSpec = RunSpec()
+    health: HealthConfig = HealthConfig()
+    fault: FaultSpec | None = None
     charge: float = -1.0
     mass: float = 1.0
     ckc_beta: float = 0.0
@@ -340,6 +355,11 @@ class SimSpec:
                     "ckc_beta is not implemented on the distributed Maxwell solver — a spec "
                     "claiming it with a mesh would silently run different physics"
                 )
+        if self.fault is not None and self.fault.kind == "recv_drop" and self.mesh.shape is None:
+            raise ValueError(
+                "fault kind 'recv_drop' targets the distributed migration path — "
+                "single-device runs have no recv buffer to drop from"
+            )
 
     # -- derived -----------------------------------------------------------
 
@@ -372,10 +392,12 @@ class SimSpec:
             kw["laser"] = LaserSpec(**_pick(LaserSpec, kw["laser"]))
         for key, sub in (
             ("plasma", PlasmaSpec), ("deposition", DepositionSpec), ("sort", SortSpec),
-            ("mesh", MeshSpec), ("run", RunSpec),
+            ("mesh", MeshSpec), ("run", RunSpec), ("health", HealthConfig),
         ):
             if key in kw:
                 kw[key] = sub.from_dict(kw[key])
+        if kw.get("fault") is not None:
+            kw["fault"] = FaultSpec.from_dict(kw["fault"])
         return SimSpec(**kw)
 
     @staticmethod

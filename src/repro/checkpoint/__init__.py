@@ -1,1 +1,6 @@
-from repro.checkpoint.checkpoint import CheckpointManager  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    array_checksums,
+    clean_stale_tmp,
+    verify_checksums,
+)

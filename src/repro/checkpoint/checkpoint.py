@@ -25,6 +25,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
@@ -37,11 +38,71 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
+def array_checksums(host_leaves) -> list[str]:
+    """crc32 hex digest per array (over the raw bytes, C order)."""
+    return ["%08x" % zlib.crc32(np.ascontiguousarray(a).tobytes()) for a in host_leaves]
+
+
+def verify_checksums(arrays, checksums, names, where: str) -> None:
+    """Raise ValueError naming every array whose on-disk bytes do not match
+    the manifest checksum (bit rot, truncation, partial write)."""
+    if len(arrays) != len(checksums):
+        raise ValueError(
+            f"corrupt checkpoint at {where}: manifest lists {len(checksums)} "
+            f"checksums for {len(arrays)} arrays"
+        )
+    bad = [
+        names[i] if i < len(names) else f"a{i}"
+        for i, (a, c) in enumerate(zip(arrays, checksums))
+        if "%08x" % zlib.crc32(np.ascontiguousarray(a).tobytes()) != c
+    ]
+    if bad:
+        raise ValueError(f"corrupt checkpoint at {where}: checksum mismatch for {bad}")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def clean_stale_tmp(directory: str) -> list[str]:
+    """Remove `*.tmp-<pid>` / `*.old-<pid>` entries left behind by killed
+    writers (the atomic-rename dance never leaves them on a clean exit).
+    Entries owned by a still-running pid are left alone. Returns the
+    removed paths."""
+    removed = []
+    if not os.path.isdir(directory):
+        return removed
+    for name in os.listdir(directory):
+        for marker in (".tmp-", ".old-"):
+            if marker in name:
+                suffix = name.rsplit(marker, 1)[1]
+                if suffix.isdigit() and _pid_alive(int(suffix)):
+                    continue
+                path = os.path.join(directory, name)
+                if os.path.isdir(path):
+                    shutil.rmtree(path, ignore_errors=True)
+                else:
+                    try:
+                        os.remove(path)
+                    except OSError:
+                        pass
+                removed.append(path)
+                break
+    return removed
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        clean_stale_tmp(directory)
         self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------------
@@ -72,6 +133,7 @@ class CheckpointManager:
             "names": names,
             "shapes": [list(a.shape) for a in host_leaves],
             "dtypes": [str(a.dtype) for a in host_leaves],
+            "checksums": array_checksums(host_leaves),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -111,13 +173,21 @@ class CheckpointManager:
         step = self.latest_step() if step is None else step
         assert step is not None, "no checkpoint found"
         d = os.path.join(self.directory, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(d, "arrays.npz"))
-        arrays = [data[f"a{i}"] for i in range(len(manifest["names"]))]
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(d, "arrays.npz"))
+            arrays = [data[f"a{i}"] for i in range(len(manifest["names"]))]
+        except ValueError:
+            raise
+        except Exception as exc:
+            raise ValueError(f"corrupt or truncated checkpoint at {d}: {exc}") from exc
+        if "checksums" in manifest:
+            verify_checksums(arrays, manifest["checksums"], manifest["names"], d)
 
         names, leaves, treedef = _flatten_with_names(tree_like)
-        assert names == manifest["names"], "checkpoint/model structure mismatch"
+        if names != manifest["names"]:
+            raise ValueError(f"checkpoint/model structure mismatch at {d}")
         out = []
         shard_leaves = jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
         for arr, like, shard in zip(arrays, leaves, shard_leaves):

@@ -28,6 +28,20 @@ from repro.core.deposition import (  # noqa: F401
 )
 from repro.core.gather import EB_STAGGERS, gather_fields_fused, gather_matrix, gather_scatter  # noqa: F401
 from repro.core.gpma import GPMAStats, gpma_update  # noqa: F401
+from repro.core.health import (  # noqa: F401
+    HALT_BIN_OVERFLOW,
+    HALT_INVARIANT,
+    HALT_MIG_RECV,
+    HALT_MIG_SEND,
+    HALT_NAMES,
+    HALT_NONE,
+    HALT_NONFINITE,
+    INVARIANT_NAMES,
+    HealthConfig,
+    SimulationHealthError,
+    classify_health,
+    nonfinite_count,
+)
 from repro.core.matrix_scatter import matrix_scatter_add, scatter_add_ref  # noqa: F401
 from repro.core.resort_policy import (  # noqa: F401
     REASON_NAMES,

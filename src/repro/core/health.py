@@ -1,0 +1,195 @@
+"""In-graph health sentinel: cheap per-step on-device checks that turn
+silent corruption into structured window halts.
+
+The windowed drivers (pic/simulation.py, pic/dist_simulation.py) already
+treat bin overflow and migration-buffer exhaustion as recoverable
+halt-and-grow events. This module extends the same halt protocol to the
+failure modes that otherwise propagate garbage for thousands of steps:
+
+* non-finite fields or momenta (an unstable push, a kernel bug, a flipped
+  bit) -> ``HALT_NONFINITE``;
+* charge-conservation or total-energy-drift violations against references
+  captured at window entry -> ``HALT_INVARIANT``.
+
+The halt-code family lives here (re-exported by ``pic.dist_simulation``
+for backwards compatibility) so both drivers and the supervisor speak one
+vocabulary. The checks are pure reads — they never perturb the step
+arithmetic, so a sentinel-enabled no-fault run stays bit-identical to a
+sentinel-off run (tests/test_health.py pins this).
+
+On a health halt the host supervisor (``distributed.fault
+.run_supervised_windows``) restores the window-start snapshot and retries
+under an escalating remediation ladder; see docs/robustness.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "HALT_BIN_OVERFLOW",
+    "HALT_INVARIANT",
+    "HALT_MIG_RECV",
+    "HALT_MIG_SEND",
+    "HALT_NAMES",
+    "HALT_NONE",
+    "HALT_NONFINITE",
+    "HealthConfig",
+    "INVARIANT_NAMES",
+    "SimulationHealthError",
+    "classify_health",
+    "nonfinite_count",
+]
+
+# Window halt codes (bundle["halt_code"]). 0-3 are the original
+# pic/dist_simulation family; 4-5 are the health sentinel's additions.
+HALT_NONE = 0
+HALT_BIN_OVERFLOW = 1
+HALT_MIG_SEND = 2
+HALT_MIG_RECV = 3
+HALT_NONFINITE = 4
+HALT_INVARIANT = 5
+HALT_NAMES = (
+    "none", "bin_overflow", "mig_send_overflow", "mig_recv_dropped",
+    "nonfinite", "invariant",
+)
+
+# Which check fired (bundle["halt_inv"], error.invariant).
+INV_NONE = 0
+INV_FIELDS = 1
+INV_MOMENTA = 2
+INV_CHARGE = 3
+INV_ENERGY = 4
+INVARIANT_NAMES = (
+    "none", "fields_nonfinite", "momenta_nonfinite",
+    "charge_conservation", "energy_drift",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Sentinel configuration. Frozen and hashable: it is a static argument
+    of the compiled window, so distinct configs compile distinct programs.
+
+    ``charge_rtol`` compares the per-step total charge (sum of alive
+    macro-particle weights) against the window-entry reference — exactly
+    conserved by both drivers, so the default tolerance only absorbs
+    distributed summation-order jitter. ``energy_rtol`` bounds the
+    per-window total-energy drift (field + kinetic, the one definition in
+    ``pic.simulation._energies``); the generous default catches
+    catastrophic blow-up, not physical numerical heating.
+
+    ``max_retries`` bounds the remediation ladder (halve the window ->
+    force a global sort -> drop the Pallas route) before the supervisor
+    aborts; ``max_restarts`` bounds crash -> checkpoint-restore cycles.
+    """
+
+    enable: bool = False
+    check_nonfinite: bool = True
+    check_charge: bool = True
+    check_energy: bool = True
+    charge_rtol: float = 1e-4
+    energy_rtol: float = 0.25
+    energy_atol: float = 1e-3
+    max_retries: int = 3
+    max_restarts: int = 3
+
+    def __post_init__(self):
+        if self.charge_rtol <= 0 or self.energy_rtol <= 0:
+            raise ValueError("health tolerances must be positive")
+        if self.max_retries < 1 or self.max_restarts < 0:
+            raise ValueError("max_retries must be >= 1 and max_restarts >= 0")
+
+    @staticmethod
+    def from_dict(d: dict) -> "HealthConfig":
+        names = {f.name for f in dataclasses.fields(HealthConfig)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"HealthConfig spec has unknown keys {sorted(unknown)}")
+        return HealthConfig(**d)
+
+
+class SimulationHealthError(RuntimeError):
+    """Raised by the supervisor when the remediation ladder is exhausted.
+
+    Carries the diagnostic bundle of the LAST failed attempt: the halt-code
+    name, the absolute step that failed, the offending invariant, and the
+    measured/reference values it compared.
+    """
+
+    def __init__(self, *, halt: str, step: int, invariant: str,
+                 measured: float, reference: float, retries: int):
+        self.halt = halt
+        self.step = step
+        self.invariant = invariant
+        self.measured = measured
+        self.reference = reference
+        self.retries = retries
+        super().__init__(
+            f"health halt {halt!r} at step {step} persisted through {retries} "
+            f"remediation attempt(s): invariant {invariant!r} measured "
+            f"{measured!r} against reference {reference!r}"
+        )
+
+
+def nonfinite_count(arrays, mask=None) -> jax.Array:
+    """int32 count of non-finite entries over a list of float arrays.
+    ``mask``: optional per-row validity (dead particle rows carry arbitrary
+    padding and must not trip the sentinel)."""
+    total = jnp.zeros((), jnp.int32)
+    for a in arrays:
+        bad = ~jnp.isfinite(a)
+        if mask is not None:
+            bad = bad & mask.reshape(mask.shape + (1,) * (bad.ndim - mask.ndim))
+        total = total + jnp.sum(bad).astype(jnp.int32)
+    return total
+
+
+def classify_health(cfg: HealthConfig, *, fields_nonfinite, momenta_nonfinite,
+                    charge, charge_ref, energy, energy_ref):
+    """Fold the per-step health measurements into one halt classification.
+
+    All arguments are traced scalars, already reduced across shards where
+    applicable (counts summed, charge/energy psum-reduced), so every shard
+    computes the same classification. Returns
+    ``(code, invariant, measured, reference)`` — int32, int32, float32,
+    float32; ``code == HALT_NONE`` means healthy.
+
+    Comparisons use the NaN-robust ``~(drift <= tol)`` form: a NaN drift
+    (corrupted energy/charge) classifies as a violation rather than
+    silently passing, even when the nonfinite scan is disabled.
+    """
+    code = jnp.zeros((), jnp.int32)
+    inv = jnp.zeros((), jnp.int32)
+    meas = jnp.zeros((), jnp.float32)
+    ref = jnp.zeros((), jnp.float32)
+    zero_f = jnp.zeros((), jnp.float32)
+
+    # ascending priority: later updates overwrite earlier ones
+    checks = []
+    if cfg.check_energy:
+        e = jnp.asarray(energy, jnp.float32)
+        e0 = jnp.asarray(energy_ref, jnp.float32)
+        scale = jnp.maximum(jnp.abs(e0), jnp.float32(cfg.energy_atol))
+        bad = ~(jnp.abs(e - e0) <= jnp.float32(cfg.energy_rtol) * scale)
+        checks.append((bad, HALT_INVARIANT, INV_ENERGY, e, e0))
+    if cfg.check_charge:
+        q = jnp.asarray(charge, jnp.float32)
+        q0 = jnp.asarray(charge_ref, jnp.float32)
+        scale = jnp.maximum(jnp.abs(q0), jnp.float32(1e-8))
+        bad = ~(jnp.abs(q - q0) <= jnp.float32(cfg.charge_rtol) * scale)
+        checks.append((bad, HALT_INVARIANT, INV_CHARGE, q, q0))
+    if cfg.check_nonfinite:
+        checks.append((momenta_nonfinite > 0, HALT_NONFINITE, INV_MOMENTA,
+                       momenta_nonfinite.astype(jnp.float32), zero_f))
+        checks.append((fields_nonfinite > 0, HALT_NONFINITE, INV_FIELDS,
+                       fields_nonfinite.astype(jnp.float32), zero_f))
+    for bad, c, iv, m, r in checks:
+        code = jnp.where(bad, jnp.int32(c), code)
+        inv = jnp.where(bad, jnp.int32(iv), inv)
+        meas = jnp.where(bad, m, meas)
+        ref = jnp.where(bad, r, ref)
+    return code, inv, meas, ref

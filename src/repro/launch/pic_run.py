@@ -42,6 +42,21 @@ if _MESH_ARGV is not None:
 from repro.api import SimSpec, make_simulation, scenario, scenario_names  # noqa: E402
 
 
+def parse_fault(text: str) -> dict:
+    """``KIND:STEP[:COMPONENT[:COUNT]]`` -> FaultSpec override dict, e.g.
+    ``nan_field:40:ez`` or ``crash:100`` or ``nan_momentum:10::0``
+    (count=0 = persistent)."""
+    parts = text.split(":")
+    if len(parts) < 2:
+        raise ValueError(f"--fault wants KIND:STEP[:COMPONENT[:COUNT]], got {text!r}")
+    out = {"kind": parts[0], "step": int(parts[1])}
+    if len(parts) > 2 and parts[2]:
+        out["component"] = parts[2]
+    if len(parts) > 3 and parts[3]:
+        out["count"] = int(parts[3])
+    return out
+
+
 def build_spec(args) -> SimSpec:
     """Scenario/spec-file + flag overrides -> the SimSpec to run."""
     overrides = {}
@@ -63,6 +78,14 @@ def build_spec(args) -> SimSpec:
         overrides["mesh"] = parse_mesh(args.mesh)
     if args.use_pallas:
         overrides["use_pallas"] = True
+    if args.sentinel:
+        overrides["health"] = {"enable": True}
+    if args.autosave_every is not None:
+        overrides["autosave_every"] = args.autosave_every
+    if args.autosave_path is not None:
+        overrides["autosave_path"] = args.autosave_path
+    if args.fault is not None:
+        overrides["fault"] = parse_fault(args.fault)
 
     if args.spec is not None:
         try:
@@ -113,6 +136,18 @@ def main() -> None:
         help="run domain-decomposed on an SXxSY device mesh (DistSimulation); "
         "forces SX*SY host devices when no accelerator override is present",
     )
+    ft = ap.add_argument_group("fault tolerance (docs/robustness.md)")
+    ft.add_argument("--sentinel", action="store_true",
+                    help="enable the in-graph health sentinel (NaN/Inf + "
+                    "charge/energy invariants) and the rollback-and-retry supervisor")
+    ft.add_argument("--autosave-every", type=int, default=None, metavar="N",
+                    help="checkpoint every N steps (and at entry/exit); a hard "
+                    "crash restores the latest autosave and resumes")
+    ft.add_argument("--autosave-path", type=str, default=None, metavar="DIR",
+                    help="autosave directory (default: checkpoints/<scenario>)")
+    ft.add_argument("--fault", type=str, default=None, metavar="KIND:STEP[:COMP[:COUNT]]",
+                    help="chaos harness: inject a deterministic fault, e.g. "
+                    "nan_field:40:ez, charge_scale:10, recv_drop:25, crash:100")
     args = ap.parse_args()
     if (args.scenario or args.workload) and args.spec:
         ap.error("--scenario/--workload and --spec are mutually exclusive")

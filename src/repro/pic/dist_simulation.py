@@ -56,16 +56,44 @@ from repro.compat import make_mesh_compat, set_mesh_compat, shard_map_compat
 from repro.core import (
     ResortPolicy,
     SortPolicyConfig,
+    cell_index,
+    choose_capacity,
     policy_init,
     policy_reset,
     policy_update,
 )
+
+# The halt-code family is shared with the single-device driver and the
+# health sentinel; re-exported here for backwards compatibility (this module
+# defined codes 0-3 before core.health existed).
+from repro.core.health import (  # noqa: F401
+    HALT_BIN_OVERFLOW,
+    HALT_INVARIANT,
+    HALT_MIG_RECV,
+    HALT_MIG_SEND,
+    HALT_NAMES,
+    HALT_NONE,
+    HALT_NONFINITE,
+    HealthConfig,
+    classify_health,
+    nonfinite_count,
+)
 from repro.core.resort_policy import REASON_OVERFLOW
+from repro.distributed.fault import (
+    PICFaultInjector,
+    inject_fields,
+    inject_momenta,
+    inject_weights,
+    injected_recv_drop,
+    no_fault_vec,
+    run_supervised_windows,
+)
 from repro.pic.distributed import (
     DistConfig,
     build_local_bins,
     dist_global_sort_device,
     dist_pic_step_local,
+    in_domain,
     make_dist_sort,
     make_dist_step,
     partition_particles,
@@ -75,14 +103,6 @@ from repro.pic.grid import FieldState, GridSpec
 from repro.pic.plasma import ParticleState
 from repro.pic.pusher import lorentz_gamma
 from repro.pic.simulation import UNSET, _DEPRECATION_MSG, consume_window_bundle, resolve_run_args
-
-# Window halt codes (bundle["halt_code"]). Priority within a step:
-# recv-drop (lossy, discards the step) > bin overflow > send overflow.
-HALT_NONE = 0
-HALT_BIN_OVERFLOW = 1
-HALT_MIG_SEND = 2
-HALT_MIG_RECV = 3
-HALT_NAMES = ("none", "bin_overflow", "mig_send_overflow", "mig_recv_dropped")
 
 # Module-level alias so tests can monkeypatch and count the (single) per-
 # window device->host transfer, mirroring pic.simulation._fetch_bundle.
@@ -123,125 +143,51 @@ def _local_energies(fields, u, w, alive, cfg: DistConfig):
 
 
 def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: int,
-                     with_energies: bool = True):
+                     with_energies: bool = True, health: HealthConfig | None = None,
+                     with_fault: bool = False):
     """Build the jitted distributed window: `n_steps` scan iterations INSIDE
     one shard_map, one replicated bundle out.
 
     Call signature of the returned function:
-        (fields6, pos, u, w, alive, slots, pslot, policy_state, n_target)
-        -> (fields6, pos, u, w, alive, slots, pslot, policy_state, bundle)
+        (fields6, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+         mid_pos, mid_u, policy_state, n_target, presort, resume, step0,
+         fault_vec)
+        -> (fields6, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+            mid_pos, mid_u, policy_state, bundle)
 
     `n_steps` is static (the compiled scan length); `n_target` is TRACED —
     steps past it are masked pass-throughs, so every window of a run
     (including post-growth and end-of-run tails) reuses one compiled
     program. Input buffers are donated: fields/particles update in place and
     never reshard between steps.
+
+    `mid_pos`/`mid_u` carry the mid-step snapshot of the LAST executed
+    step's push output (post z-wrap, pre migration). After a HALT_MIG_RECV
+    the host grows `n_local` and re-enters with ``resume=1``: the first step
+    of the retry window substitutes the snapshot for its own push output, so
+    only the migration/binning half of the discarded step replays — the
+    retried step is bit-identical to what the failed step would have
+    committed.
+
+    With ``health`` set, every step additionally runs the in-graph sentinel
+    (psum-reduced nonfinite counts + charge/energy invariants against
+    window-entry references, see core.health.classify_health) and raises
+    HALT_NONFINITE / HALT_INVARIANT through the same halt-code channel; the
+    checks are pure reads, so a sentinel-on run stays bit-identical to a
+    sentinel-off run. With ``with_fault`` the chaos-harness injection
+    (distributed.fault) is compiled in, keyed on the traced `fault_vec`.
     """
     n_shards = _mesh_axis_sizes(mesh, cfg.x_axes + cfg.y_axes)
     n_slots_total = n_shards * cfg.local_grid.n_cells * cfg.capacity
-
-    def window_step(carry, i):
-        (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
-         pstate, halted, halt_code, sorts, rebuilds, n_target) = carry
-
-        # the step always executes (its ppermutes must run on every shard
-        # every iteration); outputs are masked once the window is halted —
-        # same masked pass-through trick as the single-device window
-        nf, npos, nu, nw, nalive, nslots, npslot, nslab_d, nslab_valid, stats = dist_pic_step_local(
-            fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, cfg
-        )
-
-        # in-graph re-sort policy over the psum-reduced stats: the reduced
-        # scalars are replicated across shards, so the decision (and hence
-        # the lax.cond branch below) is taken uniformly
-        mandatory = stats["n_overflow"] > 0
-        do_pol, reason_pol, pstate_rec = policy_update(
-            pstate, policy,
-            n_moved=stats["n_moved"], n_alive=stats["n_alive"],
-            n_empty=stats["n_empty"], n_slots=n_slots_total,
-        )
-        do_pol = do_pol & ~mandatory
-        do_sort = mandatory | do_pol
-        reason = jnp.where(mandatory, jnp.int32(REASON_OVERFLOW), reason_pol).astype(jnp.int32)
-
-        # per-shard global sort under lax.cond — purely local work (attribute
-        # permutation + bin/slab rebuild), so no collective sits inside the
-        # cond; the local overflow is psum-reduced afterwards
-        def sort_branch(args):
-            return dist_global_sort_device(*args, cfg)
-
-        def no_sort(args):
-            pos, u, w, alive = args
-            return pos, u, w, alive, nslots, npslot, nslab_d, nslab_valid, jnp.zeros((), jnp.int32)
-
-        npos, nu, nw, nalive, nslots, npslot, nslab_d, nslab_valid, overflow_local = lax.cond(
-            do_sort, sort_branch, no_sort, (npos, nu, nw, nalive)
-        )
-        overflow_after = psum_all(overflow_local, cfg)
-        pstate_new = jax.tree.map(
-            lambda r, n: jnp.where(do_sort, r, n), policy_reset(), pstate_rec
-        )
-
-        # halt classification (recv-drop discards the whole step: those
-        # particles would have been destroyed)
-        recv_drop = stats["mig_recv_dropped"] > 0
-        halt_bin = overflow_after > 0
-        halt_send = stats["mig_send_overflow"] > 0
-        step_code = jnp.where(
-            recv_drop, jnp.int32(HALT_MIG_RECV),
-            jnp.where(
-                halt_bin, jnp.int32(HALT_BIN_OVERFLOW),
-                jnp.where(halt_send, jnp.int32(HALT_MIG_SEND), jnp.int32(HALT_NONE)),
-            ),
-        )
-        executed = ~halted
-        counted = executed & ~recv_drop  # a step that survives into n_done
-
-        discard = halted | recv_drop
-        keep = lambda old, new: jax.tree.map(lambda o, n: jnp.where(discard, o, n), old, new)
-        fields = keep(fields, nf)
-        pos, u, w, alive = keep((pos, u, w, alive), (npos, nu, nw, nalive))
-        slots, pslot = keep((slots, pslot), (nslots, npslot))
-        slab_d, slab_valid = keep((slab_d, slab_valid), (nslab_d, nslab_valid))
-        pstate = jax.tree.map(lambda o, n: jnp.where(counted, n, o), pstate, pstate_new)
-        sorts = sorts + (counted & do_pol).astype(jnp.int32)
-        rebuilds = rebuilds + (counted & mandatory).astype(jnp.int32)
-
-        step_halt = executed & (step_code != HALT_NONE)
-        halt_code = jnp.where(halt_code != 0, halt_code, jnp.where(step_halt, step_code, 0))
-        halted = halted | step_halt | (i + 1 >= n_target)
-
-        if with_energies:
-            fe_l, ke_l = _local_energies(fields, u, w, alive, cfg)
-            field_e = psum_all(fe_l, cfg)
-            kinetic = psum_all(ke_l, cfg)
-        else:
-            field_e = jnp.zeros((), jnp.float32)
-            kinetic = jnp.zeros((), jnp.float32)
-
-        diag = {
-            "active": counted,
-            "sorted": do_sort & counted,
-            "reason": jnp.where(counted, reason, 0).astype(jnp.int32),
-            "n_moved": jnp.where(counted, stats["n_moved"], 0).astype(jnp.int32),
-            "n_alive": jnp.where(counted, stats["n_alive"], 0).astype(jnp.int32),
-            "mig_send_overflow": jnp.where(counted, stats["mig_send_overflow"], 0).astype(jnp.int32),
-            "mig_recv_dropped": jnp.where(executed, stats["mig_recv_dropped"], 0).astype(jnp.int32),
-            "n_unmigrated": jnp.where(counted, stats["n_unmigrated"], 0).astype(jnp.int32),
-            "field_energy": jnp.where(counted, field_e, 0.0),
-            "kinetic_energy": jnp.where(counted, kinetic, 0.0),
-        }
-        carry = (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
-                 pstate, halted, halt_code, sorts, rebuilds, n_target)
-        return carry, diag
+    need_energies = with_energies or (health is not None and health.check_energy)
 
     def window_body(fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
-                    pstate, n_target, presort):
+                    mid_pos, mid_u, pstate, n_target, presort, resume, step0, fault_vec):
         global _window_trace_count
         _window_trace_count += 1
         sq = lambda a: a.reshape(a.shape[2:])
-        pos, u, w, alive, slots, pslot, slab_d, slab_valid = map(
-            sq, (pos, u, w, alive, slots, pslot, slab_d, slab_valid)
+        pos, u, w, alive, slots, pslot, slab_d, slab_valid, mid_pos, mid_u = map(
+            sq, (pos, u, w, alive, slots, pslot, slab_d, slab_valid, mid_pos, mid_u)
         )
         # capacity-growth re-entry (the windowed halt-and-grow protocol):
         # the host PADDED the slot table / slab to the doubled capacity and
@@ -257,26 +203,212 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
             lambda a: a,
             (pos, u, w, alive, slots, pslot, slab_d, slab_valid),
         )
+
+        # window-entry invariant references (the sentinel compares every
+        # step against the state it entered the window with; computed after
+        # the presort so a capacity growth does not perturb the summation
+        # order between reference and check)
+        if health is not None:
+            ref_charge = psum_all(
+                jnp.sum(w.astype(jnp.float32) * alive.astype(jnp.float32)), cfg
+            )
+            fe0, ke0 = _local_energies(fields, u, w, alive, cfg)
+            ref_energy = psum_all(fe0, cfg) + psum_all(ke0, cfg)
+
+        def window_step(carry, i):
+            (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+             mid_pos, mid_u, pstate, halted, halt_code, halt_step, halt_inv,
+             halt_meas, halt_ref, step_abs, sorts, rebuilds) = carry
+
+            # chaos-harness injection: corrupt the step's INPUT when the
+            # absolute step counter hits the armed fault (compiled out
+            # entirely when no fault is armed — with_fault is static)
+            f_in, u_in, w_in = fields, u, w
+            if with_fault:
+                f_in = inject_fields(fields, step_abs, fault_vec)
+                u_in = inject_momenta(u, step_abs, fault_vec)
+                w_in = inject_weights(w, step_abs, fault_vec)
+
+            # mid-step replay: the first live step after a recv-drop retry
+            # substitutes the carried snapshot for its own push output, so
+            # the discarded step's migration re-runs bit-identically
+            use_mid = (resume > 0) & (i == jnp.int32(0)) & ~halted
+
+            # the step always executes (its ppermutes must run on every shard
+            # every iteration); outputs are masked once the window is halted —
+            # same masked pass-through trick as the single-device window
+            (nf, npos, nu, nw, nalive, nslots, npslot, nslab_d, nslab_valid,
+             nmid_pos, nmid_u, stats) = dist_pic_step_local(
+                f_in, pos, u_in, w_in, alive, slots, pslot, slab_d, slab_valid, cfg,
+                mid_pos=mid_pos, mid_u=mid_u, use_mid=use_mid,
+            )
+            if with_fault:
+                stats = dict(
+                    stats,
+                    mig_recv_dropped=stats["mig_recv_dropped"]
+                    + injected_recv_drop(step_abs, fault_vec),
+                )
+
+            # in-graph re-sort policy over the psum-reduced stats: the reduced
+            # scalars are replicated across shards, so the decision (and hence
+            # the lax.cond branch below) is taken uniformly
+            mandatory = stats["n_overflow"] > 0
+            do_pol, reason_pol, pstate_rec = policy_update(
+                pstate, policy,
+                n_moved=stats["n_moved"], n_alive=stats["n_alive"],
+                n_empty=stats["n_empty"], n_slots=n_slots_total,
+            )
+            do_pol = do_pol & ~mandatory
+            do_sort = mandatory | do_pol
+            reason = jnp.where(mandatory, jnp.int32(REASON_OVERFLOW), reason_pol).astype(jnp.int32)
+
+            # per-shard global sort under lax.cond — purely local work (attribute
+            # permutation + bin/slab rebuild), so no collective sits inside the
+            # cond; the local overflow is psum-reduced afterwards
+            def sort_branch(args):
+                return dist_global_sort_device(*args, cfg)
+
+            def no_sort(args):
+                pos, u, w, alive = args
+                return pos, u, w, alive, nslots, npslot, nslab_d, nslab_valid, jnp.zeros((), jnp.int32)
+
+            npos, nu, nw, nalive, nslots, npslot, nslab_d, nslab_valid, overflow_local = lax.cond(
+                do_sort, sort_branch, no_sort, (npos, nu, nw, nalive)
+            )
+            overflow_after = psum_all(overflow_local, cfg)
+            pstate_new = jax.tree.map(
+                lambda r, n: jnp.where(do_sort, r, n), policy_reset(), pstate_rec
+            )
+
+            # energies of the candidate post-step state: the sentinel checks
+            # them, and the per-step diagnostics report them (identical to
+            # the post-keep values for every counted step, and masked to
+            # zero otherwise)
+            if need_energies:
+                fe_l, ke_l = _local_energies(nf, nu, nw, nalive, cfg)
+                field_e = psum_all(fe_l, cfg)
+                kinetic = psum_all(ke_l, cfg)
+            else:
+                field_e = jnp.zeros((), jnp.float32)
+                kinetic = jnp.zeros((), jnp.float32)
+
+            # health sentinel: pure psum-reduced reads of the candidate
+            # state — replicated, so every shard classifies identically
+            h_inv = jnp.zeros((), jnp.int32)
+            h_meas = jnp.zeros((), jnp.float32)
+            h_ref = jnp.zeros((), jnp.float32)
+            if health is not None:
+                ff = jnp.zeros((), jnp.int32)
+                mf = jnp.zeros((), jnp.int32)
+                if health.check_nonfinite:
+                    ff = psum_all(nonfinite_count(list(nf)), cfg)
+                    mf = psum_all(nonfinite_count([nu, npos], mask=nalive), cfg)
+                charge = psum_all(
+                    jnp.sum(nw.astype(jnp.float32) * nalive.astype(jnp.float32)), cfg
+                )
+                h_code, h_inv, h_meas, h_ref = classify_health(
+                    health,
+                    fields_nonfinite=ff, momenta_nonfinite=mf,
+                    charge=charge, charge_ref=ref_charge,
+                    energy=field_e + kinetic, energy_ref=ref_energy,
+                )
+            else:
+                h_code = jnp.zeros((), jnp.int32)
+
+            # halt classification (recv-drop discards the whole step: those
+            # particles would have been destroyed). Health outranks the
+            # growth halts: a poisoned state must not be "fixed" by growing.
+            recv_drop = stats["mig_recv_dropped"] > 0
+            halt_bin = overflow_after > 0
+            halt_send = stats["mig_send_overflow"] > 0
+            step_code = jnp.where(
+                h_code != jnp.int32(HALT_NONE), h_code,
+                jnp.where(
+                    recv_drop, jnp.int32(HALT_MIG_RECV),
+                    jnp.where(
+                        halt_bin, jnp.int32(HALT_BIN_OVERFLOW),
+                        jnp.where(halt_send, jnp.int32(HALT_MIG_SEND), jnp.int32(HALT_NONE)),
+                    ),
+                ),
+            )
+            executed = ~halted
+            counted = executed & ~recv_drop  # a step that survives into n_done
+
+            discard = halted | recv_drop
+            keep = lambda old, new: jax.tree.map(lambda o, n: jnp.where(discard, o, n), old, new)
+            fields = keep(fields, nf)
+            pos, u, w, alive = keep((pos, u, w, alive), (npos, nu, nw, nalive))
+            slots, pslot = keep((slots, pslot), (nslots, npslot))
+            slab_d, slab_valid = keep((slab_d, slab_valid), (nslab_d, nslab_valid))
+            pstate = jax.tree.map(lambda o, n: jnp.where(counted, n, o), pstate, pstate_new)
+            sorts = sorts + (counted & do_pol).astype(jnp.int32)
+            rebuilds = rebuilds + (counted & mandatory).astype(jnp.int32)
+            # the snapshot updates on EXECUTED (including a discarded
+            # recv-drop step — capturing its push output is the whole point)
+            mid_pos = jnp.where(executed, nmid_pos, mid_pos)
+            mid_u = jnp.where(executed, nmid_u, mid_u)
+
+            step_halt = executed & (step_code != HALT_NONE)
+            # absolute index (1-based) of the offending step — for a
+            # discarded step `counted` is 0, so latch BEFORE the increment
+            halt_step = jnp.where(
+                step_halt & (halt_code == 0), step_abs + jnp.int32(1), halt_step
+            )
+            halt_inv = jnp.where(step_halt & (halt_code == 0), h_inv, halt_inv)
+            halt_meas = jnp.where(step_halt & (halt_code == 0), h_meas, halt_meas)
+            halt_ref = jnp.where(step_halt & (halt_code == 0), h_ref, halt_ref)
+            halt_code = jnp.where(halt_code != 0, halt_code, jnp.where(step_halt, step_code, 0))
+            step_abs = step_abs + counted.astype(jnp.int32)
+            halted = halted | step_halt | (i + 1 >= n_target)
+
+            diag = {
+                "active": counted,
+                "sorted": do_sort & counted,
+                "reason": jnp.where(counted, reason, 0).astype(jnp.int32),
+                "n_moved": jnp.where(counted, stats["n_moved"], 0).astype(jnp.int32),
+                "n_alive": jnp.where(counted, stats["n_alive"], 0).astype(jnp.int32),
+                "mig_send_overflow": jnp.where(counted, stats["mig_send_overflow"], 0).astype(jnp.int32),
+                "mig_recv_dropped": jnp.where(executed, stats["mig_recv_dropped"], 0).astype(jnp.int32),
+                "n_unmigrated": jnp.where(counted, stats["n_unmigrated"], 0).astype(jnp.int32),
+                "discarded": (executed & recv_drop).astype(jnp.int32),
+                "field_energy": jnp.where(counted, field_e, 0.0),
+                "kinetic_energy": jnp.where(counted, kinetic, 0.0),
+            }
+            carry = (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+                     mid_pos, mid_u, pstate, halted, halt_code, halt_step, halt_inv,
+                     halt_meas, halt_ref, step_abs, sorts, rebuilds)
+            return carry, diag
+
         zero = jnp.zeros((), jnp.int32)
+        zf = jnp.zeros((), jnp.float32)
         carry0 = (
-            fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, pstate,
-            n_target <= jnp.int32(0), zero, zero, zero, n_target,
+            fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+            mid_pos, mid_u, pstate,
+            n_target <= jnp.int32(0), zero, -jnp.ones((), jnp.int32), zero, zf, zf,
+            step0.astype(jnp.int32), zero, zero,
         )
         carry, per_step = lax.scan(window_step, carry0, jnp.arange(n_steps, dtype=jnp.int32))
         (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
-         pstate, halted, halt_code, sorts, rebuilds, _) = carry
+         mid_pos, mid_u, pstate, halted, halt_code, halt_step, halt_inv,
+         halt_meas, halt_ref, _step_abs, sorts, rebuilds) = carry
         bundle = {
             "n_done": jnp.sum(per_step["active"]).astype(jnp.int32),
             "n_sorts": sorts,
             "n_rebuilds": rebuilds,
             "halt_code": halt_code,
+            "halt_step": halt_step,
+            "halt_inv": halt_inv,
+            "halt_measured": halt_meas,
+            "halt_reference": halt_ref,
+            "n_discarded": jnp.sum(per_step["discarded"]).astype(jnp.int32),
             "per_step": per_step,
         }
         ex = lambda a: a.reshape((1, 1) + a.shape)
-        pos, u, w, alive, slots, pslot, slab_d, slab_valid = map(
-            ex, (pos, u, w, alive, slots, pslot, slab_d, slab_valid)
+        pos, u, w, alive, slots, pslot, slab_d, slab_valid, mid_pos, mid_u = map(
+            ex, (pos, u, w, alive, slots, pslot, slab_d, slab_valid, mid_pos, mid_u)
         )
-        return fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, pstate, bundle
+        return (fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
+                mid_pos, mid_u, pstate, bundle)
 
     fspec = P(cfg.x_axes, cfg.y_axes, None)
 
@@ -289,15 +421,21 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
         spec(None, None), spec(None),
         spec(None, None, None),  # slab_d
         spec(None, None),        # slab_valid
+        spec(None, None),        # mid_pos (mid-step replay snapshot)
+        spec(None, None),        # mid_u
         P(),  # policy state (replicated scalars)
         P(),  # n_target
         P(),  # presort flag (capacity-growth re-entry)
+        P(),  # resume flag (recv-drop replay re-entry)
+        P(),  # step0 (absolute step counter at window entry)
+        P(),  # fault_vec (chaos harness; all-shard identical)
     )
     out_specs = (
         (fspec,) * 6,
         spec(None, None), spec(None, None), spec(None), spec(None),
         spec(None, None), spec(None),
         spec(None, None, None), spec(None, None),
+        spec(None, None), spec(None, None),  # mid_pos, mid_u
         P(),  # policy state
         P(),  # bundle (everything psum-reduced / replicated)
     )
@@ -308,7 +446,7 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
     sm = shard_map_compat(
         window_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
-    return jax.jit(sm, donate_argnums=tuple(range(10)))
+    return jax.jit(sm, donate_argnums=tuple(range(12)))
 
 
 # ---------------------------------------------------------------------------
@@ -401,11 +539,29 @@ class DistSimulation:
         self.sorts = 0
         self.rebuilds = 0
         self._pending_presort = False  # capacity-growth re-entry flag
+        self._pending_resume = False   # recv-drop replay re-entry flag
         self.growths = {"capacity": 0, "mig_cap": 0, "n_local": 0}
         self.mig_recv_dropped = 0  # host loop only; the windowed driver never drops
         self.history: list[dict] = []
         self._host_step = 0
         self._fns: dict = {}
+
+        # mid-step replay snapshot (push output of the last executed step;
+        # consumed by the resume re-entry after a HALT_MIG_RECV)
+        self.mid_pos = jnp.zeros_like(self.pos)
+        self.mid_u = jnp.zeros_like(self.u)
+
+        # fault-tolerance counters + supervisor wiring (docs/robustness.md)
+        self.halts: dict[str, int] = {}
+        self.retries = 0
+        self.restarts = 0
+        self.discarded_steps = 0
+        self._remedy_level = 0
+        self._health = _spec.health if (_spec is not None and _spec.health.enable) else None
+        self.fault_injector = (
+            PICFaultInjector(_spec.fault)
+            if (_spec is not None and _spec.fault is not None) else None
+        )
 
     def _default_n_local(self, particles: ParticleState) -> int:
         nx_loc, ny_loc = self.config.local_grid.shape[:2]
@@ -419,11 +575,13 @@ class DistSimulation:
 
     # -- jitted program cache (static config knobs key the entries) --------
 
-    def _window_fn(self, window: int, with_energies: bool):
-        key = ("window", self.config, window, with_energies)
+    def _window_fn(self, window: int, with_energies: bool,
+                   health: HealthConfig | None = None, with_fault: bool = False):
+        key = ("window", self.config, window, with_energies, health, with_fault)
         if key not in self._fns:
             self._fns[key] = make_dist_window(
-                self.mesh, self.config, self.policy.config, window, with_energies
+                self.mesh, self.config, self.policy.config, window, with_energies,
+                health=health, with_fault=with_fault,
             )
         return self._fns[key]
 
@@ -442,52 +600,115 @@ class DistSimulation:
     # -- drivers -----------------------------------------------------------
 
     def run(self, n_steps: int | None = None, *, diagnostics_every: int | None = None,
-            window: int | None = UNSET) -> None:
+            window: int | None = UNSET, autosave_every: int | None = None,
+            autosave_path: str | None = None) -> None:
         """Advance `n_steps` (default: the spec's step count). ``window=K``
         runs the device-resident windowed program; ``window=None`` the
-        per-step host loop; unset defaults to the spec window. As with
-        `Simulation`, the two drivers keep independent policy counters —
-        pick one driver per DistSimulation."""
-        n_steps, diagnostics_every, window = resolve_run_args(
-            self.spec, n_steps, diagnostics_every, window
+        per-step host loop; unset defaults to the spec window.
+        ``autosave_every=N`` checkpoints the run every N steps (and at
+        entry/exit) so a hard crash restores and resumes automatically; the
+        health sentinel and remediation ladder (spec ``health`` node) apply
+        on the windowed path — see docs/robustness.md. As with `Simulation`,
+        the two drivers keep independent policy counters — pick one driver
+        per DistSimulation."""
+        n_steps, diagnostics_every, window, autosave_every, autosave_path = resolve_run_args(
+            self.spec, n_steps, diagnostics_every, window, autosave_every, autosave_path
         )
         with set_mesh_compat(self.mesh):
             if window is None:
                 self._run_host(n_steps, diagnostics_every)
             else:
-                self._run_windowed(n_steps, diagnostics_every, window)
+                self._run_windowed(n_steps, diagnostics_every, window,
+                                   autosave_every, autosave_path)
 
-    def _run_windowed(self, n_steps: int, diagnostics_every: int, window: int) -> None:
+    def _run_windowed(self, n_steps: int, diagnostics_every: int, window: int,
+                      autosave_every: int = 0, autosave_path: str = "") -> None:
         if window <= 0:
             raise ValueError(f"window must be positive, got {window}")
-        done = 0
-        while done < n_steps:
-            k = min(window, n_steps - done)
-            fn = self._window_fn(window, bool(diagnostics_every))
-            presort = jnp.int32(1 if self._pending_presort else 0)
-            self._pending_presort = False
-            (self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
-             self.slab_d, self.slab_valid, self.policy_state, bundle) = fn(
-                self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
-                self.slab_d, self.slab_valid, self.policy_state, jnp.int32(k), presort,
+        run_supervised_windows(
+            self, n_steps, diagnostics_every, window,
+            autosave_every=autosave_every, autosave_path=autosave_path,
+        )
+
+    # -- supervisor hooks (distributed.fault.run_supervised_windows) --------
+
+    def _enter_window(self, k: int, window: int, diagnostics_every: int,
+                      fault_vec) -> dict:
+        """Launch ONE compiled window (k live steps of a `window`-length
+        program) and fetch its bundle — the single device->host sync of the
+        window. Consumes (and clears) the pending presort/resume re-entry
+        flags."""
+        fn = self._window_fn(window, bool(diagnostics_every), self._health,
+                             fault_vec is not None)
+        presort = jnp.int32(1 if self._pending_presort else 0)
+        resume = jnp.int32(1 if self._pending_resume else 0)
+        self._pending_presort = False
+        self._pending_resume = False
+        vec = no_fault_vec() if fault_vec is None else fault_vec
+        (self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
+         self.slab_d, self.slab_valid, self.mid_pos, self.mid_u,
+         self.policy_state, bundle) = fn(
+            self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
+            self.slab_d, self.slab_valid, self.mid_pos, self.mid_u, self.policy_state,
+            jnp.int32(k), presort, resume, jnp.int32(self._host_step), vec,
+        )
+        return _fetch_bundle(bundle)
+
+    def _consume_bundle(self, host: dict, diagnostics_every: int) -> int:
+        """Commit a successful (or growth-halted) window's accounting."""
+        n_done, n_sorts, n_rebuilds = consume_window_bundle(
+            host, self._host_step, diagnostics_every, self.history
+        )
+        self.sorts += n_sorts
+        self.rebuilds += n_rebuilds
+        self._host_step += n_done
+        return n_done
+
+    def _take_snapshot(self):
+        """Deep-copy the window carry (the windowed call donates its
+        inputs), INCLUDING the re-entry flags `_enter_window` clears — a
+        rolled-back window must retry with the same presort/resume intent."""
+        return (
+            jax.tree.map(jnp.copy, self.state),
+            jax.tree.map(jnp.copy, self.policy_state),
+            self._pending_presort,
+            self._pending_resume,
+        )
+
+    def _restore_snapshot(self, snap) -> None:
+        state, pstate, presort, resume = snap
+        self.state = state
+        self.policy_state = pstate
+        self._pending_presort = presort
+        self._pending_resume = resume
+
+    def _handle_halt(self, code: int, host: dict) -> None:
+        if code == HALT_BIN_OVERFLOW:
+            self._grow_capacity()
+        elif code == HALT_MIG_SEND:
+            self._grow_mig_cap()
+        elif code == HALT_MIG_RECV:
+            self._grow_n_local()
+            self._pending_resume = True  # replay the discarded step's migration
+        else:
+            raise RuntimeError(
+                f"distributed driver cannot handle halt code {code} ({HALT_NAMES[code]})"
             )
-            host = _fetch_bundle(bundle)  # the single device->host sync of this window
-            n_done, n_sorts, n_rebuilds = consume_window_bundle(
-                host, self._host_step, diagnostics_every, self.history
-            )
-            self.sorts += n_sorts
-            self.rebuilds += n_rebuilds
-            self._host_step += n_done
-            done += n_done
-            code = int(host["halt_code"])
-            if code == HALT_BIN_OVERFLOW:
-                self._grow_capacity()
-            elif code == HALT_MIG_SEND:
-                self._grow_mig_cap()
-            elif code == HALT_MIG_RECV:
-                self._grow_n_local()
-            elif n_done < k:
-                raise RuntimeError("distributed windowed driver made no progress without a halt")
+
+    def _remedy_sort(self) -> None:
+        """Remediation-ladder rung 2: force a per-shard global sort and
+        reset the device policy counters."""
+        self._dist_sort()
+        self.policy_state = policy_init()
+
+    def _drop_pallas(self) -> bool:
+        """Remediation-ladder rung 3: re-route the bin contractions through
+        the XLA reference path. Returns False when there is nothing to drop
+        (the ladder is exhausted)."""
+        if not self.config.use_pallas:
+            return False
+        self.config = dataclasses.replace(self.config, use_pallas=False)
+        return True
 
     def _run_host(self, n_steps: int, diagnostics_every: int) -> None:
         import time
@@ -551,22 +772,46 @@ class DistSimulation:
                 "binning overflow persists with capacity > n_local"
             )
 
+    def _needed_capacity(self) -> int:
+        """Occupancy of the densest (shard, cell) pair in the CURRENT state
+        — the halt tells the host a growth is needed; this tells it how
+        much. One host fetch of replicated scalars; growth is rare."""
+        local = self.config.local_grid
+        pos = jnp.reshape(self.pos, (-1, 3))
+        alive = jnp.reshape(self.alive, (-1,))
+        # stragglers (send overflow) carry out-of-range coordinates and do
+        # not occupy a bin — mask them exactly like the binning does
+        ok = alive & in_domain(pos, local.shape)
+        cells = jnp.clip(cell_index(pos, local.shape), 0, local.n_cells - 1)
+        shard = jnp.repeat(
+            jnp.arange(self.sx * self.sy, dtype=jnp.int32), self.n_local
+        )
+        flat = shard * local.n_cells + cells
+        counts = jnp.zeros(self.sx * self.sy * local.n_cells, jnp.int32).at[flat].add(
+            ok.astype(jnp.int32)
+        )
+        return int(counts.max())
+
     def _grow_capacity(self) -> None:
-        """Windowed halt-and-grow (HALT_BIN_OVERFLOW): double the bin
-        capacity by PADDING the carried slot table / slab arrays — a pure
-        device-side reshape, no separate compiled sort program and no
-        overflow fetch (the host round-trip `_dist_sort` used to pay) —
-        and flag the next window entry to run the in-graph per-shard
-        presort, which slots the overflowed stragglers at the new capacity
-        before the first step."""
+        """Windowed halt-and-grow (HALT_BIN_OVERFLOW): grow the bin capacity
+        ONCE to fit the densest cell (standard headroom, at least doubling)
+        by PADDING the carried slot table / slab arrays — a pure device-side
+        reshape, no separate compiled sort program and no overflow fetch
+        (the host round-trip `_dist_sort` used to pay) — and flag the next
+        window entry to run the in-graph per-shard presort, which slots the
+        overflowed stragglers at the new capacity before the first step.
+        Sizing from the actual occupancy instead of blind doubling means a
+        dense hotspot costs ONE halt instead of one per doubling."""
         old_cap = self.config.capacity
-        self.config = dataclasses.replace(self.config, capacity=old_cap * 2)
+        new_cap = max(choose_capacity(self._needed_capacity()), old_cap * 2)
+        self.config = dataclasses.replace(self.config, capacity=new_cap)
         self.growths["capacity"] += 1
-        assert self.config.capacity <= 2 * max(self.n_local, 1), (
+        assert new_cap <= 2 * max(self.n_local, 8), (
             "binning overflow persists with capacity > n_local"
         )
+        add = new_cap - old_cap
         pad = lambda a, fill: jnp.concatenate(
-            [a, jnp.full(a.shape[:3] + (old_cap,) + a.shape[4:], fill, a.dtype)], axis=3
+            [a, jnp.full(a.shape[:3] + (add,) + a.shape[4:], fill, a.dtype)], axis=3
         )
         self.slots = pad(self.slots, np.int32(-1))
         self.slab_d = pad(self.slab_d, 0.0)
@@ -576,7 +821,7 @@ class DistSimulation:
         # rebuilds everything anyway, but a consistent state never hurts)
         ps = self.pslot
         self.pslot = jnp.where(
-            ps >= 0, (ps // old_cap) * self.config.capacity + ps % old_cap, ps
+            ps >= 0, (ps // old_cap) * new_cap + ps % old_cap, ps
         )
         self._pending_presort = True
 
@@ -599,6 +844,10 @@ class DistSimulation:
         self.w = pad(self.w, 0.0)
         self.alive = pad(self.alive, False)
         self.pslot = pad(self.pslot, np.int32(-1))
+        # the replay snapshot is index-aligned with pos/u — pad it the same
+        # way so a pending resume survives the growth
+        self.mid_pos = pad(self.mid_pos, 0.0)
+        self.mid_u = pad(self.mid_u, 0.0)
         self.n_local += add
         self.growths["n_local"] += 1
 
@@ -614,6 +863,7 @@ class DistSimulation:
             "pos": self.pos, "u": self.u, "w": self.w, "alive": self.alive,
             "slots": self.slots, "pslot": self.pslot,
             "slab_d": self.slab_d, "slab_valid": self.slab_valid,
+            "mid_pos": self.mid_pos, "mid_u": self.mid_u,
         }
 
     @state.setter
@@ -622,6 +872,10 @@ class DistSimulation:
         self.pos, self.u, self.w = tree["pos"], tree["u"], tree["w"]
         self.alive, self.slots, self.pslot = tree["alive"], tree["slots"], tree["pslot"]
         self.slab_d, self.slab_valid = tree["slab_d"], tree["slab_valid"]
+        # pre-robustness checkpoints have no replay snapshot — zeros means
+        # "no pending resume", which is always true at a checkpoint boundary
+        self.mid_pos = tree.get("mid_pos", jnp.zeros_like(tree["pos"]))
+        self.mid_u = tree.get("mid_u", jnp.zeros_like(tree["u"]))
 
     def save(self, path: str) -> None:
         """Checkpoint the full pytree (state + SortPolicyState) and host

@@ -292,12 +292,21 @@ def in_domain(pos, shape):
     return (x >= 0) & (x < shape[0]) & (y >= 0) & (y < shape[1])
 
 
-def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, slab_valid, cfg: DistConfig):
+def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, slab_valid, cfg: DistConfig,
+                        *, mid_pos=None, mid_u=None, use_mid=None):
     """Body executed per shard inside shard_map. fields: 6-tuple of local
     blocks; particle arrays local; ``slab_d``/``slab_valid`` the carried
     `BinSlab` arrays (consistent with the incoming bins — rebuilt below
     right after the bin update, exactly like the single-device step).
-    Returns updated locals + stats dict."""
+    Returns updated locals + the post-push mid-step snapshot (pos, u right
+    before migration — the windowed driver carries it so a discarded
+    recv-drop step replays only migration onward) + stats dict.
+
+    ``use_mid`` (traced bool scalar, windowed replay only): substitute the
+    carried ``mid_pos``/``mid_u`` for this step's own push output. Weights
+    and alive masks are untouched by the push, so the migration inputs of
+    the replay match the discarded step's bit for bit. ``None`` omits the
+    substitution from the program entirely."""
     ex, ey, ez, bx, by, bz = fields
     g = cfg.guard
     shape = cfg.local_grid.shape
@@ -344,6 +353,11 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
 
     # 3. migration (x then y; z wraps locally)
     pos_new = pos_new.at[:, 2].set(jnp.mod(pos_new[:, 2], shape[2]))
+    if use_mid is not None:
+        pos_new = jnp.where(use_mid, mid_pos, pos_new)
+        u_new = jnp.where(use_mid, mid_u, u_new)
+    # post-push / pre-migration snapshot (returned for the window carry)
+    mid_pos_out, mid_u_out = pos_new, u_new
     mig_send_overflow = jnp.int32(0)
     mig_recv_dropped = jnp.int32(0)
     arrived = jnp.zeros_like(alive)
@@ -457,7 +471,7 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
     for k in list(stats):
         stats[k] = psum_all(stats[k], cfg)
 
-    return (ex1, ey1, ez1, bx2, by2, bz2), pos_new, u_new, w, alive, layout.slots, layout.particle_slot, slab.d, slab.valid, stats
+    return (ex1, ey1, ez1, bx2, by2, bz2), pos_new, u_new, w, alive, layout.slots, layout.particle_slot, slab.d, slab.valid, mid_pos_out, mid_u_out, stats
 
 
 def psum_all(value, cfg: DistConfig):
@@ -529,7 +543,7 @@ def make_dist_step(mesh, cfg: DistConfig):
     def body(fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid):
         # strip the (1,1) leading shard dims from particle arrays
         sq = lambda a: a.reshape(a.shape[2:])
-        fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, stats = dist_pic_step_local(
+        fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid, _mid_pos, _mid_u, stats = dist_pic_step_local(
             fields, sq(pos), sq(u), sq(w), sq(alive), sq(slots), sq(pslot),
             sq(slab_d), sq(slab_valid), cfg
         )

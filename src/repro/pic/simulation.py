@@ -41,6 +41,7 @@ the SoA attribute permutation (memory coherence).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import warnings
 from functools import partial
@@ -77,7 +78,23 @@ from repro.core import (
 )
 from repro.core.binning import BinnedLayout
 from repro.core.gpma import GPMAStats
+from repro.core.health import (
+    HALT_BIN_OVERFLOW,
+    HALT_NAMES,
+    HALT_NONE,
+    HealthConfig,
+    classify_health,
+    nonfinite_count,
+)
 from repro.core.resort_policy import REASON_OVERFLOW
+from repro.distributed.fault import (
+    PICFaultInjector,
+    inject_fields,
+    inject_momenta,
+    inject_weights,
+    no_fault_vec,
+    run_supervised_windows,
+)
 from repro.pic.grid import B_STAGGER, E_STAGGER, FieldState, GridSpec
 from repro.pic.maxwell import maxwell_step
 from repro.pic.plasma import ParticleState
@@ -349,11 +366,42 @@ def _zeros_diag():
     }
 
 
+def _total_charge(state: PICState) -> jax.Array:
+    """Sum of alive macro-particle weights (float32) — exactly conserved by
+    the step, so the sentinel's charge invariant compares against the value
+    captured at window entry."""
+    return jnp.sum(
+        state.particles.w.astype(jnp.float32) * state.particles.alive.astype(jnp.float32)
+    ).astype(jnp.float32)
+
+
+def _apply_fault(state: PICState, fault_vec) -> PICState:
+    """Chaos harness hook: corrupt the step INPUT when the armed fault vector
+    fires at this step counter (see distributed.fault.FaultSpec). Compiled in
+    only when the window is built with a fault armed (`with_fault`), so the
+    production program carries zero overhead."""
+    f = state.fields
+    ex, ey, ez, bx, by, bz = inject_fields(
+        (f.ex, f.ey, f.ez, f.bx, f.by, f.bz), state.step, fault_vec
+    )
+    fields = dataclasses.replace(f, ex=ex, ey=ey, ez=ez, bx=bx, by=by, bz=bz)
+    p = state.particles
+    particles = dataclasses.replace(
+        p,
+        u=inject_momenta(p.u, state.step, fault_vec),
+        w=inject_weights(p.w, state.step, fault_vec),
+    )
+    return dataclasses.replace(state, fields=fields, particles=particles)
+
+
 def _window_active_step(state, pstate, sorts, rebuilds, config: PICConfig,
-                        policy: SortPolicyConfig, with_energies: bool):
+                        policy: SortPolicyConfig, with_energies: bool,
+                        health: HealthConfig | None, ref_charge, ref_energy):
     """One live step of the scan window: pic_step + in-graph sort decision +
     conditional global sort, mirroring the legacy host driver's control flow
-    step for step (see Simulation.run)."""
+    step for step (see Simulation.run). With `health` set, the sentinel's
+    pure-read checks classify the post-step state; the returned `step_code`
+    is one of the core.health halt codes (HALT_NONE = healthy)."""
     n_slots = config.grid.n_cells * config.capacity
     state, stats = _pic_step(state, config)
 
@@ -393,7 +441,8 @@ def _window_active_step(state, pstate, sorts, rebuilds, config: PICConfig,
         overflow_after = stats.n_overflow.astype(jnp.int32)
     # "none": nothing to decide
 
-    if with_energies:
+    need_energies = with_energies or (health is not None and health.check_energy)
+    if need_energies:
         field_e, kinetic = _energies(state, config)
     else:
         kinetic = jnp.zeros((), jnp.float32)
@@ -405,14 +454,38 @@ def _window_active_step(state, pstate, sorts, rebuilds, config: PICConfig,
         "reason": reason,
         "n_moved": stats.n_moved.astype(jnp.int32),
         "n_alive": stats.n_alive.astype(jnp.int32),
-        "field_energy": field_e,
-        "kinetic_energy": kinetic,
+        "field_energy": field_e if with_energies else jnp.zeros((), jnp.float32),
+        "kinetic_energy": kinetic if with_energies else jnp.zeros((), jnp.float32),
     }
+
+    # health sentinel: pure reads of the post-step state — no arithmetic of
+    # the step itself changes, so a healthy sentinel-on run stays
+    # bit-identical to a sentinel-off run (tests/test_health.py pins this)
+    zero_i = jnp.zeros((), jnp.int32)
+    zero_f = jnp.zeros((), jnp.float32)
+    h_code, h_inv, h_meas, h_ref = zero_i, zero_i, zero_f, zero_f
+    if health is not None:
+        p = state.particles
+        ff = mf = zero_i
+        if health.check_nonfinite:
+            f = state.fields
+            ff = nonfinite_count([f.ex, f.ey, f.ez, f.bx, f.by, f.bz])
+            mf = nonfinite_count([p.u, p.pos], mask=p.alive)
+        h_code, h_inv, h_meas, h_ref = classify_health(
+            health,
+            fields_nonfinite=ff, momenta_nonfinite=mf,
+            charge=_total_charge(state), charge_ref=ref_charge,
+            energy=field_e + kinetic, energy_ref=ref_energy,
+        )
+
     # persistent overflow (a bin fuller than `capacity` even after the sort)
-    # halts the window: the remaining steps become no-ops and the host grows
-    # the bin capacity — the single host escape hatch of the windowed driver
-    halted = overflow_after > 0
-    return state, pstate, halted, sorts, rebuilds, diag
+    # halts the window exactly as before; a health violation outranks it
+    # (a corrupt state must roll back before any capacity reaction)
+    step_code = jnp.where(
+        h_code != HALT_NONE, h_code,
+        jnp.where(overflow_after > 0, jnp.int32(HALT_BIN_OVERFLOW), jnp.int32(HALT_NONE)),
+    )
+    return state, pstate, step_code, sorts, rebuilds, diag, (h_inv, h_meas, h_ref)
 
 
 # Trace-time counter: incremented every time the window impl is (re)traced.
@@ -422,13 +495,24 @@ def _window_active_step(state, pstate, sorts, rebuilds, config: PICConfig,
 _window_trace_count = 0
 
 
-def _pic_run_window_impl(state, pstate, n_target, config: PICConfig,
-                         policy: SortPolicyConfig, n_steps: int, with_energies: bool):
+def _pic_run_window_impl(state, pstate, n_target, fault_vec, config: PICConfig,
+                         policy: SortPolicyConfig, n_steps: int, with_energies: bool,
+                         health: HealthConfig | None, with_fault: bool):
     global _window_trace_count
     _window_trace_count += 1
 
+    # invariant references, captured at window entry: the sentinel compares
+    # every step of the window against the state it started from
+    if health is not None:
+        ref_charge = _total_charge(state)
+        ref_fe, ref_ke = _energies(state, config)
+        ref_energy = ref_fe + ref_ke
+    else:
+        ref_charge = ref_energy = jnp.zeros((), jnp.float32)
+
     def body(carry, i):
-        state, pstate, halted, sorts, rebuilds = carry
+        (state, pstate, halted, halt_code, halt_step, halt_inv, halt_meas,
+         halt_ref, sorts, rebuilds) = carry
         # The step always executes and its outputs are MASKED once the window
         # is halted, rather than branching with lax.cond: on the CPU backend a
         # conditional whose branch contains the whole step body costs ~2x the
@@ -438,39 +522,59 @@ def _pic_run_window_impl(state, pstate, n_target, config: PICConfig,
         # length reuses the same halt flag: step i+1 onward is masked once
         # i + 1 >= n_target, so post-growth and end-of-run tails (k < window)
         # run the one compiled program instead of retracing per length; a
-        # per-step ys flag ("halt") distinguishes a genuine overflow halt
-        # from simple target exhaustion in the fetched bundle.
-        new_state, new_pstate, halted_step, new_sorts, new_rebuilds, diag = _window_active_step(
-            state, pstate, sorts, rebuilds, config, policy, with_energies
+        # per-step ys flag ("halt") distinguishes a genuine halt from simple
+        # target exhaustion in the fetched bundle.
+        st_in = _apply_fault(state, fault_vec) if with_fault else state
+        new_state, new_pstate, step_code, new_sorts, new_rebuilds, diag, hinfo = _window_active_step(
+            st_in, pstate, sorts, rebuilds, config, policy, with_energies,
+            health, ref_charge, ref_energy
         )
+        halted_step = step_code != HALT_NONE
         diag = dict(diag, halt=halted_step)
         keep = lambda old, new: jax.tree.map(lambda o, n: jnp.where(halted, o, n), old, new)
+        # first genuine halt of the window latches its full classification
+        # (code, absolute step, offending invariant, measured/reference)
+        first = halted_step & ~halted
         carry = (
             keep(state, new_state),
             keep(pstate, new_pstate),
             halted | halted_step | (i + 1 >= n_target),
+            jnp.where(first, step_code, halt_code),
+            jnp.where(first, new_state.step, halt_step),
+            jnp.where(first, hinfo[0], halt_inv),
+            jnp.where(first, hinfo[1], halt_meas),
+            jnp.where(first, hinfo[2], halt_ref),
             jnp.where(halted, sorts, new_sorts),
             jnp.where(halted, rebuilds, new_rebuilds),
         )
         return carry, keep(dict(_zeros_diag(), halt=jnp.zeros((), bool)), diag)
 
     zero = jnp.zeros((), jnp.int32)
-    carry0 = (state, pstate, n_target <= jnp.int32(0), zero, zero)
-    (state, pstate, halted, sorts, rebuilds), per_step = lax.scan(
+    zero_f = jnp.zeros((), jnp.float32)
+    carry0 = (state, pstate, n_target <= jnp.int32(0), zero, jnp.int32(-1),
+              zero, zero_f, zero_f, zero, zero)
+    (state, pstate, halted, halt_code, halt_step, halt_inv, halt_meas,
+     halt_ref, sorts, rebuilds), per_step = lax.scan(
         body, carry0, jnp.arange(n_steps, dtype=jnp.int32)
     )
-    overflow_pending = jnp.any(per_step.pop("halt"))
+    per_step.pop("halt")
     bundle = {
         "n_done": jnp.sum(per_step["active"]).astype(jnp.int32),
         "n_sorts": sorts,
         "n_rebuilds": rebuilds,
-        "overflow_pending": overflow_pending,
+        # kept for direct pic_run_window callers (pre-halt-code protocol)
+        "overflow_pending": halt_code == jnp.int32(HALT_BIN_OVERFLOW),
+        "halt_code": halt_code,
+        "halt_step": halt_step,
+        "halt_inv": halt_inv,
+        "halt_measured": halt_meas,
+        "halt_reference": halt_ref,
         "per_step": per_step,
     }
     return state, pstate, bundle
 
 
-_WINDOW_STATICS = ("config", "policy", "n_steps", "with_energies")
+_WINDOW_STATICS = ("config", "policy", "n_steps", "with_energies", "health", "with_fault")
 _pic_run_window_jit = partial(jax.jit, static_argnames=_WINDOW_STATICS)(_pic_run_window_impl)
 _pic_run_window_donated = partial(
     jax.jit, static_argnames=_WINDOW_STATICS, donate_argnums=(0, 1)
@@ -518,6 +622,8 @@ def pic_run_window(
     with_energies: bool = True,
     donate: bool = True,
     n_target: int | jax.Array | None = None,
+    health: HealthConfig | None = None,
+    fault_vec: jax.Array | None = None,
 ):
     """Run a window of `n_steps` PIC steps as ONE compiled `lax.scan` with
     zero per-step host syncs: step, in-graph re-sort policy, conditional
@@ -540,7 +646,15 @@ def pic_run_window(
     If a global sort cannot absorb an overflowing bin (capacity too small),
     the remaining steps of the window become no-ops and
     ``bundle["overflow_pending"]`` is set: the host must grow the capacity
-    and re-enter for the ``n_steps - n_done`` remaining steps.
+    and re-enter for the ``n_steps - n_done`` remaining steps. More
+    generally ``bundle["halt_code"]`` carries the structured halt protocol
+    (core.health.HALT_NAMES) with the halting step and — under the health
+    sentinel (``health=HealthConfig(enable=True, ...)``) — the offending
+    invariant and its measured/reference values.
+
+    ``fault_vec`` (chaos harness, tests only) arms the in-graph fault
+    injection of ``distributed.fault``; ``None`` compiles the injection out
+    entirely.
 
     With ``donate=True`` (default) the input state and policy-state buffers
     are donated to the window — particle and field arrays update in place.
@@ -549,10 +663,14 @@ def pic_run_window(
     """
     if n_target is None:
         n_target = n_steps
+    with_fault = fault_vec is not None
+    if fault_vec is None:
+        fault_vec = no_fault_vec()
     fn = _pic_run_window_donated if donate else _pic_run_window_jit
     return fn(
-        state, policy_state, jnp.asarray(n_target, jnp.int32),
+        state, policy_state, jnp.asarray(n_target, jnp.int32), fault_vec,
         config, policy or SortPolicyConfig(), n_steps, with_energies,
+        health, with_fault,
     )
 
 
@@ -570,10 +688,12 @@ _DEPRECATION_MSG = (
 )
 
 
-def resolve_run_args(spec, n_steps, diagnostics_every, window):
+def resolve_run_args(spec, n_steps, diagnostics_every, window,
+                     autosave_every=None, autosave_path=None):
     """Resolve SimDriver.run() arguments against the driver's spec
     (``None``/``UNSET`` -> spec defaults; spec-less legacy drivers keep the
-    historical defaults). Shared by Simulation and DistSimulation."""
+    historical defaults). Shared by Simulation and DistSimulation. An
+    ``autosave_every=N`` with no path derives ``checkpoints/<spec.name>``."""
     run = None if spec is None else spec.run
     if n_steps is None:
         if run is None:
@@ -583,7 +703,15 @@ def resolve_run_args(spec, n_steps, diagnostics_every, window):
         diagnostics_every = 0 if run is None else run.diagnostics_every
     if window is UNSET:
         window = None if run is None else (run.window or None)
-    return n_steps, diagnostics_every, window
+    if autosave_every is None:
+        autosave_every = 0 if run is None else run.autosave_every
+    if autosave_path is None:
+        autosave_path = "" if run is None else run.autosave_path
+    if autosave_every and not autosave_path:
+        autosave_path = os.path.join("checkpoints", getattr(spec, "name", None) or "sim")
+    if autosave_every and window is None:
+        raise ValueError("autosave_every requires the windowed driver (window=K)")
+    return n_steps, diagnostics_every, window, autosave_every, autosave_path
 
 
 class Simulation:
@@ -627,26 +755,44 @@ class Simulation:
         self.rebuilds = 0
         self.history: list[dict] = []
         self._host_step = 0  # host mirror of state.step (windowed path syncs nothing)
+        # fault-tolerance plumbing (docs/robustness.md): halt/retry/restart
+        # counters, the sentinel config, and the chaos-harness injector
+        self.halts: dict[str, int] = {}
+        self.retries = 0
+        self.restarts = 0
+        self.discarded_steps = 0
+        self.growths = {"capacity": 0}
+        self._remedy_level = 0
+        spec = self.spec
+        self._health = spec.health if (spec is not None and spec.health.enable) else None
+        self.fault_injector = (
+            PICFaultInjector(spec.fault) if (spec is not None and spec.fault is not None) else None
+        )
 
     def run(self, n_steps: int | None = None, *, diagnostics_every: int | None = None,
-            window: int | None = UNSET) -> None:
+            window: int | None = UNSET, autosave_every: int | None = None,
+            autosave_path: str | None = None) -> None:
         """Advance `n_steps` (default: the spec's step count). ``window=K``
         uses the device-resident scan driver; ``window=None`` the legacy
         host loop; unset defaults to the spec window (legacy drivers: host
-        loop).
+        loop). ``autosave_every=N`` checkpoints the run every N steps (and
+        at entry/exit) so a hard crash restores and resumes automatically;
+        the health sentinel and remediation ladder (spec ``health`` node)
+        apply on the windowed path — see docs/robustness.md.
 
         The two drivers keep INDEPENDENT policy counters (host
         ``self.policy`` vs device ``self.policy_state``) — pick one driver
         per Simulation. Switching mid-run restarts the sort cadence (both
         policies behave as if freshly reset); physics is unaffected.
         """
-        n_steps, diagnostics_every, window = resolve_run_args(
-            self.spec, n_steps, diagnostics_every, window
+        n_steps, diagnostics_every, window, autosave_every, autosave_path = resolve_run_args(
+            self.spec, n_steps, diagnostics_every, window, autosave_every, autosave_path
         )
         if window is None:
             self._run_host(n_steps, diagnostics_every)
         else:
-            self._run_windowed(n_steps, diagnostics_every, window)
+            self._run_windowed(n_steps, diagnostics_every, window,
+                               autosave_every, autosave_path)
 
     def save(self, path: str) -> None:
         """Checkpoint the full pytree (state + SortPolicyState) and host
@@ -711,49 +857,105 @@ class Simulation:
     # Device-resident windowed loop: ONE host sync (the fetched bundle) per
     # K-step window; capacity growth is the only other host intervention.
     # ------------------------------------------------------------------
-    def _run_windowed(self, n_steps: int, diagnostics_every: int, window: int) -> None:
+    def _run_windowed(self, n_steps: int, diagnostics_every: int, window: int,
+                      autosave_every: int = 0, autosave_path: str = "") -> None:
         if window <= 0:
             raise ValueError(f"window must be positive, got {window}")
-        done = 0
-        while done < n_steps:
-            # always compile the full `window` length; tails (end of run or
-            # post-growth re-entry) run the same program with the extra steps
-            # masked via the traced n_target — no per-length retrace
-            k = min(window, n_steps - done)
-            state, pstate, bundle = pic_run_window(
-                self.state, self.policy_state, self.config, window,
-                n_target=k,
-                policy=self.policy.config,
-                with_energies=bool(diagnostics_every),
+        run_supervised_windows(
+            self, n_steps, diagnostics_every, window,
+            autosave_every=autosave_every, autosave_path=autosave_path,
+        )
+
+    # -- supervisor hooks (distributed.fault.run_supervised_windows) --------
+
+    def _enter_window(self, k: int, window: int, diagnostics_every: int,
+                      fault_vec) -> dict:
+        """Launch ONE compiled window (k live steps of a `window`-length
+        program) and fetch its bundle — the single device->host sync."""
+        state, pstate, bundle = pic_run_window(
+            self.state, self.policy_state, self.config, window,
+            n_target=k,
+            policy=self.policy.config,
+            with_energies=bool(diagnostics_every),
+            health=self._health,
+            fault_vec=fault_vec,
+        )
+        self.state, self.policy_state = state, pstate
+        return _fetch_bundle(bundle)
+
+    def _consume_bundle(self, host: dict, diagnostics_every: int) -> int:
+        """Commit a successful (or capacity-halted) window's accounting."""
+        n_done, n_sorts, n_rebuilds = consume_window_bundle(
+            host, self._host_step, diagnostics_every, self.history
+        )
+        self.sorts += n_sorts
+        self.rebuilds += n_rebuilds
+        self._host_step += n_done
+        return n_done
+
+    def _take_snapshot(self):
+        """Deep-copy the window carry: the windowed call donates its input
+        buffers, so rollback needs owned copies taken before entry."""
+        return (
+            jax.tree.map(jnp.copy, self.state),
+            jax.tree.map(jnp.copy, self.policy_state),
+        )
+
+    def _restore_snapshot(self, snap) -> None:
+        self.state, self.policy_state = snap
+
+    def _handle_halt(self, code: int, host: dict) -> None:
+        if code == HALT_BIN_OVERFLOW:
+            self._grow_capacity()
+        else:
+            raise RuntimeError(
+                f"single-device driver cannot handle halt code {code} ({HALT_NAMES[code]})"
             )
-            self.state, self.policy_state = state, pstate
-            host = _fetch_bundle(bundle)  # the single device->host sync of this window
-            n_done, n_sorts, n_rebuilds = consume_window_bundle(
-                host, self._host_step, diagnostics_every, self.history
-            )
-            self.sorts += n_sorts
-            self.rebuilds += n_rebuilds
-            self._host_step += n_done
-            done += n_done
-            if bool(host["overflow_pending"]):
-                self._grow_capacity()
-            elif n_done < k:
-                raise RuntimeError("windowed driver made no progress without overflow")
+
+    def _remedy_sort(self) -> None:
+        """Remediation-ladder rung 2: force a global sort (fresh bins +
+        attribute permutation) and reset the device policy counters."""
+        self.state, overflow = global_sort(self.state, self.config)
+        if overflow:
+            self._grow_capacity()
+        self.policy_state = policy_init()
+
+    def _drop_pallas(self) -> bool:
+        """Remediation-ladder rung 3: re-route the bin contractions through
+        the XLA reference path. Returns False when there is nothing to drop
+        (the ladder is exhausted)."""
+        if not self.config.use_pallas:
+            return False
+        self.config = dataclasses.replace(self.config, use_pallas=False)
+        return True
+
+    def _needed_capacity(self) -> int:
+        """Occupancy of the densest cell in the CURRENT state — the halt
+        stats tell the host a growth is needed; this tells it how much."""
+        p = self.state.particles
+        cells = cell_index(p.pos, self.config.grid.shape)
+        counts = jnp.zeros(self.config.grid.n_cells, jnp.int32).at[cells].add(
+            p.alive.astype(jnp.int32)
+        )
+        return int(counts.max())
 
     def _grow_capacity(self) -> None:
-        """Double the bin capacity and re-bin the CURRENT state in place.
+        """Grow the bin capacity ONCE to fit the densest cell (with the
+        standard headroom, and at least doubling) and re-bin the CURRENT
+        state in place. Sizing from the actual occupancy instead of blind
+        doubling means a single kept step is never wasted re-halting when
+        one doubling would not have sufficed.
 
         Preserves the evolved fields, particle attributes, and step counter —
-        the old implementation re-ran `init_state`, which zeroed `state.step`
+        an older implementation re-ran `init_state`, which zeroed `state.step`
         and replaced the fields mid-run (regression: tests/test_sim_loop.py).
         """
-        n = self.state.particles.n
-        while True:
-            self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
-            self.state, overflow = global_sort(self.state, self.config)
-            if overflow == 0:
-                return
-            assert self.config.capacity <= 2 * max(n, 1), "binning overflow persists with capacity > n_particles"
+        needed = self._needed_capacity()
+        new_cap = max(choose_capacity(needed), self.config.capacity * 2)
+        self.config = dataclasses.replace(self.config, capacity=new_cap)
+        self.growths["capacity"] = self.growths.get("capacity", 0) + 1
+        self.state, overflow = global_sort(self.state, self.config)
+        assert overflow == 0, "binning overflow persists after sizing capacity to the densest cell"
 
     def diagnostics(self) -> dict:
         s = self.state

@@ -1,0 +1,122 @@
+"""Standalone distributed chaos-harness checks (subprocess: forces 8 host
+devices so the XLA override never leaks into other tests). Scenario name in
+argv[1]:
+
+  sentinel   health sentinel on, no fault: run is bit-identical to the
+             sentinel-off windowed driver (the sentinel is pure reads)
+  nan        nan_field injected mid-window on a 4x2 mesh: HALT_NONFINITE,
+             rollback, retry — final state bit-identical to unfaulted
+  recv       forced migration recv-drop: the step is discarded, n_local
+             grows, the mid-step snapshot replays ONLY the migration half —
+             final state bit-identical to unfaulted, counters exact
+  crash      simulated node loss mid-run + autosave_every: the supervisor
+             restores the newest checkpoint (incl. the replay snapshot
+             arrays) and resumes bit-for-bit
+"""
+
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.api import make_simulation, scenario  # noqa: E402
+
+STEPS, WINDOW = 24, 8
+MESH = "4x2"
+
+
+def build(**overrides):
+    spec = scenario("uniform", grid=(8, 8, 16), steps=STEPS, window=WINDOW,
+                    mesh=MESH, diagnostics_every=4, **overrides)
+    return make_simulation(spec)
+
+
+def run_reference():
+    sim = build()
+    n0 = sim.n_local
+    sim.run()
+    return sim, jax.device_get(sim.state), n0
+
+
+def assert_dist_state_equal(sim, ref_st, n0, what):
+    """Bitwise equality on fields and the first n0 particle rows (growth
+    appends dead padding, which must STAY dead)."""
+    st = jax.device_get(sim.state)
+    for a, b in zip(st["fields"], ref_st["fields"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=what)
+    for k in ("pos", "u", "w", "alive"):
+        np.testing.assert_array_equal(
+            np.asarray(st[k])[:, :, :n0], np.asarray(ref_st[k])[:, :, :n0],
+            err_msg=f"{what}: {k}",
+        )
+    assert not np.asarray(st["alive"])[:, :, n0:].any(), f"{what}: padding rows came alive"
+
+
+def check_sentinel():
+    ref, ref_st, n0 = run_reference()
+    sim = build(health={"enable": True})
+    sim.run()
+    assert sim.halts == {} and sim.retries == 0 and sim.discarded_steps == 0
+    for k in ("slots", "pslot", "slab_d", "slab_valid"):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(sim.state)[k]), np.asarray(ref_st[k]), err_msg=k
+        )
+    assert_dist_state_equal(sim, ref_st, n0, "sentinel-on vs off")
+    assert [h["total_energy"] for h in sim.history] == \
+           [h["total_energy"] for h in ref.history]
+    print("DIST_CHAOS sentinel OK")
+
+
+def check_nan():
+    ref, ref_st, n0 = run_reference()
+    sim = build(health={"enable": True},
+                fault={"kind": "nan_field", "step": 11, "component": "ez"})
+    sim.run()
+    assert sim.halts == {"nonfinite": 1}, sim.halts
+    assert sim.retries == 1 and sim.fault_injector.fired == 1
+    assert_dist_state_equal(sim, ref_st, n0, "nan_field recovery")
+    assert [h["total_energy"] for h in sim.history] == \
+           [h["total_energy"] for h in ref.history]
+    print("DIST_CHAOS nan OK")
+
+
+def check_recv():
+    ref, ref_st, n0 = run_reference()
+    sim = build(health={"enable": True}, fault={"kind": "recv_drop", "step": 9})
+    sim.run()
+    assert sim.halts == {"mig_recv_dropped": 1}, sim.halts
+    assert sim.discarded_steps == 1, sim.discarded_steps
+    assert sim.growths["n_local"] == 1 and sim.n_local == 2 * n0
+    assert sim._host_step == STEPS
+    assert_dist_state_equal(sim, ref_st, n0, "recv_drop replay")
+    assert [h["total_energy"] for h in sim.history] == \
+           [h["total_energy"] for h in ref.history]
+    print("DIST_CHAOS recv OK")
+
+
+def check_crash():
+    ref, ref_st, n0 = run_reference()
+    with tempfile.TemporaryDirectory() as tmp:
+        sim = build(health={"enable": True}, fault={"kind": "crash", "step": 13})
+        sim.run(autosave_every=WINDOW, autosave_path=os.path.join(tmp, "auto"))
+        assert sim.restarts == 1, sim.restarts
+        assert sim._host_step == STEPS
+        assert_dist_state_equal(sim, ref_st, n0, "crash + autosave resume")
+        assert [h["total_energy"] for h in sim.history] == \
+               [h["total_energy"] for h in ref.history]
+    print("DIST_CHAOS crash OK")
+
+
+CHECKS = {
+    "sentinel": check_sentinel,
+    "nan": check_nan,
+    "recv": check_recv,
+    "crash": check_crash,
+}
+
+if __name__ == "__main__":
+    CHECKS[sys.argv[1]]()

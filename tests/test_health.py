@@ -1,0 +1,307 @@
+"""Window-level fault tolerance (docs/robustness.md): the in-graph health
+sentinel, the rollback-and-retry supervisor, the declarative chaos harness,
+and checkpoint integrity.
+
+Single-device chaos paths run inline (fast tier-1); the distributed chaos
+paths live in dist_chaos_check.py behind slow-marked subprocess wrappers
+(tests/test_pic_distributed.py)."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    FaultSpec,
+    HealthConfig,
+    SimSpec,
+    make_simulation,
+    restore_simulation,
+    save_simulation,
+    scenario,
+)
+from repro.api.facade import SimCheckpointer
+from repro.checkpoint import clean_stale_tmp
+from repro.core.health import (
+    HALT_INVARIANT,
+    HALT_NONE,
+    HALT_NONFINITE,
+    SimulationHealthError,
+    classify_health,
+)
+
+STEPS, WINDOW = 12, 6
+
+
+def _build(**overrides):
+    spec = scenario("uniform", grid=(8, 8, 8), steps=STEPS, window=WINDOW,
+                    diagnostics_every=3, **overrides)
+    return make_simulation(spec)
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Sentinel-off run: the bit-identity baseline for every chaos path."""
+    sim = _build()
+    sim.run()
+    return sim
+
+
+def _assert_state_equal(sim, ref, what):
+    st, rt = jax.device_get(sim.state), jax.device_get(ref.state)
+    assert int(st.step) == int(rt.step), what
+    for name in ("ex", "ey", "ez", "bx", "by", "bz"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st.fields, name)), np.asarray(getattr(rt.fields, name)),
+            err_msg=f"{what}: field {name}",
+        )
+    for name in ("pos", "u", "w", "alive"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st.particles, name)), np.asarray(getattr(rt.particles, name)),
+            err_msg=f"{what}: particles.{name}",
+        )
+    assert [h["total_energy"] for h in sim.history] == \
+           [h["total_energy"] for h in ref.history], what
+
+
+# ---------------------------------------------------------------------------
+# sentinel classification units
+# ---------------------------------------------------------------------------
+
+
+def _classify(cfg=HealthConfig(enable=True), **kw):
+    args = dict(
+        fields_nonfinite=0, momenta_nonfinite=0,
+        charge=1.0, charge_ref=1.0, energy=1.0, energy_ref=1.0,
+    )
+    args.update(kw)
+    args = {k: (jax.numpy.asarray(v, jax.numpy.float32) if k not in
+                ("fields_nonfinite", "momenta_nonfinite") else
+                jax.numpy.asarray(v, jax.numpy.int32)) for k, v in args.items()}
+    code, inv, meas, ref = classify_health(cfg, **args)
+    return int(code), int(inv), float(meas), float(ref)
+
+
+def test_classify_health_clean():
+    code, inv, _, _ = _classify()
+    assert (code, inv) == (HALT_NONE, 0)
+
+
+def test_classify_health_nonfinite_priority():
+    # fields outrank momenta outrank the invariant checks
+    code, inv, meas, _ = _classify(fields_nonfinite=3, momenta_nonfinite=2, charge=2.0)
+    assert (code, inv) == (HALT_NONFINITE, 1) and meas == 3.0
+    code, inv, _, _ = _classify(momenta_nonfinite=2, charge=2.0)
+    assert (code, inv) == (HALT_NONFINITE, 2)
+
+
+def test_classify_health_invariants():
+    code, inv, meas, ref = _classify(charge=1.001)
+    assert (code, inv) == (HALT_INVARIANT, 3)
+    assert meas == pytest.approx(1.001) and ref == 1.0
+    code, inv, _, _ = _classify(energy=2.0)  # 100% drift > 25% tolerance
+    assert (code, inv) == (HALT_INVARIANT, 4)
+    # NaN in a monitored scalar is a violation, not a silent pass
+    code, inv, _, _ = _classify(charge=float("nan"))
+    assert (code, inv) == (HALT_INVARIANT, 3)
+    # within tolerance: energy_rtol=0.25 default
+    code, _, _, _ = _classify(energy=1.2)
+    assert code == HALT_NONE
+
+
+def test_classify_health_checks_can_be_disabled():
+    cfg = HealthConfig(enable=True, check_charge=False, check_energy=False)
+    code, _, _, _ = _classify(cfg, charge=5.0, energy=9.0)
+    assert code == HALT_NONE
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_health_fault_spec_roundtrip():
+    spec = scenario(
+        "uniform", steps=4,
+        health={"enable": True, "energy_rtol": 0.5, "max_retries": 2},
+        fault={"kind": "nan_field", "step": 3, "component": "by", "count": 2},
+    )
+    assert spec.health.enable and spec.health.energy_rtol == 0.5
+    assert spec.fault.kind == "nan_field" and spec.fault.component == "by"
+    back = SimSpec.from_json(spec.to_json())
+    assert back.health == spec.health and back.fault == spec.fault
+
+    with pytest.raises(ValueError, match="unknown keys"):
+        HealthConfig.from_dict({"enable": True, "typo_key": 1})
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor_strike", step=0)
+    with pytest.raises(ValueError, match="recv_drop"):
+        scenario("uniform", fault={"kind": "recv_drop", "step": 1})  # needs a mesh
+
+
+def test_autosave_requires_windowed_driver():
+    sim = _build()
+    with pytest.raises(ValueError, match="windowed driver"):
+        sim.run(4, window=None, autosave_every=2)
+
+
+# ---------------------------------------------------------------------------
+# chaos recovery paths (single-device)
+# ---------------------------------------------------------------------------
+
+
+def test_sentinel_no_fault_bit_identical(reference):
+    """The sentinel is pure reads: enabling it must not change one bit."""
+    sim = _build(health={"enable": True})
+    sim.run()
+    assert sim.halts == {} and sim.retries == 0 and sim.discarded_steps == 0
+    _assert_state_equal(sim, reference, "sentinel-on vs off")
+
+
+def test_nan_fault_rollback_recovers(reference):
+    """NaN injected mid-window: HALT_NONFINITE, window rolled back, retried
+    without the fault — the run completes bit-identical to unfaulted."""
+    sim = _build(health={"enable": True},
+                 fault={"kind": "nan_field", "step": 7, "component": "ez"})
+    sim.run()
+    assert sim.halts == {"nonfinite": 1}
+    assert sim.retries == 1 and sim.fault_injector.fired == 1
+    _assert_state_equal(sim, reference, "nan_field recovery")
+
+
+def test_charge_fault_hits_invariant(reference):
+    """A silent-corruption fault (weights doubled for one step) is caught by
+    the charge-conservation invariant, not the NaN scan."""
+    sim = _build(health={"enable": True}, fault={"kind": "charge_scale", "step": 7})
+    sim.run()
+    assert sim.halts == {"invariant": 1} and sim.retries == 1
+    _assert_state_equal(sim, reference, "charge_scale recovery")
+
+
+def test_persistent_fault_exhausts_ladder():
+    """count=0 = the fault re-fires on every retry: the remediation ladder
+    (halve window -> forced sort -> drop pallas) runs out and the supervisor
+    aborts with a diagnostic bundle naming the halt."""
+    sim = _build(health={"enable": True},
+                 fault={"kind": "nan_field", "step": 4, "component": "ex", "count": 0})
+    with pytest.raises(SimulationHealthError) as exc:
+        sim.run()
+    err = exc.value
+    assert err.halt == "nonfinite"
+    assert err.invariant == "fields_nonfinite"
+    assert err.step == 5  # fault at counter 4 corrupts the input of step 5
+    assert err.retries >= 3
+    assert "nonfinite" in str(err) and "step 5" in str(err)
+
+
+def test_crash_restores_latest_autosave(reference, tmp_path):
+    """Simulated hard crash mid-run: the supervisor restores the newest
+    autosave checkpoint and resumes bit-for-bit."""
+    sim = _build(health={"enable": True}, fault={"kind": "crash", "step": 8})
+    sim.run(autosave_every=WINDOW, autosave_path=str(tmp_path / "auto"))
+    assert sim.restarts == 1
+    _assert_state_equal(sim, reference, "crash + autosave resume")
+    # the exit force-save is loadable and carries the counters
+    ck = SimCheckpointer(sim, str(tmp_path / "auto"), every=WINDOW)
+    sim2 = _build(health={"enable": True})
+    restore_simulation(sim2, ck.latest_path())
+    # the exit save postdates the crash, so the restart is in the record
+    assert sim2._host_step == STEPS and sim2.restarts == 1
+
+
+def test_crash_without_autosave_raises():
+    sim = _build(health={"enable": True}, fault={"kind": "crash", "step": 2})
+    with pytest.raises(RuntimeError, match="injected crash"):
+        sim.run()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity (satellite: loud failure on corruption)
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_checkpoint_rejected(reference, tmp_path):
+    path = str(tmp_path / "ck")
+    save_simulation(reference, path)
+    with open(os.path.join(path, "arrays.npz"), "r+b") as f:
+        f.seek(256)
+        f.write(b"\xde\xad\xbe\xef" * 16)
+    sim = _build()
+    with pytest.raises(ValueError, match="corrupt|checksum"):
+        restore_simulation(sim, path)
+
+
+def test_truncated_checkpoint_rejected(reference, tmp_path):
+    path = str(tmp_path / "ck")
+    save_simulation(reference, path)
+    with open(os.path.join(path, "arrays.npz"), "r+b") as f:
+        f.truncate(128)
+    sim = _build()
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        restore_simulation(sim, path)
+
+
+def test_checkpoint_roundtrip_with_checksums(reference, tmp_path):
+    """Checksums verify and restore succeeds on an intact checkpoint."""
+    path = str(tmp_path / "ck")
+    save_simulation(reference, path)
+    import json
+    with open(os.path.join(path, "checkpoint.json")) as f:
+        meta = json.load(f)
+    assert len(meta["checksums"]) == len(meta["names"]) > 0
+    sim = _build()
+    restore_simulation(sim, path)
+    _assert_state_equal(sim, reference, "checksum roundtrip")
+
+
+def test_stale_tmp_cleanup(tmp_path):
+    dead = tmp_path / "step_000000005.tmp-3999999"   # no such pid
+    dead.mkdir()
+    (dead / "junk").write_text("x")
+    alive = tmp_path / f"step_000000006.tmp-{os.getpid()}"  # live writer
+    alive.mkdir()
+    keep = tmp_path / "step_000000004"
+    keep.mkdir()
+    removed = clean_stale_tmp(str(tmp_path))
+    assert [os.path.basename(r) for r in removed] == [dead.name]
+    assert not dead.exists() and alive.exists() and keep.exists()
+
+
+def test_simcheckpointer_cadence_and_gc(reference, tmp_path):
+    sim = _build()
+    ck = SimCheckpointer(sim, str(tmp_path), every=5, keep=2)
+    assert ck.maybe_save(0, force=True)
+    assert not ck.maybe_save(3)          # 3 < every
+    assert ck.maybe_save(6)              # >= every since last
+    assert ck.maybe_save(11) and ck.maybe_save(16)
+    kept = sorted(p for p in os.listdir(tmp_path) if not p.endswith(".json"))
+    assert kept == ["step_000000011", "step_000000016"]  # keep=2 GC
+    assert ck.latest_path().endswith("step_000000016")
+
+
+# ---------------------------------------------------------------------------
+# satellite: halt-driven capacity growth is sized, not blindly doubled
+# ---------------------------------------------------------------------------
+
+
+def test_grow_capacity_sizes_from_occupancy():
+    """When the densest cell needs more than one doubling, the halt handler
+    grows ONCE to the measured occupancy instead of re-halting per doubling."""
+    import dataclasses
+
+    from repro.core import choose_capacity
+
+    sim = _build()
+    sim.run(4)
+    needed = sim._needed_capacity()
+    # squeeze the config so that a single doubling could not possibly fit
+    squeezed = max(1, needed // 4)
+    sim.config = dataclasses.replace(sim.config, capacity=squeezed)
+    growths_before = sim.growths["capacity"]
+
+    sim._grow_capacity()
+
+    assert sim.growths["capacity"] == growths_before + 1  # ONE growth event
+    assert sim.config.capacity >= choose_capacity(needed)  # fits immediately
+    sim.run(2)  # and the run continues

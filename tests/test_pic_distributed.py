@@ -90,6 +90,17 @@ def test_dist_n_moved_counts_migrated_arrivals():
     assert "MOVED OK" in out
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", ["sentinel", "nan", "recv", "crash"])
+def test_dist_chaos_recovery(scenario):
+    """Chaos harness on a 4x2 mesh (docs/robustness.md): the sentinel adds
+    zero bits of drift, and every deterministic fault (NaN rollback,
+    recv-drop replay via the mid-step snapshot, simulated node loss with
+    autosave restore) recovers bit-identical to the unfaulted run."""
+    out = _run_check("dist_chaos_check.py", scenario)
+    assert f"DIST_CHAOS {scenario} OK" in out
+
+
 # ---------------------------------------------------------------------------
 # Host-side validation (no devices needed)
 # ---------------------------------------------------------------------------
