@@ -1,9 +1,10 @@
 """Deposition kernel regression sweep -> BENCH_deposition.json.
 
 Times every deposition implementation (scatter / rhocell / per-component
-matrix / fused matrix, plus the Pallas megakernel route) at orders 1-3 on a
-table1_cic-style uniform-plasma workload, and emits machine-readable JSON so
-future PRs have a perf trajectory to compare against:
+matrix / fused matrix, plus the Pallas megakernel route, its reduced-epilogue
+variant, and the dispatcher's autotuned ``backend="auto"`` pick) at orders
+1-3 on a table1_cic-style uniform-plasma workload, and emits machine-readable
+JSON so future PRs have a perf trajectory to compare against:
 
     PYTHONPATH=src python -m benchmarks.run --only deposition_sweep \
         --deposition-json BENCH_deposition.json
@@ -46,21 +47,32 @@ def _per_component(kind, wl, order, bin_matmul=None):
     return out
 
 
-def _fused(wl, order, fused_matmul=None):
+def _fused(wl, order, fused_matmul=None, backend=None):
     return deposit_current_matrix_fused(
         wl["pos"], wl["v"], wl["qw"], wl["layout"],
         grid_shape=wl["grid"].shape, order=order, fused_matmul=fused_matmul,
+        backend=backend,
     )
+
+
+# dispatcher backend name -> the sweep row that measures that route
+_BACKEND_ROWS = {
+    "xla": "matrix_fused",
+    "pallas": "matrix_fused_pallas",
+    "pallas_reduced": "matrix_fused_reduced",
+}
 
 
 def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int = 9,
             label: str = "deposition_sweep"):
     """Run the sweep, emit CSV rows, and return the JSON-able payload."""
+    from repro.kernels import dispatch
     from repro.kernels.deposition.ops import bin_outer_product, fused_bin_deposit
 
     wl = make_workload(grid_shape=grid, ppc=ppc, sorted_attrs=True)
     results: dict[str, dict[str, float]] = {}
     speedups: dict[str, dict[str, float]] = {}
+    auto_backend: dict[str, str] = {}
     for order in ORDERS:
         fns = {
             "scatter": partial(_per_component, "scatter", wl, order),
@@ -73,11 +85,27 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
             # (interpret mode off-TPU), per-component vs fused megakernel
             fns["matrix_pallas"] = partial(_per_component, "matrix", wl, order, bin_matmul=bin_outer_product)
             fns["matrix_fused_pallas"] = partial(_fused, wl, order, fused_matmul=fused_bin_deposit)
+            # fused deposition with the rhocell z-reduction folded into the
+            # kernel epilogue (the packed tensor never round-trips HBM)
+            fns["matrix_fused_reduced"] = partial(_fused, wl, order, backend="pallas_reduced")
         row = time_grid(fns, rounds=rounds)
+        if with_pallas:
+            # Seed the dispatcher's autotune cache from these interleaved
+            # medians (higher quality than its quick first-call probe), then
+            # publish the winner as the backend="auto" row: auto resolves to
+            # exactly this cache entry, so its cost IS the winner's row.
+            winner = dispatch.record(
+                "deposit_fused", order=order, grid_shape=grid,
+                capacity=wl["cap"],
+                timings_us={n: row[r] for n, r in _BACKEND_ROWS.items()},
+            )
+            auto_backend[f"order{order}"] = winner
+            row["matrix_fused_auto"] = row[_BACKEND_ROWS[winner]]
         results[f"order{order}"] = row
         sp = {"fused_vs_matrix": row["matrix"] / row["matrix_fused"]}
         if with_pallas:
             sp["fused_vs_matrix_pallas"] = row["matrix_pallas"] / row["matrix_fused_pallas"]
+            sp["auto_vs_matrix_fused"] = row["matrix_fused"] / row["matrix_fused_auto"]
         speedups[f"order{order}"] = sp
         for name, us in row.items():
             emit(f"{label}/order{order}/{name}", us, f"fused_vs_matrix={sp['fused_vs_matrix']:.2f}x")
@@ -90,8 +118,11 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
             "backend": jax.default_backend(),
             "note": "us_per_call, per-kernel median over 9 interleaved rounds "
                     "(time_grid: drift-robust on shared CPUs); pallas rows run the "
-                    "interpreter off-TPU and are NOT comparable to compiled rows there",
+                    "interpreter off-TPU and are NOT comparable to compiled rows there; "
+                    "matrix_fused_auto is the row of the backend the dispatcher's "
+                    "autotune cache resolves to (seeded from this sweep's medians)",
         },
+        "auto_backend": auto_backend,
         "results": results,
         "speedup_fused_vs_matrix": speedups,
     }

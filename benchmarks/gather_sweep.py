@@ -69,6 +69,7 @@ def _six_call(kind, wl, padded, order, bin_gather_op=None):
 def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int = 9,
             label: str = "gather_sweep"):
     """Run the sweep, emit CSV rows, and return the JSON-able payload."""
+    from repro.kernels import dispatch
     from repro.kernels.gather.ops import bin_gather, fused_bin_gather
 
     wl = make_workload(grid_shape=grid, ppc=ppc, sorted_attrs=True)
@@ -76,8 +77,10 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
         jax.random.normal(k, grid, jnp.float32)
         for k in jax.random.split(jax.random.PRNGKey(42), 6)
     ]
+    backend_rows = {"xla": "matrix_fused", "pallas": "matrix_fused_pallas"}
     results: dict[str, dict[str, float]] = {}
     speedups: dict[str, dict[str, float]] = {}
+    auto_backend: dict[str, str] = {}
     for order in ORDERS:
         padded = tuple(unfold_guards(f, max_guard(order)) for f in fields)
         fused = partial(
@@ -95,10 +98,24 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
             fns["matrix_pallas"] = partial(_six_call, "matrix", wl, padded, order, bin_gather_op=bin_gather)
             fns["matrix_fused_pallas"] = partial(fused, fused_gather=fused_bin_gather)
         row = time_grid(fns, rounds=rounds)
+        if with_pallas:
+            # Seed the dispatcher's autotune cache from these interleaved
+            # medians; the backend="auto" row is the winner's row by
+            # construction (auto resolves to exactly this cache entry).
+            # Both fused rows pay identical slab staging, so their delta is
+            # the contraction delta the dispatcher actually chooses on.
+            winner = dispatch.record(
+                "gather_fused", order=order, grid_shape=grid,
+                capacity=wl["cap"],
+                timings_us={n: row[r] for n, r in backend_rows.items()},
+            )
+            auto_backend[f"order{order}"] = winner
+            row["matrix_fused_auto"] = row[backend_rows[winner]]
         results[f"order{order}"] = row
         sp = {"fused_vs_matrix": row["matrix"] / row["matrix_fused"]}
         if with_pallas:
             sp["fused_vs_matrix_pallas"] = row["matrix_pallas"] / row["matrix_fused_pallas"]
+            sp["auto_vs_matrix_fused"] = row["matrix_fused"] / row["matrix_fused_auto"]
         speedups[f"order{order}"] = sp
         for name, us in row.items():
             emit(f"{label}/order{order}/{name}", us, f"fused_vs_matrix={sp['fused_vs_matrix']:.2f}x")
@@ -114,8 +131,11 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
                     "shared CPUs); the fused rows include their slab staging, which "
                     "the simulation step amortizes across gather+deposition; pallas "
                     "rows run the interpreter off-TPU and are NOT comparable to "
-                    "compiled rows there",
+                    "compiled rows there; matrix_fused_auto is the row of the "
+                    "backend the dispatcher's autotune cache resolves to (seeded "
+                    "from this sweep's medians)",
         },
+        "auto_backend": auto_backend,
         "results": results,
         "speedup_fused_vs_matrix": speedups,
     }

@@ -31,11 +31,46 @@ def run_smoke() -> None:
     """Tiny-shape pass through the kernel-sweep drivers (every timed thunk
     compiles and runs, CSV still emitted, no JSON written) so the benchmark
     harness can't silently rot between BENCH_* regenerations. Fast enough
-    for a CI lane: 4^3 grid, 1 ppc, 2 interleaved rounds."""
+    for a CI lane: 4^3 grid, 1 ppc, 2 interleaved rounds. Finishes with a
+    dispatcher lane exercising the autotune cache end to end."""
     from benchmarks import deposition_sweep, gather_sweep
 
     deposition_sweep.collect(grid=(4, 4, 4), ppc=1, rounds=2, label="smoke/deposition_sweep")
     gather_sweep.collect(grid=(4, 4, 4), ppc=1, rounds=2, label="smoke/gather_sweep")
+    smoke_dispatch()
+
+
+def smoke_dispatch() -> None:
+    """Dispatcher smoke: resolve ``backend="auto"`` on a tiny shape, assert
+    the autotune cache file lands on disk, then drop the in-process memo and
+    re-resolve — counter-checked to come from the cache with no second
+    benchmark. Catches cache-path regressions and key-schema drift that the
+    unit tests (which monkeypatch the path) would survive."""
+    import json
+    import os
+
+    from benchmarks.common import emit
+    from repro.kernels import dispatch
+
+    shape = dict(order=1, grid_shape=(4, 4, 4), capacity=4)
+    dispatch.clear_memo()
+    dispatch.reset_counters()
+    first = dispatch.resolve("deposit_fused", "auto", **shape)
+    path = dispatch.cache_path()
+    assert os.path.exists(path), f"autotune cache not written at {path}"
+    with open(path) as f:
+        payload = json.load(f)
+    entries = payload.get("entries", {})
+    assert any(k.startswith("deposit_fused|") for k in entries), sorted(entries)
+    benchmarks_before = dispatch.counters["benchmark"]
+    cache_hits_before = dispatch.counters["cache_hit"]
+
+    dispatch.clear_memo()  # force the second resolve past the in-process memo
+    second = dispatch.resolve("deposit_fused", "auto", **shape)
+    assert second == first, f"cache replay changed the winner: {first} -> {second}"
+    assert dispatch.counters["benchmark"] == benchmarks_before, "re-resolve re-benchmarked"
+    assert dispatch.counters["cache_hit"] == cache_hits_before + 1, "re-resolve missed the cache"
+    emit("smoke/dispatch/deposit_fused_auto", 0.0, f"backend={first} cache_replay=ok")
 
 
 def main() -> None:

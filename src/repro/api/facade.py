@@ -149,7 +149,7 @@ def pic_config(spec: SimSpec):
         mass=spec.mass,
         ckc_beta=spec.ckc_beta,
         capacity=spec.sort.resolved_capacity(spec.plasma.ppc),
-        use_pallas=d.use_pallas,
+        backend=d.backend,
     )
 
 
@@ -172,7 +172,7 @@ def dist_config(spec: SimSpec):
         order=spec.deposition.order,
         deposition=spec.deposition.mode,
         gather=spec.deposition.resolved_gather,
-        use_pallas=spec.deposition.use_pallas,
+        backend=spec.deposition.backend,
         charge=spec.charge,
         mass=spec.mass,
         capacity=spec.sort.resolved_capacity(spec.plasma.ppc),

@@ -103,6 +103,7 @@ _OVERRIDE_PATHS = {
     "order": ("deposition", "order"),
     "deposition": ("deposition", "mode"),
     "use_pallas": ("deposition", "use_pallas"),
+    "backend": ("deposition", "backend"),
     "gather": ("deposition", "gather"),
     "sort": ("sort", "mode"),
     "capacity": ("sort", "capacity"),

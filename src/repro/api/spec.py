@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import warnings
 from typing import Any
 
 from repro.core.health import HealthConfig
@@ -190,17 +191,36 @@ class DepositionSpec:
     """Deposition order/mode (paper ablation axes) and the gather pairing.
     ``gather=""`` derives the conventional pairing: fused matrix gather for
     the bin-based deposition modes, scatter gather otherwise.
-    ``use_pallas`` routes BOTH the deposition and the gather bin
-    contractions through the Pallas kernels."""
+
+    ``backend`` names the kernel-dispatch backend for BOTH the deposition
+    and the gather bin contractions (kernels.dispatch): "auto" (default —
+    benchmark-to-select with a persisted autotune cache), "xla", "pallas",
+    or "pallas_reduced" (deposition's epilogue-fused megakernel; gather
+    ops fall back to "pallas"). ``use_pallas`` is the deprecated boolean
+    forerunner: setting it maps to backend="pallas"/"xla" with a
+    DeprecationWarning and is normalized away (the field stays None after
+    construction, so round-trip serialization is canonical)."""
 
     order: int = 1
     mode: str = "matrix"  # matrix (fused) | matrix_unfused | scatter | rhocell
-    use_pallas: bool = False
+    backend: str = "auto"  # auto | xla | pallas | pallas_reduced
+    use_pallas: bool | None = None  # deprecated: backend="pallas"/"xla"
     gather: str = ""      # "" (auto) | matrix (fused) | matrix_unfused | scatter
 
     def __post_init__(self):
+        if self.use_pallas is not None:
+            warnings.warn(
+                "DepositionSpec.use_pallas is deprecated; use "
+                "backend='pallas' / backend='xla' instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            object.__setattr__(self, "backend", "pallas" if self.use_pallas else "xla")
+            object.__setattr__(self, "use_pallas", None)
         if self.mode not in ("matrix", "matrix_unfused", "scatter", "rhocell"):
             raise ValueError(f"unknown deposition mode {self.mode!r}")
+        if self.backend not in ("auto", "xla", "pallas", "pallas_reduced"):
+            raise ValueError(f"unknown kernel backend {self.backend!r}")
         if self.gather not in ("", "matrix", "matrix_unfused", "scatter"):
             raise ValueError(f"unknown gather mode {self.gather!r}")
         if self.order not in (1, 2, 3):

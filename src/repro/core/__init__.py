@@ -25,8 +25,15 @@ from repro.core.deposition import (  # noqa: F401
     deposit_rhocell,
     deposit_scatter,
     fused_bin_slab,
+    fused_deposit_grids,
 )
-from repro.core.gather import EB_STAGGERS, gather_fields_fused, gather_matrix, gather_scatter  # noqa: F401
+from repro.core.gather import (  # noqa: F401
+    EB_STAGGERS,
+    fused_gather_bins,
+    gather_fields_fused,
+    gather_matrix,
+    gather_scatter,
+)
 from repro.core.gpma import GPMAStats, gpma_update  # noqa: F401
 from repro.core.health import (  # noqa: F401
     HALT_BIN_OVERFLOW,
@@ -52,7 +59,13 @@ from repro.core.resort_policy import (  # noqa: F401
     policy_reset,
     policy_update,
 )
-from repro.core.rhocell import fold_guards, reduce_rhocell, reduce_rhocell_separable, unfold_guards  # noqa: F401
+from repro.core.rhocell import (  # noqa: F401
+    fold_guards,
+    reduce_rhocell,
+    reduce_rhocell_separable,
+    reduce_rhocell_tail,
+    unfold_guards,
+)
 from repro.core.shape_functions import (  # noqa: F401
     bspline,
     max_guard,

@@ -32,7 +32,12 @@ import jax.numpy as jnp
 
 from repro.core import shape_functions as sf
 from repro.core.binning import BinnedLayout, BinSlab, bin_slab_values, build_bin_slab, cell_coords
-from repro.core.rhocell import fold_guards, reduce_rhocell, reduce_rhocell_separable
+from repro.core.rhocell import (
+    fold_guards,
+    reduce_rhocell,
+    reduce_rhocell_separable,
+    reduce_rhocell_tail,
+)
 
 Stagger = tuple[bool, bool, bool]
 
@@ -146,7 +151,9 @@ def _default_bin_matmul(a, b):
 
 @partial(
     jax.jit,
-    static_argnames=("grid_shape", "order", "stagger", "guard", "bin_matmul", "separable_reduce"),
+    static_argnames=(
+        "grid_shape", "order", "stagger", "guard", "bin_matmul", "separable_reduce", "backend",
+    ),
 )
 def deposit_matrix(
     pos,
@@ -159,17 +166,33 @@ def deposit_matrix(
     guard: int | None = None,
     bin_matmul: Callable | None = None,
     separable_reduce: bool = True,
+    backend: str | None = None,
 ):
     """Matrix-PIC deposition for one current component.
 
     `bin_matmul` lets the Pallas kernel (kernels/deposition) replace the
-    einsum; default is the jnp contraction (identical math).
+    einsum; default is the jnp contraction (identical math). ``backend``
+    selects the contraction through the kernel dispatcher instead
+    ("auto"/"xla"/"pallas" — see kernels.dispatch); an explicit
+    ``bin_matmul`` wins over ``backend``.
     """
     g = sf.max_guard(order) if guard is None else guard
     (tx, ty, tz), bases = _taps_and_bases(order, stagger)
 
     a, b = binned_shape_factors(pos, values, layout, grid_shape=grid_shape, order=order, stagger=stagger)
-    mm = bin_matmul or _default_bin_matmul
+    mm = bin_matmul
+    if mm is None and backend is not None:
+        from repro.kernels import dispatch
+
+        name = dispatch.resolve(
+            "deposit_unfused", backend, order=order, grid_shape=grid_shape,
+            capacity=a.shape[1], dtype=str(values.dtype),
+        )
+        if name == "pallas":
+            from repro.kernels.deposition.ops import bin_outer_product
+
+            mm = bin_outer_product
+    mm = mm or _default_bin_matmul
     rho = mm(a, b).reshape(-1, tx, ty, tz)
 
     reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
@@ -202,9 +225,110 @@ def fused_bin_slab(pos, vel, qw, layout: BinnedLayout, *, grid_shape):
     return slab.d, bin_slab_values(vel, qw, layout, slab)
 
 
+def _fused_grids_xla(d, val, *, grid_shape, order, guard, reduce):
+    """The pure-XLA fused route: six shared weight sets, each component
+    contracted on its TRUE support (no padded FLOPs)."""
+    n_cells, cap, _ = d.shape
+    w_u = [sf.shape_weights(d[..., k], order, False) for k in range(3)]  # unstaggered
+    w_s = [sf.shape_weights(d[..., k], order, True) for k in range(3)]   # staggered
+    out = []
+    for comp in range(3):
+        stagger = CURRENT_STAGGER[comp]
+        (tx, ty, tz), bases = _taps_and_bases(order, stagger)
+        wx = w_s[0] if stagger[0] else w_u[0]
+        wy = w_s[1] if stagger[1] else w_u[1]
+        wz = w_s[2] if stagger[2] else w_u[2]
+        a = wx * val[..., comp][..., None]
+        byz = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, -1)
+        rho = _default_bin_matmul(a, byz).reshape(-1, tx, ty, tz)
+        out.append(reduce(rho, grid_shape, bases, guard))
+    return out
+
+
+def _fused_grids_packed(packed, val_dtype, *, grid_shape, order, guard, reduce):
+    """Finish the Pallas megakernel's packed (C, 3, T, T*T) tiles: one
+    rhocell reduction per component on the unified window."""
+    t, base = sf.unified_support(order)
+    bases = (base, base, base)
+    return [
+        reduce(packed[:, comp].astype(val_dtype).reshape(-1, t, t, t), grid_shape, bases, guard)
+        for comp in range(3)
+    ]
+
+
+def _fused_grids_reduced(acc, val_dtype, *, grid_shape, order, guard):
+    """Finish the epilogue-fused megakernel's (C_xy, 3, nz+2g, T, T)
+    accumulators: the z pass already happened in-kernel, only the shared
+    y/x tail (reduce_rhocell_tail) remains — the exact op sequence
+    reduce_rhocell_separable would have run, which is the bit-parity
+    contract with the two-step route."""
+    nx, ny, nz = grid_shape
+    g = guard
+    t, base = sf.unified_support(order)
+    return [
+        reduce_rhocell_tail(
+            acc[:, comp].astype(val_dtype).reshape(nx, ny, nz + 2 * g, t, t),
+            grid_shape, (base, base), g,
+        )
+        for comp in range(3)
+    ]
+
+
+def _fused_deposit_grids_impl(d, val, *, grid_shape, order, guard, backend, separable_reduce):
+    """Slab -> [Jx, Jy, Jz] guard-padded via a dispatcher backend name.
+
+    ``backend`` may be "auto" or a forced name; resolution (benchmark +
+    autotune cache for "auto", availability fallback for forced names)
+    happens here at trace time through kernels.dispatch.
+    """
+    from repro.kernels import dispatch
+
+    reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
+    name = dispatch.resolve(
+        "deposit_fused", backend, order=order, grid_shape=grid_shape,
+        capacity=d.shape[1], dtype=str(val.dtype),
+    )
+    if name == "pallas_reduced":
+        from repro.kernels.deposition.ops import fused_bin_deposit_reduced
+
+        acc = fused_bin_deposit_reduced(d, val, order=order, grid_shape=grid_shape, guard=guard)
+        return _fused_grids_reduced(acc, val.dtype, grid_shape=grid_shape, order=order, guard=guard)
+    if name == "pallas":
+        from repro.kernels.deposition.ops import fused_bin_deposit
+
+        packed = fused_bin_deposit(d, val, order=order)
+        return _fused_grids_packed(
+            packed, val.dtype, grid_shape=grid_shape, order=order, guard=guard, reduce=reduce
+        )
+    return _fused_grids_xla(d, val, grid_shape=grid_shape, order=order, guard=guard, reduce=reduce)
+
+
+@partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "backend", "separable_reduce"))
+def fused_deposit_grids(
+    d,
+    val,
+    *,
+    grid_shape,
+    order: int,
+    guard: int | None = None,
+    backend: str = "xla",
+    separable_reduce: bool = True,
+):
+    """Post-slab fused deposition: (C, cap, 3) offsets + values ->
+    [Jx, Jy, Jz] guard-padded, via the named dispatcher backend. This is
+    the exact portion of the hot path the backends disagree on, so it is
+    also what the dispatcher's "auto" benchmark times (kernels.dispatch
+    builds its deposit_fused thunks on this entry point)."""
+    g = sf.max_guard(order) if guard is None else guard
+    return _fused_deposit_grids_impl(
+        d, val, grid_shape=grid_shape, order=order, guard=g,
+        backend=backend, separable_reduce=separable_reduce,
+    )
+
+
 @partial(
     jax.jit,
-    static_argnames=("grid_shape", "order", "guard", "fused_matmul", "separable_reduce"),
+    static_argnames=("grid_shape", "order", "guard", "fused_matmul", "separable_reduce", "backend"),
 )
 def deposit_current_matrix_fused(
     pos,
@@ -218,6 +342,7 @@ def deposit_current_matrix_fused(
     fused_matmul: Callable | None = None,
     separable_reduce: bool = True,
     slab: BinSlab | None = None,
+    backend: str | None = None,
 ):
     """All three Yee-staggered current components in one fused pass — the
     default `Simulation` deposition hot path (paper Alg. 2).
@@ -242,39 +367,31 @@ def deposit_current_matrix_fused(
     NOT repeated here — only the velocity-dependent q·w·v values are
     gathered against the same slot table (`bin_slab_values`), so the one
     slab the step built serves the field gather AND this deposition.
+
+    ``backend`` routes the post-slab contraction through the kernel
+    dispatcher ("auto"/"xla"/"pallas"/"pallas_reduced" — kernels.dispatch;
+    "pallas_reduced" folds the rhocell z-reduction into the kernel
+    epilogue and is inherently separable). An explicit ``fused_matmul``
+    callable wins over ``backend`` (legacy/ablation hook).
     """
     g = sf.max_guard(order) if guard is None else guard
     if slab is None:
         slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
     d = slab.d
     val = bin_slab_values(vel, qw, layout, slab)
-    n_cells, cap, _ = d.shape
     reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
 
     if fused_matmul is not None:
         packed = fused_matmul(d, val, order=order)
-        t, base = sf.unified_support(order)
-        bases = (base, base, base)
-        return [
-            reduce(packed[:, comp].astype(val.dtype).reshape(-1, t, t, t), grid_shape, bases, g)
-            for comp in range(3)
-        ]
-
-    # six weight sets, computed once and shared across components
-    w_u = [sf.shape_weights(d[..., k], order, False) for k in range(3)]  # unstaggered
-    w_s = [sf.shape_weights(d[..., k], order, True) for k in range(3)]   # staggered
-    out = []
-    for comp in range(3):
-        stagger = CURRENT_STAGGER[comp]
-        (tx, ty, tz), bases = _taps_and_bases(order, stagger)
-        wx = w_s[0] if stagger[0] else w_u[0]
-        wy = w_s[1] if stagger[1] else w_u[1]
-        wz = w_s[2] if stagger[2] else w_u[2]
-        a = wx * val[..., comp][..., None]
-        byz = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, -1)
-        rho = _default_bin_matmul(a, byz).reshape(-1, tx, ty, tz)
-        out.append(reduce(rho, grid_shape, bases, g))
-    return out
+        return _fused_grids_packed(
+            packed, val.dtype, grid_shape=grid_shape, order=order, guard=g, reduce=reduce
+        )
+    if backend is not None:
+        return _fused_deposit_grids_impl(
+            d, val, grid_shape=grid_shape, order=order, guard=g,
+            backend=backend, separable_reduce=separable_reduce,
+        )
+    return _fused_grids_xla(d, val, grid_shape=grid_shape, order=order, guard=g, reduce=reduce)
 
 
 def deposit_current(pos, vel, qw, *, grid_shape, order: int, method: str = "matrix", layout: BinnedLayout | None = None, cell_ids=None, fold: bool = True, **kw):

@@ -91,19 +91,34 @@ def extract_neighborhoods(grid_padded, grid_shape, *, taps, bases, guard: int):
     return stacked.reshape(nx * ny * nz, tx, ty, tz)
 
 
-@partial(jax.jit, static_argnames=("grid_shape", "order", "stagger", "guard", "bin_gather_op"))
-def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None, bin_gather_op=None):
+@partial(jax.jit, static_argnames=("grid_shape", "order", "stagger", "guard", "bin_gather_op", "backend"))
+def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None, bin_gather_op=None, backend: str | None = None):
     """Binned matrix gather, one component. Returns (Np,) values (0 for
     unslotted particles).
 
     `bin_gather_op` lets the Pallas kernel (kernels/gather.bin_gather)
     replace the einsum + tap reduction — the ``gather="matrix_unfused"`` +
-    ``use_pallas`` route; default is the jnp contraction (identical math).
+    Pallas route; default is the jnp contraction (identical math).
+    ``backend`` selects it through the kernel dispatcher instead
+    ("auto"/"xla"/"pallas", op ``bin_gather``); an explicit
+    ``bin_gather_op`` wins over ``backend``.
     """
     g = sf.max_guard(order) if guard is None else guard
     taps, bases = _taps_and_bases(order, stagger)
     tx, ty, tz = taps
     n_cells, cap = layout.slots.shape
+
+    if bin_gather_op is None and backend is not None:
+        from repro.kernels import dispatch
+
+        name = dispatch.resolve(
+            "bin_gather", backend, order=order, grid_shape=grid_shape,
+            capacity=cap, dtype=str(pos.dtype),
+        )
+        if name == "pallas":
+            from repro.kernels.gather.ops import bin_gather
+
+            bin_gather_op = bin_gather
 
     neigh = extract_neighborhoods(grid_padded, grid_shape, taps=taps, bases=bases, guard=g)
     neigh = neigh.reshape(n_cells, tx, ty * tz)
@@ -132,7 +147,78 @@ def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: 
     return jnp.where(pslot >= 0, e_flat[jnp.maximum(pslot, 0)], jnp.zeros((), e_flat.dtype))
 
 
-@partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "fused_gather"))
+def _fused_gather_xla_bins(d, padded_fields, *, grid_shape, order, guard):
+    """Pure-XLA six-component gather: shared weights, per-component
+    TRUE-support neighborhoods, (C, cap, 6) per-bin values."""
+    n_cells, cap, _ = d.shape
+    w_u = [sf.shape_weights(d[..., k], order, False) for k in range(3)]
+    w_s = [sf.shape_weights(d[..., k], order, True) for k in range(3)]
+    byz = {}  # four distinct wy (x) wz products over the six components
+    comps = []
+    for comp, stagger in enumerate(EB_STAGGERS):
+        taps, bases = _taps_and_bases(order, stagger)
+        tx, ty, tz = taps
+        neigh = extract_neighborhoods(
+            padded_fields[comp], grid_shape, taps=taps, bases=bases, guard=guard
+        ).reshape(n_cells, tx, ty * tz)
+        key = (stagger[1], stagger[2])
+        if key not in byz:
+            wy = w_s[1] if stagger[1] else w_u[1]
+            wz = w_s[2] if stagger[2] else w_u[2]
+            byz[key] = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, ty * tz)
+        wx = w_s[0] if stagger[0] else w_u[0]
+        h = jnp.einsum("cpn,cmn->cpm", byz[key], neigh)
+        comps.append(jnp.sum(wx * h, axis=-1))
+    return jnp.stack(comps, axis=-1)  # (C, cap, 6)
+
+
+def _fused_gather_pallas_bins(d, padded_fields, *, grid_shape, order, guard, fused_gather):
+    """Pack the six neighborhoods on the unified window and run the
+    Pallas megakernel: (C, cap, 6) per-bin values."""
+    n_cells = d.shape[0]
+    t, base = sf.unified_support(order)
+    packed = jnp.stack(
+        [
+            extract_neighborhoods(
+                f, grid_shape, taps=(t, t, t), bases=(base, base, base), guard=guard
+            ).reshape(n_cells, t, t * t)
+            for f in padded_fields
+        ],
+        axis=1,
+    )  # (C, 6, T, T*T)
+    return fused_gather(d, packed, order=order).astype(d.dtype)
+
+
+def _fused_gather_bins_impl(d, padded_fields, *, grid_shape, order, guard, backend):
+    from repro.kernels import dispatch
+
+    name = dispatch.resolve(
+        "gather_fused", backend, order=order, grid_shape=grid_shape,
+        capacity=d.shape[1], dtype=str(d.dtype),
+    )
+    if name == "pallas":
+        from repro.kernels.gather.ops import fused_bin_gather
+
+        return _fused_gather_pallas_bins(
+            d, padded_fields, grid_shape=grid_shape, order=order, guard=guard,
+            fused_gather=fused_bin_gather,
+        )
+    return _fused_gather_xla_bins(d, padded_fields, grid_shape=grid_shape, order=order, guard=guard)
+
+
+@partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "backend"))
+def fused_gather_bins(d, padded_fields, *, grid_shape, order: int, guard: int | None = None, backend: str = "xla"):
+    """Post-slab fused gather: (C, cap, 3) offsets + six padded grids ->
+    (C, cap, 6) per-bin field values via the named dispatcher backend.
+    This is the portion of the hot path the gather backends disagree on —
+    kernels.dispatch builds its gather_fused benchmark thunks on it."""
+    g = sf.max_guard(order) if guard is None else guard
+    return _fused_gather_bins_impl(
+        d, padded_fields, grid_shape=grid_shape, order=order, guard=g, backend=backend
+    )
+
+
+@partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "fused_gather", "backend"))
 def gather_fields_fused(
     slab: BinSlab,
     padded_fields,
@@ -142,6 +228,7 @@ def gather_fields_fused(
     order: int,
     guard: int | None = None,
     fused_gather=None,
+    backend: str | None = None,
 ):
     """All six Yee-staggered field components in one fused pass — the
     default ``gather="matrix"`` hot path (the dual of the fused
@@ -168,7 +255,9 @@ def gather_fields_fused(
     None for the pure-XLA reference, which contracts each component on its
     TRUE support (no padded FLOPs — XLA einsums pay for every zero) while
     still sharing the slab, the weights, and the byz products. Identical
-    math either way.
+    math either way. ``backend`` selects the route through the kernel
+    dispatcher instead ("auto"/"xla"/"pallas", op ``gather_fused``); an
+    explicit ``fused_gather`` callable wins over ``backend``.
 
     Returns ``(e_p, b_p)``: (Np, 3) each, 0 for unslotted particles.
     """
@@ -177,38 +266,18 @@ def gather_fields_fused(
     n_cells, cap = slab.valid.shape
 
     if fused_gather is not None:
-        t, base = sf.unified_support(order)
-        packed = jnp.stack(
-            [
-                extract_neighborhoods(
-                    f, grid_shape, taps=(t, t, t), bases=(base, base, base), guard=g
-                ).reshape(n_cells, t, t * t)
-                for f in padded_fields
-            ],
-            axis=1,
-        )  # (C, 6, T, T*T)
-        e_bins = fused_gather(d, packed, order=order).astype(d.dtype)
+        e_bins = _fused_gather_pallas_bins(
+            d, padded_fields, grid_shape=grid_shape, order=order, guard=g,
+            fused_gather=fused_gather,
+        )
+    elif backend is not None:
+        e_bins = _fused_gather_bins_impl(
+            d, padded_fields, grid_shape=grid_shape, order=order, guard=g, backend=backend
+        )
     else:
-        # six weight sets on their true supports, shared across components
-        w_u = [sf.shape_weights(d[..., k], order, False) for k in range(3)]
-        w_s = [sf.shape_weights(d[..., k], order, True) for k in range(3)]
-        byz = {}  # four distinct wy (x) wz products over the six components
-        comps = []
-        for comp, stagger in enumerate(EB_STAGGERS):
-            taps, bases = _taps_and_bases(order, stagger)
-            tx, ty, tz = taps
-            neigh = extract_neighborhoods(
-                padded_fields[comp], grid_shape, taps=taps, bases=bases, guard=g
-            ).reshape(n_cells, tx, ty * tz)
-            key = (stagger[1], stagger[2])
-            if key not in byz:
-                wy = w_s[1] if stagger[1] else w_u[1]
-                wz = w_s[2] if stagger[2] else w_u[2]
-                byz[key] = (wy[..., :, None] * wz[..., None, :]).reshape(n_cells, cap, ty * tz)
-            wx = w_s[0] if stagger[0] else w_u[0]
-            h = jnp.einsum("cpn,cmn->cpm", byz[key], neigh)
-            comps.append(jnp.sum(wx * h, axis=-1))
-        e_bins = jnp.stack(comps, axis=-1)  # (C, cap, 6)
+        e_bins = _fused_gather_xla_bins(
+            d, padded_fields, grid_shape=grid_shape, order=order, guard=g
+        )
 
     # ONE scatter back to particle order for all six components (the
     # six-call path pays this slot-map gather per component); slots without

@@ -83,7 +83,7 @@ class HealthConfig:
     catastrophic blow-up, not physical numerical heating.
 
     ``max_retries`` bounds the remediation ladder (halve the window ->
-    force a global sort -> drop the Pallas route) before the supervisor
+    force a global sort -> demote the kernel backend) before the supervisor
     aborts; ``max_restarts`` bounds crash -> checkpoint-restore cycles.
     """
 

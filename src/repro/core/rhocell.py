@@ -47,19 +47,36 @@ def reduce_rhocell_separable(rho_cells, grid_shape, bases, guard: int):
     nx, ny, nz = grid_shape
     g = guard
     _, tx, ty, tz = rho_cells.shape
-    bx, by, bz = bases
+    bz = bases[2]
     rho = rho_cells.reshape(nx, ny, nz, tx, ty, tz)
 
     acc_z = jnp.zeros((nx, ny, nz + 2 * g, tx, ty), rho_cells.dtype)
     for c in range(tz):
         acc_z = acc_z.at[:, :, g + bz + c : g + bz + c + nz].add(rho[..., c])
 
-    acc_y = jnp.zeros((nx, ny + 2 * g, nz + 2 * g, tx), rho_cells.dtype)
+    return reduce_rhocell_tail(acc_z, grid_shape, bases[:2], g)
+
+
+def reduce_rhocell_tail(acc_z, grid_shape, bases_xy, guard: int):
+    """The y/x passes of the separable reduction:
+    ``acc_z (nx, ny, nz+2g, Tx, Ty) -> padded grid``.
+
+    Split out so the epilogue-fused deposition backend
+    (kernels/deposition.fused_bin_deposit_reduced performs the z pass
+    in-kernel, per column block) finishes through the *identical* op
+    sequence as reduce_rhocell_separable — the bit-parity contract the
+    dispatch tests pin."""
+    nx, ny, nz = grid_shape
+    g = guard
+    _, _, _, tx, ty = acc_z.shape
+    bx, by = bases_xy
+
+    acc_y = jnp.zeros((nx, ny + 2 * g, nz + 2 * g, tx), acc_z.dtype)
     for b in range(ty):
         # acc_z[..., b] selects the ty tap, leaving (nx, ny, nz+2g, tx)
         acc_y = acc_y.at[:, g + by + b : g + by + b + ny].add(acc_z[..., b])
 
-    out = jnp.zeros((nx + 2 * g, ny + 2 * g, nz + 2 * g), rho_cells.dtype)
+    out = jnp.zeros((nx + 2 * g, ny + 2 * g, nz + 2 * g), acc_z.dtype)
     for a in range(tx):
         out = out.at[g + bx + a : g + bx + a + nx].add(acc_y[..., a])
     return out

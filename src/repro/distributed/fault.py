@@ -314,14 +314,14 @@ def run_supervised_windows(sim, n_steps: int, diagnostics_every: int,
     carry), ``_enter_window`` (launch one compiled window, return the host
     bundle), ``_consume_bundle`` (commit a successful window), ``_handle_halt``
     (grow-and-continue for the overflow/migration halt family),
-    ``_remedy_sort`` and ``_drop_pallas`` (remediation ladder rungs), plus
+    ``_remedy_sort`` and ``_demote_backend`` (remediation ladder rungs), plus
     the ``halts``/``retries``/``restarts``/``discarded_steps`` counters.
 
     Recovery paths:
 
     * health halt (``HALT_NONFINITE``/``HALT_INVARIANT``): restore the
       window-start snapshot and retry under the escalating ladder — halve
-      the window, then force a global sort, then drop the Pallas route, then
+      the window, then force a global sort, then demote the kernel backend, then
       abort with ``SimulationHealthError`` naming the halt code, step, and
       offending invariant;
     * capacity halts (overflow / migration family): delegate to the driver's
@@ -368,9 +368,10 @@ def run_supervised_windows(sim, n_steps: int, diagnostics_every: int,
                     level = sim._remedy_level
                     exhausted = level > max_retries
                     if not exhausted and level >= 3:
-                        # last rung: drop the Pallas route; exhausted if
-                        # there is nothing left to drop
-                        exhausted = not sim._drop_pallas()
+                        # last rung: demote the kernel backend one step down
+                        # the dispatcher's priority ladder; exhausted when
+                        # already on the most conservative backend
+                        exhausted = not sim._demote_backend()
                     if exhausted:
                         raise SimulationHealthError(
                             halt=name,

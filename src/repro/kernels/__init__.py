@@ -6,12 +6,15 @@ oracle). Shared interpret detection and the VMEM-budget block autotuner
 live in kernels/common.py. See kernels/README.md for the design notes.
 """
 
+from repro.kernels import dispatch  # noqa: F401
 from repro.kernels.common import autodetect_interpret, choose_block_cells  # noqa: F401
 from repro.kernels.deposition.ops import (  # noqa: F401
     bin_outer_product,
     bin_outer_product_ref,
     fused_bin_deposit,
     fused_bin_deposit_ref,
+    fused_bin_deposit_reduced,
+    fused_bin_deposit_reduced_ref,
 )
 from repro.kernels.gather.ops import bin_gather, fused_bin_gather  # noqa: F401
 from repro.kernels.gather.ref import bin_gather_ref, fused_bin_gather_ref  # noqa: F401

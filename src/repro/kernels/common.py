@@ -43,6 +43,12 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return autodetect_interpret() if interpret is None else bool(interpret)
 
 
+#: Tap-window width the interpret budget is calibrated against (order 1's
+#: unified window). Wider windows scale the budget quadratically — see
+#: choose_block_cells.
+INTERPRET_REFERENCE_TAPS = 3
+
+
 def choose_block_cells(
     n_cells: int,
     per_cell_bytes: int,
@@ -50,6 +56,7 @@ def choose_block_cells(
     vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
     multiple: int = BLOCK_MULTIPLE,
     interpret: bool = False,
+    taps: int | None = None,
 ) -> int:
     """Largest leading-axis block whose working set fits the VMEM budget.
 
@@ -62,10 +69,32 @@ def choose_block_cells(
         alignment); smaller blocks are kept exact so tiny problems still run.
       interpret: widen the budget by INTERPRET_BUDGET_SCALE (no physical
         VMEM under the interpreter; per-step overhead dominates instead).
+      taps: the kernel's unified tap-window width, when it has one. Under
+        the interpreter a single byte budget penalizes wide-tap orders:
+        their per-cell working set grows ~taps^2 (the packed rhocell tile
+        dominates), so a fixed budget splits an order-3 problem into extra
+        grid steps long before an order-1 problem of the same byte size —
+        and per-grid-step overhead, not locality, is what the interpreter
+        pays for (the order-3 fused-vs-unfused regression in
+        BENCH_deposition.json). Scaling the widened budget by
+        (taps / INTERPRET_REFERENCE_TAPS)^2 keeps the *cell count* at
+        which a problem first splits roughly order-independent.
     """
     if interpret:
-        vmem_budget_bytes *= INTERPRET_BUDGET_SCALE
+        scale = INTERPRET_BUDGET_SCALE
+        if taps is not None and taps > INTERPRET_REFERENCE_TAPS:
+            scale = (scale * taps * taps) // (INTERPRET_REFERENCE_TAPS**2)
+        vmem_budget_bytes *= scale
     block = max(1, min(int(n_cells), vmem_budget_bytes // max(int(per_cell_bytes), 1)))
     if block >= multiple:
         block -= block % multiple
+    if block < n_cells:
+        # balance the grid: the same number of steps with even blocks beats
+        # a ragged tiny tail block (each step pays fixed overhead)
+        steps = -(-int(n_cells) // block)
+        even = -(-int(n_cells) // steps)
+        if even >= multiple:
+            even += (-even) % multiple
+        if even <= block:
+            block = even
     return block

@@ -200,6 +200,7 @@ def fused_deposition_pallas(
             fused_deposition_bytes_per_cell(cap, order),
             vmem_budget_bytes=vmem_budget_bytes,
             interpret=interpret,
+            taps=t,
         )
     cb = min(block_cells, c)
 
@@ -213,5 +214,127 @@ def fused_deposition_pallas(
         ],
         out_specs=pl.BlockSpec((cb, 3, t, t * t), lambda i: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((c, 3, t, t * t), jnp.float32),
+        interpret=interpret,
+    )(d, val)
+
+
+# ---------------------------------------------------------------------------
+# Epilogue-fused megakernel: rhocell z-reduction inside the kernel
+# ---------------------------------------------------------------------------
+
+
+def _make_fused_reduced_kernel(order: int, nz: int, guard: int):
+    t, base = unified_support(order)
+    g = guard
+
+    def kernel(d_ref, val_ref, o_ref):
+        d = d_ref[...]      # (BC*nz, cap, 3) — BC whole z-columns of cells
+        val = val_ref[...]
+        cb, cap = d.shape[0], d.shape[1]
+        bc = cb // nz
+
+        # (b) six 1-D weight sets on the VPU, identical to _make_fused_kernel
+        w = {}
+        for axis in range(3):
+            da = d[..., axis]
+            for staggered in (False, True):
+                nt, b = support(order, staggered)
+                w[(axis, staggered)] = shape_weights_window(
+                    da, order, staggered, n_taps=nt, base=b
+                )
+
+        # (c) the three shared-weight MXU contractions, then (d) the
+        # rhocell z-pass *in-kernel*: because cells are laid out z-fastest,
+        # a block of whole columns keeps every shifted add of
+        # reduce_rhocell_separable's acc_z stage inside the block — the
+        # packed (C, 3, T, T*T) tile never exists in HBM, and the output
+        # shrinks from 3*T^3 to 3*T^2*(nz+2g)/nz floats per cell. Tap
+        # adds run in ascending true-support order, the same per-element
+        # accumulation sequence as the two-step reference (off-support
+        # unified taps only ever add exact zeros there).
+        acc = jnp.zeros((bc, 3, nz + 2 * g, t, t), o_ref.dtype)
+        for comp in range(3):
+            wx = w[(0, comp == 0)]
+            wy = w[(1, comp == 1)]
+            wz = w[(2, comp == 2)]
+            (tx, bx) = support(order, comp == 0)
+            (ty, by) = support(order, comp == 1)
+            (tz, bz) = support(order, comp == 2)
+            a = wx * val[..., comp][..., None]                       # (CB, cap, tx)
+            byz = (wy[..., :, None] * wz[..., None, :]).reshape(cb, cap, ty * tz)
+            res = jax.lax.dot_general(
+                a,
+                byz,
+                dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=o_ref.dtype,
+            )
+            rho = res.reshape(bc, nz, tx, ty, tz)
+            ox, oy = bx - base, by - base
+            for c in range(tz):
+                acc = acc.at[
+                    :, comp, g + bz + c : g + bz + c + nz, ox : ox + tx, oy : oy + ty
+                ].add(rho[..., c])
+        o_ref[...] = acc
+
+    return kernel
+
+
+def fused_reduced_bytes_per_column(cap: int, order: int, nz: int, guard: int) -> int:
+    """VMEM working set of one z-column in the epilogue-fused kernel: nz
+    cells of the fused working set plus the column's (3, nz+2g, T, T)
+    accumulator."""
+    t, _ = unified_support(order)
+    return nz * fused_deposition_bytes_per_cell(cap, order) + 4 * 3 * (nz + 2 * guard) * t * t
+
+
+def fused_deposition_reduced_pallas(
+    d: jax.Array,
+    val: jax.Array,
+    *,
+    order: int,
+    grid_shape,
+    guard: int,
+    block_cols: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> jax.Array:
+    """Fused deposition with the rhocell z-reduction folded in-kernel.
+
+    Same (C, cap, 3) slab inputs as `fused_deposition_pallas`, but the grid
+    tiles whole z-columns (cells are z-fastest, so a column is ``nz``
+    consecutive cells) and each block accumulates its packed tiles straight
+    into a per-column ``(3, nz+2g, T, T)`` z-reduced accumulator. Returns
+    ``(nx*ny, 3, nz+2g, T, T)`` float32 — finish with
+    ``core.rhocell.reduce_rhocell_tail`` per component.
+    """
+    nx, ny, nz = grid_shape
+    c, cap, three = d.shape
+    assert three == 3 and val.shape == d.shape
+    assert c == nx * ny * nz, (c, grid_shape)
+    n_cols = nx * ny
+    t, _ = unified_support(order)
+    g = guard
+
+    interpret = resolve_interpret(interpret)
+    if block_cols is None:
+        block_cols = choose_block_cells(
+            n_cols,
+            fused_reduced_bytes_per_column(cap, order, nz, g),
+            vmem_budget_bytes=vmem_budget_bytes,
+            interpret=interpret,
+            taps=t,
+        )
+    bc = min(block_cols, n_cols)
+
+    grid = (pl.cdiv(n_cols, bc),)
+    return pl.pallas_call(
+        _make_fused_reduced_kernel(order, nz, g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc * nz, cap, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bc * nz, cap, 3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, 3, nz + 2 * g, t, t), lambda i: (i, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cols, 3, nz + 2 * g, t, t), jnp.float32),
         interpret=interpret,
     )(d, val)

@@ -6,9 +6,11 @@ Mosaic on real TPU).
 
 `bin_outer_product` is the single-component contraction that
 `deposit_matrix` plugs in as `bin_matmul` (comparison mode).
-`fused_bin_deposit` is the three-component megakernel that
-`deposit_current_matrix_fused` plugs in as `fused_matmul` — the default
-hot path of `PICConfig(use_pallas=True)`.
+`fused_bin_deposit` is the three-component megakernel behind the
+``backend="pallas"`` route of `deposit_current_matrix_fused`.
+`fused_bin_deposit_reduced` is the epilogue-fused variant behind
+``backend="pallas_reduced"`` — it folds the rhocell z-reduction into the
+kernel (finish with `core.rhocell.reduce_rhocell_tail`).
 """
 
 from __future__ import annotations
@@ -20,10 +22,12 @@ import jax
 from repro.kernels.deposition.kernel import (
     bin_outer_product_pallas,
     fused_deposition_pallas,
+    fused_deposition_reduced_pallas,
 )
 from repro.kernels.deposition.ref import (  # noqa: F401
     bin_outer_product_ref,
     fused_bin_deposit_ref,
+    fused_bin_deposit_reduced_ref,
 )
 
 
@@ -35,3 +39,12 @@ def bin_outer_product(a, b, *, mode: str = "mxu", block_cells: int | None = None
 @partial(jax.jit, static_argnames=("order", "block_cells"))
 def fused_bin_deposit(d, val, *, order: int, block_cells: int | None = None):
     return fused_deposition_pallas(d, val, order=order, block_cells=block_cells)
+
+
+@partial(jax.jit, static_argnames=("order", "grid_shape", "guard", "block_cols"))
+def fused_bin_deposit_reduced(
+    d, val, *, order: int, grid_shape, guard: int, block_cols: int | None = None
+):
+    return fused_deposition_reduced_pallas(
+        d, val, order=order, grid_shape=grid_shape, guard=guard, block_cols=block_cols
+    )

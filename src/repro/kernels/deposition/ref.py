@@ -32,3 +32,22 @@ def fused_bin_deposit_ref(d, val, *, order: int):
         byz = (wy[..., :, None] * wz[..., None, :]).reshape(c, cap, t * t)
         packed.append(jnp.einsum("cpm,cpn->cmn", a, byz, preferred_element_type=jnp.float32))
     return jnp.stack(packed, axis=1)
+
+
+def fused_bin_deposit_reduced_ref(d, val, *, order: int, grid_shape, guard: int):
+    """Oracle for the epilogue-fused megakernel: the packed oracle followed
+    by reduce_rhocell_separable's z pass, per column.
+
+    Returns (nx*ny, 3, nz+2g, T, T) float32.
+    """
+    nx, ny, nz = grid_shape
+    g = guard
+    t, base = unified_support(order)
+    packed = fused_bin_deposit_ref(d, val, order=order)  # (C, 3, T, T*T)
+    rho = packed.reshape(nx * ny, nz, 3, t, t, t)
+    acc = jnp.zeros((nx * ny, 3, nz + 2 * g, t, t), packed.dtype)
+    for c in range(t):
+        acc = acc.at[:, :, g + base + c : g + base + c + nz].add(
+            jnp.moveaxis(rho[..., c], 1, 2)
+        )
+    return acc

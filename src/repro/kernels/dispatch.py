@@ -1,0 +1,500 @@
+"""Logical-op -> backend dispatch with benchmark-to-select autotuning.
+
+Every hot contraction in the repo is a *logical op* with several
+interchangeable implementations (ROADMAP item 1, modeled on xformers'
+fmha registry — one op, multiple backends, ``is_available()`` + priority +
+benchmark-to-select, persisted autotune cache):
+
+    op               backends (priority)
+    ---------------  -------------------------------------------------
+    deposit_fused    pallas_reduced (30) > pallas (20) > xla (10)
+    gather_fused     pallas (20) > xla (10)
+    deposit_unfused  pallas (20) > xla (10)
+    bin_gather       pallas (20) > xla (10)
+
+Backend names are spec-level (`DepositionSpec.backend`):
+
+  * ``"xla"``            — the pure-XLA reference contraction (always
+                           available; the old ``use_pallas=False``).
+  * ``"pallas"``         — the Pallas megakernel (``use_pallas=True``).
+  * ``"pallas_reduced"`` — deposition only: the epilogue-fused megakernel
+                           that folds the rhocell z-reduction in-kernel so
+                           the packed (C, 3, T, T*T) tile never
+                           round-trips through HBM.
+  * ``"auto"``           — benchmark the available candidates on the first
+                           real call (synthetic inputs at the call's exact
+                           shapes) and persist the winner.
+
+Resolution of a *forced* name never fails sideways: if the name is not
+registered on the op (or unavailable for the key), the best available
+backend of priority <= the forced one is used — forcing
+``"pallas_reduced"`` on `gather_fused` runs ``"pallas"``.
+
+``"auto"`` winners persist in a JSON cache keyed on
+``(op, order, grid_shape, capacity, n_bins, dtype, platform, interpret)``
+at ``$REPRO_AUTOTUNE_CACHE`` (default ``.repro_autotune_cache.json`` in
+the working directory), so subsequent runs and restarts resolve with zero
+re-measurement. A corrupt cache file is reported loudly (RuntimeWarning)
+and rebuilt by re-benchmarking. ``counters`` tracks benchmark runs /
+cache hits / memo hits for the smoke lane's no-re-benchmark assertions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import warnings
+from typing import Any, Callable
+
+from repro.kernels.common import resolve_interpret
+
+DEFAULT_CACHE_FILE = ".repro_autotune_cache.json"
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_VERSION = 1
+
+#: The global priority ladder (higher = preferred before measurement, and
+#: the order the fault supervisor demotes along).
+BACKEND_PRIORITY = {"pallas_reduced": 30, "pallas": 20, "xla": 10}
+
+BENCH_ROUNDS = 5
+BENCH_WARMUP = 1
+
+#: Observability for tests and the benchmark smoke lane.
+counters = {"benchmark": 0, "cache_hit": 0, "memo_hit": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchKey:
+    """Everything a backend choice may legally depend on."""
+
+    op: str
+    order: int
+    grid_shape: tuple[int, int, int] | None
+    capacity: int
+    n_bins: int
+    dtype: str
+    platform: str
+    interpret: bool
+
+    def cache_key(self) -> str:
+        gs = "x".join(map(str, self.grid_shape)) if self.grid_shape else "none"
+        mode = "interp" if self.interpret else "compiled"
+        return (
+            f"{self.op}|order{self.order}|grid{gs}|cap{self.capacity}"
+            f"|bins{self.n_bins}|{self.dtype}|{self.platform}|{mode}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One implementation of a logical op.
+
+    ``is_available(key)`` gates on platform / interpret mode / shape
+    constraints; ``make_thunk(key)`` builds a nullary benchmark thunk on
+    synthetic inputs of the key's exact shapes (called only for "auto").
+    """
+
+    name: str
+    priority: int
+    is_available: Callable[[DispatchKey], bool]
+    make_thunk: Callable[[DispatchKey], Callable[[], Any]]
+
+
+_REGISTRY: dict[str, dict[str, Backend]] = {}
+_MEMO: dict[DispatchKey, str] = {}
+
+
+def register(op: str, backend: Backend, *, override: bool = False) -> None:
+    """Register ``backend`` under ``op``; re-registering an existing name
+    requires ``override=True`` (catches accidental double registration)."""
+    table = _REGISTRY.setdefault(op, {})
+    if backend.name in table and not override:
+        raise ValueError(
+            f"backend {backend.name!r} already registered for op {op!r} "
+            "(pass override=True to replace it)"
+        )
+    table[backend.name] = backend
+    _MEMO.clear()
+
+
+def backends_for(op: str) -> dict[str, Backend]:
+    _ensure_default_registry()
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {sorted(_REGISTRY)}")
+    return dict(_REGISTRY[op])
+
+
+def ops() -> tuple[str, ...]:
+    _ensure_default_registry()
+    return tuple(sorted(_REGISTRY))
+
+
+def cache_path() -> str:
+    return os.environ.get(CACHE_ENV) or DEFAULT_CACHE_FILE
+
+
+def clear_memo() -> None:
+    """Drop the in-process memo (the JSON cache is untouched) — the next
+    resolve re-reads the cache file. Test/smoke hook."""
+    _MEMO.clear()
+
+
+def reset_counters() -> None:
+    for k in counters:
+        counters[k] = 0
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+
+
+def resolve(
+    op: str,
+    requested: str,
+    *,
+    order: int,
+    grid_shape=None,
+    capacity: int = 0,
+    n_bins: int | None = None,
+    dtype: str = "float32",
+    interpret: bool | None = None,
+) -> str:
+    """Resolve ``requested`` ("auto" or a backend name) to a concrete
+    backend name for ``op`` at this shape key.
+
+    Called at trace time (shapes are static there); cheap after the first
+    call per key: in-process memo, then the JSON autotune cache, and only
+    then — for "auto" with >1 candidate — a benchmark of the available
+    candidates on synthetic inputs.
+    """
+    import jax
+
+    if grid_shape is not None:
+        grid_shape = tuple(int(s) for s in grid_shape)
+        if n_bins is None:
+            n_bins = grid_shape[0] * grid_shape[1] * grid_shape[2]
+    key = DispatchKey(
+        op=op,
+        order=int(order),
+        grid_shape=grid_shape,
+        capacity=int(capacity),
+        n_bins=int(n_bins or 0),
+        dtype=str(dtype),
+        platform=jax.default_backend(),
+        interpret=resolve_interpret(interpret),
+    )
+
+    memo_key = (key, requested)
+    if memo_key in _MEMO:
+        counters["memo_hit"] += 1
+        return _MEMO[memo_key]
+
+    table = backends_for(op)
+    available = [b for b in table.values() if b.is_available(key)]
+    if not available:
+        raise RuntimeError(f"no available backend for op {op!r} at {key}")
+    available.sort(key=lambda b: -b.priority)
+
+    if requested != "auto":
+        if requested not in BACKEND_PRIORITY:
+            raise ValueError(
+                f"unknown backend {requested!r}; known: "
+                f"{sorted(BACKEND_PRIORITY)} or 'auto'"
+            )
+        # forced: the named backend if available, else the best available
+        # one at or below the forced priority (never escalate past a
+        # demotion), else the most conservative available
+        rank = BACKEND_PRIORITY[requested]
+        eligible = [b for b in available if b.priority <= rank]
+        choice = (eligible or [available[-1]])[0].name
+        _MEMO[memo_key] = choice
+        return choice
+
+    if len(available) == 1:
+        _MEMO[memo_key] = available[0].name
+        return available[0].name
+
+    path = cache_path()
+    entries = _load_cache(path)
+    ck = key.cache_key()
+    cached = entries.get(ck)
+    if isinstance(cached, dict) and cached.get("backend") in table:
+        name = cached["backend"]
+        counters["cache_hit"] += 1
+        _MEMO[memo_key] = name
+        return name
+
+    name, timings = _benchmark(key, available)
+    entries[ck] = {"backend": name, "timings_us": timings}
+    _store_cache(path, entries)
+    _MEMO[memo_key] = name
+    return name
+
+
+def demote(
+    current: str,
+    *,
+    order: int,
+    grid_shape=None,
+    capacity: int = 0,
+    n_bins: int | None = None,
+    dtype: str = "float32",
+) -> str | None:
+    """The fault supervisor's remediation rung: the next backend down the
+    priority ladder from what ``current`` resolves to for the fused
+    deposition op (the op every config runs), or None when already at the
+    bottom — generalizing the old hard-coded "drop Pallas" toggle."""
+    effective = resolve(
+        "deposit_fused", current, order=order, grid_shape=grid_shape,
+        capacity=capacity, n_bins=n_bins, dtype=dtype,
+    )
+    ladder = sorted(BACKEND_PRIORITY, key=BACKEND_PRIORITY.get, reverse=True)
+    below = [n for n in ladder if BACKEND_PRIORITY[n] < BACKEND_PRIORITY[effective]]
+    return below[0] if below else None
+
+
+def record(
+    op: str,
+    *,
+    order: int,
+    grid_shape=None,
+    capacity: int = 0,
+    n_bins: int | None = None,
+    dtype: str = "float32",
+    interpret: bool | None = None,
+    timings_us: dict[str, float],
+) -> str:
+    """Seed (or overwrite) the autotune-cache entry for one key from
+    externally measured timings, returning the winner's name.
+
+    The benchmark sweeps call this with their interleaved-round medians —
+    higher-quality measurements than the dispatcher's quick first-call
+    probe — so the persisted choice and the published BENCH_* rows agree
+    by construction."""
+    import jax
+
+    unknown = set(timings_us) - set(BACKEND_PRIORITY)
+    if unknown:
+        raise ValueError(f"unknown backends in timings: {sorted(unknown)}")
+    if grid_shape is not None:
+        grid_shape = tuple(int(s) for s in grid_shape)
+        if n_bins is None:
+            n_bins = grid_shape[0] * grid_shape[1] * grid_shape[2]
+    key = DispatchKey(
+        op=op,
+        order=int(order),
+        grid_shape=grid_shape,
+        capacity=int(capacity),
+        n_bins=int(n_bins or 0),
+        dtype=str(dtype),
+        platform=jax.default_backend(),
+        interpret=resolve_interpret(interpret),
+    )
+    winner = min(timings_us, key=timings_us.get)
+    path = cache_path()
+    entries = _load_cache(path)
+    entries[key.cache_key()] = {
+        "backend": winner,
+        "timings_us": {n: round(float(us), 1) for n, us in timings_us.items()},
+    }
+    _store_cache(path, entries)
+    _MEMO.pop((key, "auto"), None)
+    return winner
+
+
+# ---------------------------------------------------------------------------
+# autotune cache (JSON, env-overridable path)
+# ---------------------------------------------------------------------------
+
+
+def _load_cache(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("version") != CACHE_VERSION or not isinstance(data.get("entries"), dict):
+            raise ValueError(f"unexpected schema (want version {CACHE_VERSION})")
+        return data["entries"]
+    except (OSError, ValueError) as e:
+        warnings.warn(
+            f"autotune cache {path!r} is corrupt ({e}); ignoring it and "
+            "re-benchmarking — the file will be rewritten",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        return {}
+
+
+def _store_cache(path: str, entries: dict) -> None:
+    tmp = f"{path}.tmp-{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": entries}, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError as e:  # read-only dir etc. — autotuning still works, unpersisted
+        warnings.warn(f"could not persist autotune cache to {path!r}: {e}", RuntimeWarning)
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _benchmark(key: DispatchKey, candidates: list[Backend]) -> tuple[str, dict]:
+    """Interleaved-round timing of each candidate's synthetic thunk; returns
+    (winner name, per-backend median microseconds)."""
+    counters["benchmark"] += 1
+    thunks = {b.name: b.make_thunk(key) for b in candidates}
+    for fn in thunks.values():  # compile/warm outside the timed rounds
+        for _ in range(BENCH_WARMUP):
+            fn()
+    samples: dict[str, list[float]] = {n: [] for n in thunks}
+    for _ in range(BENCH_ROUNDS):
+        for name, fn in thunks.items():
+            t0 = time.perf_counter()
+            fn()
+            samples[name].append((time.perf_counter() - t0) * 1e6)
+    medians = {n: sorted(s)[len(s) // 2] for n, s in samples.items()}
+    winner = min(medians, key=medians.get)
+    return winner, {n: round(us, 1) for n, us in medians.items()}
+
+
+# ---------------------------------------------------------------------------
+# default registry: the four logical ops
+# ---------------------------------------------------------------------------
+
+
+def _always(_key: DispatchKey) -> bool:
+    return True
+
+
+def _pallas_ok(key: DispatchKey) -> bool:
+    # Mosaic compiles on TPU; everywhere else the kernels need the
+    # interpreter — with interpret forced off on a non-TPU platform the
+    # Pallas backends are unavailable and resolution falls back to XLA.
+    return key.platform == "tpu" or key.interpret
+
+
+def _pallas_reduced_ok(key: DispatchKey) -> bool:
+    # the column-blocked kernel additionally needs the grid geometry
+    return _pallas_ok(key) and key.grid_shape is not None
+
+
+def _synthetic_slab(key: DispatchKey):
+    import jax
+    import jax.numpy as jnp
+
+    dt = jnp.dtype(key.dtype)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    d = jax.random.uniform(k1, (key.n_bins, key.capacity, 3), dt, maxval=0.999)
+    val = jax.random.normal(k2, (key.n_bins, key.capacity, 3), dt)
+    return d, val
+
+
+def _deposit_fused_thunk(impl: str):
+    def make(key: DispatchKey):
+        import jax
+
+        from repro.core.deposition import fused_deposit_grids
+
+        d, val = _synthetic_slab(key)
+        return lambda: jax.block_until_ready(
+            fused_deposit_grids(d, val, grid_shape=key.grid_shape, order=key.order, backend=impl)
+        )
+
+    return make
+
+
+def _gather_fused_thunk(impl: str):
+    def make(key: DispatchKey):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.gather import fused_gather_bins
+        from repro.core.shape_functions import max_guard
+
+        d, _ = _synthetic_slab(key)
+        g = max_guard(key.order)
+        nx, ny, nz = key.grid_shape
+        keys = jax.random.split(jax.random.PRNGKey(1), 6)
+        padded = tuple(
+            jax.random.normal(k, (nx + 2 * g, ny + 2 * g, nz + 2 * g), jnp.dtype(key.dtype))
+            for k in keys
+        )
+        return lambda: jax.block_until_ready(
+            fused_gather_bins(d, padded, grid_shape=key.grid_shape, order=key.order, backend=impl)
+        )
+
+    return make
+
+
+def _deposit_unfused_thunk(impl: str):
+    def make(key: DispatchKey):
+        import jax
+
+        from repro.core.shape_functions import support
+
+        m, _ = support(key.order, True)
+        tu, _ = support(key.order, False)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+        a = jax.random.normal(k1, (key.n_bins, key.capacity, m), key.dtype)
+        b = jax.random.normal(k2, (key.n_bins, key.capacity, tu * tu), key.dtype)
+        if impl == "pallas":
+            from repro.kernels.deposition.ops import bin_outer_product as fn
+        else:
+            from repro.kernels.deposition.ref import bin_outer_product_ref
+
+            fn = jax.jit(bin_outer_product_ref)
+        return lambda: jax.block_until_ready(fn(a, b))
+
+    return make
+
+
+def _bin_gather_thunk(impl: str):
+    def make(key: DispatchKey):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.shape_functions import support
+
+        m, _ = support(key.order, True)
+        tu, _ = support(key.order, False)
+        n = tu * tu
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+        wx = jax.random.normal(k1, (key.n_bins, key.capacity, m), key.dtype)
+        byz = jax.random.normal(k2, (key.n_bins, key.capacity, n), key.dtype)
+        g = jax.random.normal(k3, (key.n_bins, m, n), key.dtype)
+        if impl == "pallas":
+            from repro.kernels.gather.ops import bin_gather as fn
+        else:
+            fn = jax.jit(
+                lambda wx, byz, g: jnp.sum(
+                    wx * jnp.einsum("cpn,cmn->cpm", byz, g), axis=-1
+                )
+            )
+        return lambda: jax.block_until_ready(fn(wx, byz, g))
+
+    return make
+
+
+_DEFAULTS_REGISTERED = False
+
+
+def _ensure_default_registry() -> None:
+    global _DEFAULTS_REGISTERED
+    if _DEFAULTS_REGISTERED:
+        return
+    _DEFAULTS_REGISTERED = True
+    register("deposit_fused", Backend("xla", 10, _always, _deposit_fused_thunk("xla")))
+    register("deposit_fused", Backend("pallas", 20, _pallas_ok, _deposit_fused_thunk("pallas")))
+    register(
+        "deposit_fused",
+        Backend("pallas_reduced", 30, _pallas_reduced_ok, _deposit_fused_thunk("pallas_reduced")),
+    )
+    register("gather_fused", Backend("xla", 10, _always, _gather_fused_thunk("xla")))
+    register("gather_fused", Backend("pallas", 20, _pallas_ok, _gather_fused_thunk("pallas")))
+    register("deposit_unfused", Backend("xla", 10, _always, _deposit_unfused_thunk("xla")))
+    register("deposit_unfused", Backend("pallas", 20, _pallas_ok, _deposit_unfused_thunk("pallas")))
+    register("bin_gather", Backend("xla", 10, _always, _bin_gather_thunk("xla")))
+    register("bin_gather", Backend("pallas", 20, _pallas_ok, _bin_gather_thunk("pallas")))

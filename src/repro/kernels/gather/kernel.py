@@ -14,7 +14,7 @@ Two kernels live here.
 
 `bin_gather_pallas` — the single-component contraction with the weight
   operands wx/byz built *outside* the kernel (they round-trip through HBM).
-  The ``gather="matrix_unfused"`` + ``use_pallas`` comparison route.
+  The ``gather="matrix_unfused"`` + ``backend="pallas"`` comparison route.
 
 `fused_gather_pallas` — the fused six-component megakernel (the dual of
 `fused_deposition_pallas`). Per cell-block it:
@@ -180,6 +180,7 @@ def fused_gather_pallas(
             fused_gather_bytes_per_cell(cap, order),
             vmem_budget_bytes=vmem_budget_bytes,
             interpret=interpret,
+            taps=t,
         )
     cb = min(block_cells, c)
 

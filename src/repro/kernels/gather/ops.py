@@ -1,10 +1,10 @@
 """Jit'd wrappers for the binned gather kernels (interpret auto-detected).
 
 `bin_gather` is the single-component contraction that `gather_matrix` plugs
-in as `bin_gather_op` (the ``gather="matrix_unfused"`` + ``use_pallas``
+in as `bin_gather_op` (the ``gather="matrix_unfused"`` + ``backend="pallas"``
 comparison route). `fused_bin_gather` is the six-component megakernel that
-`gather_fields_fused` plugs in as `fused_gather` — the default gather hot
-path of ``PICConfig(use_pallas=True)``.
+`gather_fields_fused` plugs in as `fused_gather` — the gather hot path of
+``PICConfig(backend="pallas")``.
 """
 
 from __future__ import annotations

@@ -78,6 +78,8 @@ def build_spec(args) -> SimSpec:
         overrides["mesh"] = parse_mesh(args.mesh)
     if args.use_pallas:
         overrides["use_pallas"] = True
+    if args.backend is not None:
+        overrides["backend"] = args.backend
     if args.sentinel:
         overrides["health"] = {"enable": True}
     if args.autosave_every is not None:
@@ -125,7 +127,11 @@ def main() -> None:
                     help="field-gather mode (default: auto-paired — fused matrix for bin depositions)")
     ov.add_argument("--sort", choices=["incremental", "rebuild", "global", "none"], default=None)
     ov.add_argument("--grid", type=int, nargs=3, default=None)
-    ov.add_argument("--use-pallas", action="store_true", dest="use_pallas")
+    ov.add_argument("--use-pallas", action="store_true", dest="use_pallas",
+                    help="deprecated: same as --backend pallas")
+    ov.add_argument("--backend", choices=["auto", "xla", "pallas", "pallas_reduced"], default=None,
+                    help="kernel-dispatch backend for the bin contractions "
+                    "(auto = benchmark-to-select with persisted autotune cache)")
     ov.add_argument(
         "--window", type=int, default=None,
         help="device-resident loop: steps per compiled scan window (one host "

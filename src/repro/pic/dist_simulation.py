@@ -701,14 +701,25 @@ class DistSimulation:
         self._dist_sort()
         self.policy_state = policy_init()
 
-    def _drop_pallas(self) -> bool:
-        """Remediation-ladder rung 3: re-route the bin contractions through
-        the XLA reference path. Returns False when there is nothing to drop
-        (the ladder is exhausted)."""
-        if not self.config.use_pallas:
+    def _demote_backend(self) -> bool:
+        """Remediation-ladder rung 3: demote the kernel-dispatch backend to
+        the next backend down the priority ladder (e.g. pallas_reduced ->
+        pallas -> xla), generalizing the old hard-coded "drop Pallas"
+        toggle. Returns False when already at the bottom (the ladder is
+        exhausted)."""
+        from repro.kernels import dispatch
+
+        nxt = dispatch.demote(
+            self.config.backend, order=self.config.order,
+            grid_shape=self.config.local_grid.shape, capacity=self.config.capacity,
+        )
+        if nxt is None:
             return False
-        self.config = dataclasses.replace(self.config, use_pallas=False)
+        self.config = dataclasses.replace(self.config, backend=nxt)
         return True
+
+    # Backward-compatible alias for the pre-dispatcher rung name.
+    _drop_pallas = _demote_backend
 
     def _run_host(self, n_steps: int, diagnostics_every: int) -> None:
         import time

@@ -208,7 +208,9 @@ class DistConfig:
     order: int = 1
     deposition: str = "matrix"    # matrix (fused megakernel) | matrix_unfused
     gather: str = "matrix"        # matrix (fused six-component) | matrix_unfused
-    use_pallas: bool = False      # route the bin contractions through Pallas
+    backend: str = "auto"         # kernel-dispatch backend for the bin
+                                  # contractions: auto | xla | pallas |
+                                  # pallas_reduced
     charge: float = -1.0
     mass: float = 1.0
     capacity: int = 16
@@ -322,27 +324,18 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
     pb = [_extend_all(f, g, cfg) for f in (bx, by, bz)]
     if cfg.gather == "matrix":
         # fused six-component pass over the carried slab (one staging, six
-        # shared weight sets, one slot-map scatter-back)
-        fused_gather = None
-        if cfg.use_pallas:
-            from repro.kernels.gather.ops import fused_bin_gather
-
-            fused_gather = fused_bin_gather
+        # shared weight sets, one slot-map scatter-back); the contraction
+        # backend resolves through the kernel dispatcher
         e_p, b_p = gather_fields_fused(
             BinSlab(d=slab_d, valid=slab_valid), tuple(pe) + tuple(pb), layout,
-            grid_shape=shape, order=cfg.order, fused_gather=fused_gather,
+            grid_shape=shape, order=cfg.order, backend=cfg.backend,
         )
     else:  # matrix_unfused: six-call comparison mode
-        bin_gather_op = None
-        if cfg.use_pallas:
-            from repro.kernels.gather.ops import bin_gather
-
-            bin_gather_op = bin_gather
         e_p = jnp.stack(
-            [gather_matrix(pos, pe[k], layout, grid_shape=shape, order=cfg.order, stagger=E_STAGGER[k], bin_gather_op=bin_gather_op) for k in range(3)], -1
+            [gather_matrix(pos, pe[k], layout, grid_shape=shape, order=cfg.order, stagger=E_STAGGER[k], backend=cfg.backend) for k in range(3)], -1
         )
         b_p = jnp.stack(
-            [gather_matrix(pos, pb[k], layout, grid_shape=shape, order=cfg.order, stagger=B_STAGGER[k], bin_gather_op=bin_gather_op) for k in range(3)], -1
+            [gather_matrix(pos, pb[k], layout, grid_shape=shape, order=cfg.order, stagger=B_STAGGER[k], backend=cfg.backend) for k in range(3)], -1
         )
 
     # 2. push (positions NOT wrapped: out-of-range triggers migration);
@@ -420,27 +413,17 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
     qw = cfg.charge * w * binned.astype(w.dtype)
     inv_vol = 1.0 / cfg.local_grid.cell_volume
     if cfg.deposition == "matrix":
-        fused_matmul = None
-        if cfg.use_pallas:
-            from repro.kernels.deposition.ops import fused_bin_deposit
-
-            fused_matmul = fused_bin_deposit
         j3 = deposit_current_matrix_fused(
             pos_new, v, qw, layout, grid_shape=shape, order=cfg.order,
-            fused_matmul=fused_matmul, slab=slab,
+            backend=cfg.backend, slab=slab,
         )
         j = [_reduce_all(jp, g, cfg) * inv_vol for jp in j3]
     else:  # matrix_unfused: per-component comparison mode
-        bin_matmul = None
-        if cfg.use_pallas:
-            from repro.kernels.deposition.ops import bin_outer_product
-
-            bin_matmul = bin_outer_product
         j = []
         for k, stagger in enumerate(((True, False, False), (False, True, False), (False, False, True))):
             jp = deposit_matrix(
                 pos_new, qw * v[:, k], layout, grid_shape=shape, order=cfg.order, stagger=stagger,
-                bin_matmul=bin_matmul,
+                backend=cfg.backend,
             )
             j.append(_reduce_all(jp, g, cfg) * inv_vol)
 

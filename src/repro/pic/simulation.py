@@ -113,8 +113,9 @@ class PICConfig:
     mass: float = 1.0
     ckc_beta: float = 0.0
     capacity: int = 16
-    use_pallas: bool = False     # route the bin contractions (deposition AND
-                                 # gather) through the Pallas kernels
+    backend: str = "auto"        # kernel-dispatch backend for the bin
+                                 # contractions (deposition AND gather):
+                                 # auto | xla | pallas | pallas_reduced
 
     @property
     def q_over_m(self) -> float:
@@ -179,28 +180,19 @@ def _gather_fields(pos, fields: FieldState, layout, slab: BinSlab | None, config
     pb = [unfold_guards(f, g) for f in fields.b()]
     if config.gather == "matrix":
         # default hot path: fused six-component pass over the step's slab —
-        # no re-staging, six shared weight sets, one slot-map scatter-back
-        fused_gather = None
-        if config.use_pallas:
-            from repro.kernels.gather.ops import fused_bin_gather
-
-            fused_gather = fused_bin_gather
+        # no re-staging, six shared weight sets, one slot-map scatter-back;
+        # the contraction backend resolves through the kernel dispatcher
         return gather_fields_fused(
             slab, tuple(pe) + tuple(pb), layout,
-            grid_shape=shape, order=config.order, fused_gather=fused_gather,
+            grid_shape=shape, order=config.order, backend=config.backend,
         )
     comps_e, comps_b = [], []
     if config.gather == "matrix_unfused":
         # six-call ablation mode: each component re-stages the slab and
         # recomputes its three weight sets
-        bin_gather_op = None
-        if config.use_pallas:
-            from repro.kernels.gather.ops import bin_gather
-
-            bin_gather_op = bin_gather
         for k in range(3):
-            comps_e.append(gather_matrix(pos, pe[k], layout, grid_shape=shape, order=config.order, stagger=E_STAGGER[k], bin_gather_op=bin_gather_op))
-            comps_b.append(gather_matrix(pos, pb[k], layout, grid_shape=shape, order=config.order, stagger=B_STAGGER[k], bin_gather_op=bin_gather_op))
+            comps_e.append(gather_matrix(pos, pe[k], layout, grid_shape=shape, order=config.order, stagger=E_STAGGER[k], backend=config.backend))
+            comps_b.append(gather_matrix(pos, pb[k], layout, grid_shape=shape, order=config.order, stagger=B_STAGGER[k], backend=config.backend))
     else:
         for k in range(3):
             comps_e.append(gather_scatter(pos, pe[k], order=config.order, stagger=E_STAGGER[k]))
@@ -214,25 +206,16 @@ def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig):
 
     if config.deposition == "matrix":
         # default hot path: fused three-component megakernel consuming the
-        # step's slab — shared shape weights, packed Jx/Jy/Jz contraction
-        fused_matmul = None
-        if config.use_pallas:
-            from repro.kernels.deposition.ops import fused_bin_deposit
-
-            fused_matmul = fused_bin_deposit
+        # step's slab — shared shape weights, packed Jx/Jy/Jz contraction;
+        # the contraction backend resolves through the kernel dispatcher
         j3 = deposit_current_matrix_fused(
             pos, v, qw, layout, grid_shape=shape, order=config.order,
-            fused_matmul=fused_matmul, slab=slab,
+            backend=config.backend, slab=slab,
         )
         return [fold_guards(j, config.guard) * inv_vol for j in j3]
 
     # comparison modes: scatter | rhocell | matrix_unfused (per component)
     out = []
-    bin_matmul = None
-    if config.use_pallas:
-        from repro.kernels.deposition.ops import bin_outer_product
-
-        bin_matmul = bin_outer_product
     for k, stagger in enumerate(((True, False, False), (False, True, False), (False, False, True))):
         values = qw * v[:, k]
         if config.deposition == "scatter":
@@ -240,7 +223,7 @@ def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig):
         elif config.deposition == "rhocell":
             j = deposit_rhocell(pos, values, cells, grid_shape=shape, order=config.order, stagger=stagger)
         elif config.deposition == "matrix_unfused":
-            j = deposit_matrix(pos, values, layout, grid_shape=shape, order=config.order, stagger=stagger, bin_matmul=bin_matmul)
+            j = deposit_matrix(pos, values, layout, grid_shape=shape, order=config.order, stagger=stagger, backend=config.backend)
         else:
             raise ValueError(f"unknown deposition method {config.deposition}")
         out.append(fold_guards(j, config.guard) * inv_vol)
@@ -920,14 +903,25 @@ class Simulation:
             self._grow_capacity()
         self.policy_state = policy_init()
 
-    def _drop_pallas(self) -> bool:
-        """Remediation-ladder rung 3: re-route the bin contractions through
-        the XLA reference path. Returns False when there is nothing to drop
-        (the ladder is exhausted)."""
-        if not self.config.use_pallas:
+    def _demote_backend(self) -> bool:
+        """Remediation-ladder rung 3: demote the kernel-dispatch backend to
+        the next backend down the priority ladder (e.g. pallas_reduced ->
+        pallas -> xla), generalizing the old hard-coded "drop Pallas"
+        toggle. Returns False when already at the bottom (the ladder is
+        exhausted)."""
+        from repro.kernels import dispatch
+
+        nxt = dispatch.demote(
+            self.config.backend, order=self.config.order,
+            grid_shape=self.config.grid.shape, capacity=self.config.capacity,
+        )
+        if nxt is None:
             return False
-        self.config = dataclasses.replace(self.config, use_pallas=False)
+        self.config = dataclasses.replace(self.config, backend=nxt)
         return True
+
+    # Backward-compatible alias for the pre-dispatcher rung name.
+    _drop_pallas = _demote_backend
 
     def _needed_capacity(self) -> int:
         """Occupancy of the densest cell in the CURRENT state — the halt

@@ -50,7 +50,7 @@ def test_spec_json_roundtrip_bit_exact(name):
 
 def test_spec_json_roundtrip_with_mesh_and_overrides():
     spec = scenario(
-        "lwfa", mesh="2x2", steps=33, order=2, capacity=40, use_pallas=True,
+        "lwfa", mesh="2x2", steps=33, order=2, capacity=40, backend="pallas",
         policy=SortPolicyConfig(sort_interval=7), diagnostics_every=3,
     )
     assert spec.mesh.shape == (2, 2)

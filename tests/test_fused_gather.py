@@ -1,7 +1,7 @@
 """Fused six-component field gather + BinSlab staging: oracle parity across
 all six staggered components (orders 1-3, non-cubic grids, empty bins, dead
 and unslotted particles), fused == six-call equivalence, sim-level pinning,
-use_pallas config resolution, and the structural one-slab-per-step
+backend config resolution, and the structural one-slab-per-step
 guarantee. (Pallas-vs-ref kernel parity lives in test_kernels.py.)"""
 
 import warnings
@@ -219,8 +219,9 @@ def test_carried_slab_stays_consistent():
 
 
 # ---------------------------------------------------------------------------
-# use_pallas config resolution: the flag must reach the GATHER (it was
-# silently dropped before — kernels/gather/bin_gather was dead code).
+# backend config resolution: the choice must reach the GATHER (use_pallas
+# was silently dropped there before — kernels/gather/bin_gather was dead
+# code — and the dispatcher backend must not regress that).
 # ---------------------------------------------------------------------------
 
 
@@ -234,33 +235,41 @@ def _step_jaxpr(config):
 
 
 @pytest.mark.parametrize("gather", ["matrix", "matrix_unfused"])
-def test_use_pallas_routes_into_gather(gather):
+def test_backend_routes_into_gather(gather):
     """With scatter deposition, any pallas_call in the traced step belongs
-    to the gather — PICConfig(use_pallas=True) must put one there."""
+    to the gather — PICConfig(backend="pallas") must put one there."""
     grid = GridSpec(shape=(6, 6, 6))
     base = dict(grid=grid, dt=0.2, order=1, deposition="scatter", gather=gather, capacity=16)
-    assert "pallas_call" in _step_jaxpr(PICConfig(**base, use_pallas=True))
-    assert "pallas_call" not in _step_jaxpr(PICConfig(**base, use_pallas=False))
+    assert "pallas_call" in _step_jaxpr(PICConfig(**base, backend="pallas"))
+    assert "pallas_call" not in _step_jaxpr(PICConfig(**base, backend="xla"))
 
 
-def test_spec_use_pallas_reaches_gather_config():
-    """DepositionSpec(use_pallas=True) resolves into PICConfig/DistConfig
-    with the flag set and the fused gather paired by default."""
+def test_spec_backend_reaches_gather_config():
+    """DepositionSpec backend (including the deprecated use_pallas shim)
+    resolves into PICConfig/DistConfig with the fused gather paired by
+    default."""
     from repro.api import scenario
     from repro.api.facade import dist_config, pic_config
     from repro.api.spec import DepositionSpec
 
-    spec = scenario("uniform", use_pallas=True)
+    with pytest.deprecated_call():
+        spec = scenario("uniform", use_pallas=True)
     cfg = pic_config(spec)
-    assert cfg.use_pallas and cfg.gather == "matrix"
+    assert cfg.backend == "pallas" and cfg.gather == "matrix"
 
-    dspec = scenario("uniform", grid=(8, 8, 8), mesh=(2, 2), use_pallas=True,
-                     gather="matrix_unfused")
+    spec = scenario("uniform", backend="pallas_reduced")
+    assert pic_config(spec).backend == "pallas_reduced"
+
+    with pytest.deprecated_call():
+        dspec = scenario("uniform", grid=(8, 8, 8), mesh=(2, 2), use_pallas=True,
+                         gather="matrix_unfused")
     dcfg = dist_config(dspec)
-    assert dcfg.use_pallas and dcfg.gather == "matrix_unfused"
+    assert dcfg.backend == "pallas" and dcfg.gather == "matrix_unfused"
 
     with pytest.raises(ValueError):
         DepositionSpec(gather="nope")
+    with pytest.raises(ValueError):
+        DepositionSpec(backend="nope")
 
 
 def test_dist_config_rejects_scatter_gather():

@@ -195,6 +195,26 @@ def test_persistent_fault_exhausts_ladder():
     assert "nonfinite" in str(err) and "step 5" in str(err)
 
 
+def test_persistent_fault_demotes_backend_down_ladder():
+    """Rung 3+ of the remediation ladder walks the kernel backend down the
+    dispatcher's priority ladder, one rung per retry: pallas_reduced ->
+    pallas -> xla, and only reports exhausted once the run is already on
+    the most conservative backend."""
+    sim = _build(backend="pallas_reduced",
+                 health={"enable": True, "max_retries": 6},
+                 fault={"kind": "nan_field", "step": 4, "component": "ex", "count": 0})
+    assert sim.config.backend == "pallas_reduced"
+    with pytest.raises(SimulationHealthError) as exc:
+        sim.run()
+    # levels 1-2 halve the window / force a sort, then each further level
+    # demotes one rung: pallas_reduced -> pallas -> xla, and only then does
+    # the ladder report exhausted. (The exact retry count isn't pinned: a
+    # halved-window retry can succeed past the fault step and reset the
+    # ladder before the next window halts again.)
+    assert sim.config.backend == "xla"
+    assert exc.value.retries >= 5
+
+
 def test_crash_restores_latest_autosave(reference, tmp_path):
     """Simulated hard crash mid-run: the supervisor restores the newest
     autosave checkpoint and resumes bit-for-bit."""

@@ -135,3 +135,48 @@ def test_deposit_matrix_with_pallas_kernel(order):
     )
     want = deposit_scatter(pos, values, grid_shape=grid_shape, order=order)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode block sizing (kernels/common.choose_block_cells)
+# ---------------------------------------------------------------------------
+
+
+def test_choose_block_cells_taps_scaling_keeps_order3_whole():
+    """Under the interpreter, per-grid-step overhead dominates and the
+    budget must scale with the tap-window area: the order-3 fused
+    deposition working set (taps=5) at the benchmark shape has to stay ONE
+    block — a fixed budget split it into two and regressed order 3 below
+    the unfused path."""
+    from repro.kernels.common import choose_block_cells
+    from repro.kernels.deposition.kernel import fused_deposition_bytes_per_cell
+
+    n_cells = 16 * 16 * 16 * 4  # 16^3 grid x 4: larger than the bench shape
+    per_cell = fused_deposition_bytes_per_cell(16, 3)
+    with_taps = choose_block_cells(n_cells, per_cell, interpret=True, taps=5)
+    without = choose_block_cells(n_cells, per_cell, interpret=True)
+    assert with_taps == n_cells, (with_taps, n_cells)
+    assert without < n_cells  # the flat budget would have split the grid
+
+
+def test_choose_block_cells_balances_ragged_tail():
+    """When the budget does split the grid, the block is rebalanced so the
+    same number of grid steps runs with even blocks instead of a tiny
+    ragged tail (each step pays fixed overhead)."""
+    from repro.kernels.common import choose_block_cells
+
+    block = choose_block_cells(16384, 7224, interpret=True, taps=None)
+    steps = -(-16384 // block)
+    assert block * steps >= 16384
+    # even split: no step processes less than ~half a block
+    assert 16384 - (steps - 1) * block >= block // 2
+
+
+def test_choose_block_cells_compiled_budget_unchanged():
+    """The taps hint only widens the INTERPRET budget; on hardware the
+    physical-VMEM budget still governs regardless of the window width."""
+    from repro.kernels.common import choose_block_cells
+
+    a = choose_block_cells(100_000, 4096, interpret=False, taps=5)
+    b = choose_block_cells(100_000, 4096, interpret=False)
+    assert a == b
