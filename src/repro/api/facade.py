@@ -431,6 +431,9 @@ def restore_simulation(sim, path: str) -> None:
     sim.discarded_steps = int(scal.get("discarded_steps", 0))
     sim._remedy_level = 0
     _restore_host_policy(sim, scal["host_policy"])
+    # the restored capacity may differ from the driver's — re-resolve the
+    # "auto" dispatch keys eagerly before the next window traces
+    sim._prewarm_dispatch()
 
 
 def load_simulation(path: str) -> "SimDriver":

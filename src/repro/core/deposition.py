@@ -155,27 +155,19 @@ def _default_bin_matmul(a, b):
         "grid_shape", "order", "stagger", "guard", "bin_matmul", "separable_reduce", "backend",
     ),
 )
-def deposit_matrix(
+def _deposit_matrix_jit(
     pos,
     values,
     layout: BinnedLayout,
     *,
     grid_shape,
     order: int,
-    stagger: Stagger = NO_STAGGER,
-    guard: int | None = None,
-    bin_matmul: Callable | None = None,
-    separable_reduce: bool = True,
-    backend: str | None = None,
+    stagger: Stagger,
+    guard: int | None,
+    bin_matmul: Callable | None,
+    separable_reduce: bool,
+    backend: str | None,
 ):
-    """Matrix-PIC deposition for one current component.
-
-    `bin_matmul` lets the Pallas kernel (kernels/deposition) replace the
-    einsum; default is the jnp contraction (identical math). ``backend``
-    selects the contraction through the kernel dispatcher instead
-    ("auto"/"xla"/"pallas" — see kernels.dispatch); an explicit
-    ``bin_matmul`` wins over ``backend``.
-    """
     g = sf.max_guard(order) if guard is None else guard
     (tx, ty, tz), bases = _taps_and_bases(order, stagger)
 
@@ -197,6 +189,46 @@ def deposit_matrix(
 
     reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
     return reduce(rho, grid_shape, bases, g)
+
+
+def deposit_matrix(
+    pos,
+    values,
+    layout: BinnedLayout,
+    *,
+    grid_shape,
+    order: int,
+    stagger: Stagger = NO_STAGGER,
+    guard: int | None = None,
+    bin_matmul: Callable | None = None,
+    separable_reduce: bool = True,
+    backend: str | None = None,
+):
+    """Matrix-PIC deposition for one current component.
+
+    `bin_matmul` lets the Pallas kernel (kernels/deposition) replace the
+    einsum; default is the jnp contraction (identical math). ``backend``
+    selects the contraction through the kernel dispatcher instead
+    ("auto"/"xla"/"pallas" — see kernels.dispatch); an explicit
+    ``bin_matmul`` wins over ``backend``.
+
+    Eager wrapper: the backend resolves BEFORE the jitted impl traces, so
+    an eager "auto" call can genuinely benchmark (the dispatcher never
+    measures under an ambient trace — callers that trace this should
+    prewarm the key first, as the sim drivers do).
+    """
+    if bin_matmul is None and backend is not None:
+        from repro.kernels import dispatch
+
+        backend = dispatch.resolve(
+            "deposit_unfused", backend, order=order, grid_shape=tuple(grid_shape),
+            capacity=layout.slots.shape[1], dtype=str(values.dtype),
+        )
+    return _deposit_matrix_jit(
+        pos, values, layout, grid_shape=tuple(grid_shape), order=order, stagger=stagger,
+        guard=guard, bin_matmul=bin_matmul, separable_reduce=separable_reduce,
+        backend=backend,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -277,9 +309,11 @@ def _fused_grids_reduced(acc, val_dtype, *, grid_shape, order, guard):
 def _fused_deposit_grids_impl(d, val, *, grid_shape, order, guard, backend, separable_reduce):
     """Slab -> [Jx, Jy, Jz] guard-padded via a dispatcher backend name.
 
-    ``backend`` may be "auto" or a forced name; resolution (benchmark +
-    autotune cache for "auto", availability fallback for forced names)
-    happens here at trace time through kernels.dispatch.
+    ``backend`` is normally already a concrete name (the public wrappers
+    resolve eagerly before tracing); the resolve here maps it through
+    availability fallback — and still handles an "auto" that reaches a
+    traced body directly (memo/cache hit, else priority order: the
+    dispatcher never benchmarks under an ambient trace).
     """
     from repro.kernels import dispatch
 
@@ -304,6 +338,13 @@ def _fused_deposit_grids_impl(d, val, *, grid_shape, order, guard, backend, sepa
 
 
 @partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "backend", "separable_reduce"))
+def _fused_deposit_grids_jit(d, val, *, grid_shape, order, guard, backend, separable_reduce):
+    return _fused_deposit_grids_impl(
+        d, val, grid_shape=grid_shape, order=order, guard=guard,
+        backend=backend, separable_reduce=separable_reduce,
+    )
+
+
 def fused_deposit_grids(
     d,
     val,
@@ -318,11 +359,21 @@ def fused_deposit_grids(
     [Jx, Jy, Jz] guard-padded, via the named dispatcher backend. This is
     the exact portion of the hot path the backends disagree on, so it is
     also what the dispatcher's "auto" benchmark times (kernels.dispatch
-    builds its deposit_fused thunks on this entry point)."""
+    builds its deposit_fused thunks on this entry point).
+
+    Eager wrapper: ``backend`` resolves to a concrete name BEFORE the
+    jitted impl traces, so an eager "auto" call benchmarks real device
+    execution (the dispatcher never measures under an ambient trace)."""
+    from repro.kernels import dispatch
+
     g = sf.max_guard(order) if guard is None else guard
-    return _fused_deposit_grids_impl(
-        d, val, grid_shape=grid_shape, order=order, guard=g,
-        backend=backend, separable_reduce=separable_reduce,
+    name = dispatch.resolve(
+        "deposit_fused", backend, order=order, grid_shape=tuple(grid_shape),
+        capacity=d.shape[1], dtype=str(val.dtype),
+    )
+    return _fused_deposit_grids_jit(
+        d, val, grid_shape=tuple(grid_shape), order=order, guard=g,
+        backend=name, separable_reduce=separable_reduce,
     )
 
 
@@ -330,6 +381,40 @@ def fused_deposit_grids(
     jax.jit,
     static_argnames=("grid_shape", "order", "guard", "fused_matmul", "separable_reduce", "backend"),
 )
+def _deposit_current_matrix_fused_jit(
+    pos,
+    vel,
+    qw,
+    layout: BinnedLayout,
+    *,
+    grid_shape,
+    order: int,
+    guard: int | None,
+    fused_matmul: Callable | None,
+    separable_reduce: bool,
+    slab: BinSlab | None,
+    backend: str | None,
+):
+    g = sf.max_guard(order) if guard is None else guard
+    if slab is None:
+        slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
+    d = slab.d
+    val = bin_slab_values(vel, qw, layout, slab)
+    reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
+
+    if fused_matmul is not None:
+        packed = fused_matmul(d, val, order=order)
+        return _fused_grids_packed(
+            packed, val.dtype, grid_shape=grid_shape, order=order, guard=g, reduce=reduce
+        )
+    if backend is not None:
+        return _fused_deposit_grids_impl(
+            d, val, grid_shape=grid_shape, order=order, guard=g,
+            backend=backend, separable_reduce=separable_reduce,
+        )
+    return _fused_grids_xla(d, val, grid_shape=grid_shape, order=order, guard=g, reduce=reduce)
+
+
 def deposit_current_matrix_fused(
     pos,
     vel,
@@ -373,25 +458,25 @@ def deposit_current_matrix_fused(
     "pallas_reduced" folds the rhocell z-reduction into the kernel
     epilogue and is inherently separable). An explicit ``fused_matmul``
     callable wins over ``backend`` (legacy/ablation hook).
-    """
-    g = sf.max_guard(order) if guard is None else guard
-    if slab is None:
-        slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
-    d = slab.d
-    val = bin_slab_values(vel, qw, layout, slab)
-    reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
 
-    if fused_matmul is not None:
-        packed = fused_matmul(d, val, order=order)
-        return _fused_grids_packed(
-            packed, val.dtype, grid_shape=grid_shape, order=order, guard=g, reduce=reduce
+    Eager wrapper: ``backend`` resolves BEFORE the jitted impl traces, so
+    an eager "auto" call genuinely benchmarks (the dispatcher never
+    measures under an ambient trace — the sim drivers, which trace this
+    inside their step, prewarm the key at setup instead).
+    """
+    if fused_matmul is None and backend is not None:
+        from repro.kernels import dispatch
+
+        backend = dispatch.resolve(
+            "deposit_fused", backend, order=order, grid_shape=tuple(grid_shape),
+            capacity=layout.slots.shape[1],
+            dtype=str(jnp.result_type(vel.dtype, qw.dtype)),
         )
-    if backend is not None:
-        return _fused_deposit_grids_impl(
-            d, val, grid_shape=grid_shape, order=order, guard=g,
-            backend=backend, separable_reduce=separable_reduce,
-        )
-    return _fused_grids_xla(d, val, grid_shape=grid_shape, order=order, guard=g, reduce=reduce)
+    return _deposit_current_matrix_fused_jit(
+        pos, vel, qw, layout, grid_shape=tuple(grid_shape), order=order, guard=guard,
+        fused_matmul=fused_matmul, separable_reduce=separable_reduce, slab=slab,
+        backend=backend,
+    )
 
 
 def deposit_current(pos, vel, qw, *, grid_shape, order: int, method: str = "matrix", layout: BinnedLayout | None = None, cell_ids=None, fold: bool = True, **kw):

@@ -92,17 +92,7 @@ def extract_neighborhoods(grid_padded, grid_shape, *, taps, bases, guard: int):
 
 
 @partial(jax.jit, static_argnames=("grid_shape", "order", "stagger", "guard", "bin_gather_op", "backend"))
-def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None, bin_gather_op=None, backend: str | None = None):
-    """Binned matrix gather, one component. Returns (Np,) values (0 for
-    unslotted particles).
-
-    `bin_gather_op` lets the Pallas kernel (kernels/gather.bin_gather)
-    replace the einsum + tap reduction — the ``gather="matrix_unfused"`` +
-    Pallas route; default is the jnp contraction (identical math).
-    ``backend`` selects it through the kernel dispatcher instead
-    ("auto"/"xla"/"pallas", op ``bin_gather``); an explicit
-    ``bin_gather_op`` wins over ``backend``.
-    """
+def _gather_matrix_jit(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger, guard: int | None, bin_gather_op, backend: str | None):
     g = sf.max_guard(order) if guard is None else guard
     taps, bases = _taps_and_bases(order, stagger)
     tx, ty, tz = taps
@@ -145,6 +135,34 @@ def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: 
     e_flat = e_bins.reshape(-1)
     pslot = layout.particle_slot
     return jnp.where(pslot >= 0, e_flat[jnp.maximum(pslot, 0)], jnp.zeros((), e_flat.dtype))
+
+
+def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None, bin_gather_op=None, backend: str | None = None):
+    """Binned matrix gather, one component. Returns (Np,) values (0 for
+    unslotted particles).
+
+    `bin_gather_op` lets the Pallas kernel (kernels/gather.bin_gather)
+    replace the einsum + tap reduction — the ``gather="matrix_unfused"`` +
+    Pallas route; default is the jnp contraction (identical math).
+    ``backend`` selects it through the kernel dispatcher instead
+    ("auto"/"xla"/"pallas", op ``bin_gather``); an explicit
+    ``bin_gather_op`` wins over ``backend``.
+
+    Eager wrapper: ``backend`` resolves BEFORE the jitted impl traces, so
+    an eager "auto" call genuinely benchmarks (the dispatcher never
+    measures under an ambient trace).
+    """
+    if bin_gather_op is None and backend is not None:
+        from repro.kernels import dispatch
+
+        backend = dispatch.resolve(
+            "bin_gather", backend, order=order, grid_shape=tuple(grid_shape),
+            capacity=layout.slots.shape[1], dtype=str(pos.dtype),
+        )
+    return _gather_matrix_jit(
+        pos, grid_padded, layout, grid_shape=tuple(grid_shape), order=order,
+        stagger=stagger, guard=guard, bin_gather_op=bin_gather_op, backend=backend,
+    )
 
 
 def _fused_gather_xla_bins(d, padded_fields, *, grid_shape, order, guard):
@@ -207,18 +225,74 @@ def _fused_gather_bins_impl(d, padded_fields, *, grid_shape, order, guard, backe
 
 
 @partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "backend"))
+def _fused_gather_bins_jit(d, padded_fields, *, grid_shape, order, guard, backend):
+    return _fused_gather_bins_impl(
+        d, padded_fields, grid_shape=grid_shape, order=order, guard=guard, backend=backend
+    )
+
+
 def fused_gather_bins(d, padded_fields, *, grid_shape, order: int, guard: int | None = None, backend: str = "xla"):
     """Post-slab fused gather: (C, cap, 3) offsets + six padded grids ->
     (C, cap, 6) per-bin field values via the named dispatcher backend.
     This is the portion of the hot path the gather backends disagree on —
-    kernels.dispatch builds its gather_fused benchmark thunks on it."""
+    kernels.dispatch builds its gather_fused benchmark thunks on it.
+
+    Eager wrapper: ``backend`` resolves BEFORE the jitted impl traces, so
+    an eager "auto" call benchmarks real device execution (the dispatcher
+    never measures under an ambient trace)."""
+    from repro.kernels import dispatch
+
     g = sf.max_guard(order) if guard is None else guard
-    return _fused_gather_bins_impl(
-        d, padded_fields, grid_shape=grid_shape, order=order, guard=g, backend=backend
+    name = dispatch.resolve(
+        "gather_fused", backend, order=order, grid_shape=tuple(grid_shape),
+        capacity=d.shape[1], dtype=str(d.dtype),
+    )
+    return _fused_gather_bins_jit(
+        d, padded_fields, grid_shape=tuple(grid_shape), order=order, guard=g, backend=name
     )
 
 
 @partial(jax.jit, static_argnames=("grid_shape", "order", "guard", "fused_gather", "backend"))
+def _gather_fields_fused_jit(
+    slab: BinSlab,
+    padded_fields,
+    layout: BinnedLayout,
+    *,
+    grid_shape,
+    order: int,
+    guard: int | None,
+    fused_gather,
+    backend: str | None,
+):
+    g = sf.max_guard(order) if guard is None else guard
+    d = slab.d
+    n_cells, cap = slab.valid.shape
+
+    if fused_gather is not None:
+        e_bins = _fused_gather_pallas_bins(
+            d, padded_fields, grid_shape=grid_shape, order=order, guard=g,
+            fused_gather=fused_gather,
+        )
+    elif backend is not None:
+        e_bins = _fused_gather_bins_impl(
+            d, padded_fields, grid_shape=grid_shape, order=order, guard=g, backend=backend
+        )
+    else:
+        e_bins = _fused_gather_xla_bins(
+            d, padded_fields, grid_shape=grid_shape, order=order, guard=g
+        )
+
+    # ONE scatter back to particle order for all six components (the
+    # six-call path pays this slot-map gather per component); slots without
+    # a particle are simply never read, unslotted particles read 0
+    flat = e_bins.reshape(n_cells * cap, 6)
+    pslot = layout.particle_slot
+    vals = jnp.where(
+        pslot[:, None] >= 0, flat[jnp.maximum(pslot, 0)], jnp.zeros((), flat.dtype)
+    )
+    return vals[:, :3], vals[:, 3:]
+
+
 def gather_fields_fused(
     slab: BinSlab,
     padded_fields,
@@ -259,32 +333,21 @@ def gather_fields_fused(
     dispatcher instead ("auto"/"xla"/"pallas", op ``gather_fused``); an
     explicit ``fused_gather`` callable wins over ``backend``.
 
+    Eager wrapper: ``backend`` resolves BEFORE the jitted impl traces, so
+    an eager "auto" call genuinely benchmarks (the dispatcher never
+    measures under an ambient trace — the sim drivers, which trace this
+    inside their step, prewarm the key at setup instead).
+
     Returns ``(e_p, b_p)``: (Np, 3) each, 0 for unslotted particles.
     """
-    g = sf.max_guard(order) if guard is None else guard
-    d = slab.d
-    n_cells, cap = slab.valid.shape
+    if fused_gather is None and backend is not None:
+        from repro.kernels import dispatch
 
-    if fused_gather is not None:
-        e_bins = _fused_gather_pallas_bins(
-            d, padded_fields, grid_shape=grid_shape, order=order, guard=g,
-            fused_gather=fused_gather,
+        backend = dispatch.resolve(
+            "gather_fused", backend, order=order, grid_shape=tuple(grid_shape),
+            capacity=slab.d.shape[1], dtype=str(slab.d.dtype),
         )
-    elif backend is not None:
-        e_bins = _fused_gather_bins_impl(
-            d, padded_fields, grid_shape=grid_shape, order=order, guard=g, backend=backend
-        )
-    else:
-        e_bins = _fused_gather_xla_bins(
-            d, padded_fields, grid_shape=grid_shape, order=order, guard=g
-        )
-
-    # ONE scatter back to particle order for all six components (the
-    # six-call path pays this slot-map gather per component); slots without
-    # a particle are simply never read, unslotted particles read 0
-    flat = e_bins.reshape(n_cells * cap, 6)
-    pslot = layout.particle_slot
-    vals = jnp.where(
-        pslot[:, None] >= 0, flat[jnp.maximum(pslot, 0)], jnp.zeros((), flat.dtype)
+    return _gather_fields_fused_jit(
+        slab, padded_fields, layout, grid_shape=tuple(grid_shape), order=order,
+        guard=guard, fused_gather=fused_gather, backend=backend,
     )
-    return vals[:, :3], vals[:, 3:]

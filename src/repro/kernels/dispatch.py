@@ -37,6 +37,16 @@ the working directory), so subsequent runs and restarts resolve with zero
 re-measurement. A corrupt cache file is reported loudly (RuntimeWarning)
 and rebuilt by re-benchmarking. ``counters`` tracks benchmark runs /
 cache hits / memo hits for the smoke lane's no-re-benchmark assertions.
+
+Benchmarking only happens EAGERLY — never under an ambient JAX trace.
+Inside a jit/scan trace the thunks would be staged instead of executed
+(timing Python tracing, not the device) and would bloat the caller's
+jaxpr with dead candidate graphs, so ``resolve`` detects the trace,
+falls back to priority order with a RuntimeWarning, and persists
+nothing. The public core entry points resolve eagerly before entering
+their jitted impls, and the sim drivers ``prewarm`` their config's keys
+at setup/growth so the traced step always hits the memoized, genuinely
+measured winner.
 """
 
 from __future__ import annotations
@@ -61,8 +71,10 @@ BACKEND_PRIORITY = {"pallas_reduced": 30, "pallas": 20, "xla": 10}
 BENCH_ROUNDS = 5
 BENCH_WARMUP = 1
 
-#: Observability for tests and the benchmark smoke lane.
-counters = {"benchmark": 0, "cache_hit": 0, "memo_hit": 0}
+#: Observability for tests and the benchmark smoke lane. "trace_fallback"
+#: counts "auto" resolutions that could not benchmark because they ran
+#: under an ambient JAX trace (see _trace_clean).
+counters = {"benchmark": 0, "cache_hit": 0, "memo_hit": 0, "trace_fallback": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,13 +89,17 @@ class DispatchKey:
     dtype: str
     platform: str
     interpret: bool
+    #: op runs inside a shard_map body — pallas_call has no replication
+    #: rule there, so the Pallas backends are unavailable for sharded keys
+    sharded: bool = False
 
     def cache_key(self) -> str:
         gs = "x".join(map(str, self.grid_shape)) if self.grid_shape else "none"
         mode = "interp" if self.interpret else "compiled"
+        shard = "|sharded" if self.sharded else ""
         return (
             f"{self.op}|order{self.order}|grid{gs}|cap{self.capacity}"
-            f"|bins{self.n_bins}|{self.dtype}|{self.platform}|{mode}"
+            f"|bins{self.n_bins}|{self.dtype}|{self.platform}|{mode}{shard}"
         )
 
 
@@ -103,7 +119,9 @@ class Backend:
 
 
 _REGISTRY: dict[str, dict[str, Backend]] = {}
-_MEMO: dict[DispatchKey, str] = {}
+# memoized per (key, requested-name) — "auto" and a forced name may resolve
+# differently for the same DispatchKey
+_MEMO: dict[tuple[DispatchKey, str], str] = {}
 
 
 def register(op: str, backend: Backend, *, override: bool = False) -> None:
@@ -151,6 +169,24 @@ def reset_counters() -> None:
 # ---------------------------------------------------------------------------
 
 
+def _trace_clean() -> bool:
+    """True when no ambient JAX trace is active, i.e. executing a thunk
+    here would really run it on the device rather than stage it into some
+    caller's jaxpr (where timings would measure Python tracing and
+    block_until_ready would be a no-op on tracers)."""
+    import jax
+
+    try:
+        return bool(jax.core.trace_state_clean())
+    except AttributeError:  # renamed/moved in a future jax: assume traced
+        try:
+            from jax._src import core as _core
+
+            return bool(_core.trace_state_clean())
+        except Exception:
+            return False
+
+
 def resolve(
     op: str,
     requested: str,
@@ -161,14 +197,27 @@ def resolve(
     n_bins: int | None = None,
     dtype: str = "float32",
     interpret: bool | None = None,
+    sharded: bool = False,
+    allow_benchmark: bool = True,
 ) -> str:
     """Resolve ``requested`` ("auto" or a backend name) to a concrete
     backend name for ``op`` at this shape key.
 
-    Called at trace time (shapes are static there); cheap after the first
-    call per key: in-process memo, then the JSON autotune cache, and only
-    then — for "auto" with >1 candidate — a benchmark of the available
-    candidates on synthetic inputs.
+    ``sharded=True`` marks an op that runs inside a shard_map body, where
+    ``pallas_call`` has no replication rule — the Pallas backends are
+    unavailable and resolution (even "auto") answers "xla" with no
+    benchmark. The distributed step builders resolve with this flag at
+    build time and bake the concrete name into the shard body.
+
+    Cheap after the first call per key: in-process memo, then the JSON
+    autotune cache, and only then — for "auto" with >1 candidate — a
+    benchmark of the available candidates on synthetic inputs. The
+    benchmark runs ONLY when called eagerly: under an ambient JAX trace
+    (or with ``allow_benchmark=False`` — the fault supervisor's demotion
+    path, which must not re-execute suspect kernels) an unmeasured "auto"
+    falls back to priority order without memoizing or persisting anything,
+    so a later eager call still gets to measure. Callers that trace with
+    "auto" should ``prewarm`` their keys eagerly first.
     """
     import jax
 
@@ -185,6 +234,7 @@ def resolve(
         dtype=str(dtype),
         platform=jax.default_backend(),
         interpret=resolve_interpret(interpret),
+        sharded=bool(sharded),
     )
 
     memo_key = (key, requested)
@@ -218,20 +268,83 @@ def resolve(
         return available[0].name
 
     path = cache_path()
-    entries = _load_cache(path)
     ck = key.cache_key()
-    cached = entries.get(ck)
+    cached = _load_cache(path).get(ck)
     if isinstance(cached, dict) and cached.get("backend") in table:
         name = cached["backend"]
         counters["cache_hit"] += 1
         _MEMO[memo_key] = name
         return name
 
+    if not allow_benchmark:
+        # demotion/introspection path: never execute kernels, answer from
+        # priority order (exactly what an unmeasured traced step ran)
+        return available[0].name
+    if not _trace_clean():
+        # Benchmarking under a trace would stage the thunks into the
+        # caller's jaxpr and time Python tracing instead of the device —
+        # fall back to priority order and persist NOTHING (a later eager
+        # resolve or prewarm still measures this key properly).
+        counters["trace_fallback"] += 1
+        warnings.warn(
+            f"dispatch.resolve({op!r}, 'auto') called under a JAX trace with "
+            f"no autotune-cache entry for {ck}: falling back to priority "
+            f"order ({available[0].name!r}) without benchmarking. Resolve "
+            "eagerly first (dispatch.prewarm) to autotune this key.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return available[0].name
+
     name, timings = _benchmark(key, available)
-    entries[ck] = {"backend": name, "timings_us": timings}
-    _store_cache(path, entries)
+    _merge_store(path, ck, {"backend": name, "timings_us": timings})
     _MEMO[memo_key] = name
     return name
+
+
+#: Which dispatcher op a driver deposition / gather mode routes through
+#: (the scatter/rhocell comparison modes never touch the dispatcher).
+OP_BY_DEPOSITION = {"matrix": "deposit_fused", "matrix_unfused": "deposit_unfused"}
+OP_BY_GATHER = {"matrix": "gather_fused", "matrix_unfused": "bin_gather"}
+
+
+def ops_for_modes(deposition: str, gather: str) -> tuple[str, ...]:
+    """The dispatcher ops a sim config with these deposition/gather modes
+    resolves in its hot step (empty for pure scatter/rhocell configs)."""
+    ops_ = []
+    if deposition in OP_BY_DEPOSITION:
+        ops_.append(OP_BY_DEPOSITION[deposition])
+    if gather in OP_BY_GATHER:
+        ops_.append(OP_BY_GATHER[gather])
+    return tuple(ops_)
+
+
+def prewarm(
+    ops_: tuple[str, ...] | list[str],
+    *,
+    order: int,
+    grid_shape=None,
+    capacity: int = 0,
+    n_bins: int | None = None,
+    dtype: str = "float32",
+    interpret: bool | None = None,
+    sharded: bool = False,
+    requested: str = "auto",
+) -> dict[str, str]:
+    """Eagerly resolve (benchmarking + persisting if unmeasured) each op at
+    one shape key, returning {op: backend}.
+
+    The sim drivers call this from host code at setup and after every
+    capacity growth: `resolve` refuses to benchmark under an ambient JAX
+    trace, so without a prewarmed memo the traced step would silently run
+    the priority-order fallback instead of the measured winner."""
+    return {
+        op: resolve(
+            op, requested, order=order, grid_shape=grid_shape, capacity=capacity,
+            n_bins=n_bins, dtype=dtype, interpret=interpret, sharded=sharded,
+        )
+        for op in ops_
+    }
 
 
 def demote(
@@ -242,14 +355,25 @@ def demote(
     capacity: int = 0,
     n_bins: int | None = None,
     dtype: str = "float32",
+    interpret: bool | None = None,
+    sharded: bool = False,
 ) -> str | None:
     """The fault supervisor's remediation rung: the next backend down the
     priority ladder from what ``current`` resolves to for the fused
     deposition op (the op every config runs), or None when already at the
-    bottom — generalizing the old hard-coded "drop Pallas" toggle."""
+    bottom — generalizing the old hard-coded "drop Pallas" toggle.
+
+    NEVER benchmarks: this runs mid-error-recovery, where re-executing the
+    very kernels suspected of the non-finite/invariant halt is the last
+    thing remediation should do. An unmeasured "auto" resolves from the
+    memo/cache, else to priority order — which is exactly the backend an
+    unmeasured traced step actually ran, so the demotion steps down from
+    the true effective backend either way. Pass the step's actual ``dtype``
+    (and ``interpret``, if the step forced it) so the key matches the run."""
     effective = resolve(
         "deposit_fused", current, order=order, grid_shape=grid_shape,
-        capacity=capacity, n_bins=n_bins, dtype=dtype,
+        capacity=capacity, n_bins=n_bins, dtype=dtype, interpret=interpret,
+        sharded=sharded, allow_benchmark=False,
     )
     ladder = sorted(BACKEND_PRIORITY, key=BACKEND_PRIORITY.get, reverse=True)
     below = [n for n in ladder if BACKEND_PRIORITY[n] < BACKEND_PRIORITY[effective]]
@@ -294,13 +418,10 @@ def record(
         interpret=resolve_interpret(interpret),
     )
     winner = min(timings_us, key=timings_us.get)
-    path = cache_path()
-    entries = _load_cache(path)
-    entries[key.cache_key()] = {
+    _merge_store(cache_path(), key.cache_key(), {
         "backend": winner,
         "timings_us": {n: round(float(us), 1) for n, us in timings_us.items()},
-    }
-    _store_cache(path, entries)
+    })
     _MEMO.pop((key, "auto"), None)
     return winner
 
@@ -310,7 +431,7 @@ def record(
 # ---------------------------------------------------------------------------
 
 
-def _load_cache(path: str) -> dict:
+def _load_cache(path: str, quiet: bool = False) -> dict:
     if not os.path.exists(path):
         return {}
     try:
@@ -320,13 +441,25 @@ def _load_cache(path: str) -> dict:
             raise ValueError(f"unexpected schema (want version {CACHE_VERSION})")
         return data["entries"]
     except (OSError, ValueError) as e:
-        warnings.warn(
-            f"autotune cache {path!r} is corrupt ({e}); ignoring it and "
-            "re-benchmarking — the file will be rewritten",
-            RuntimeWarning,
-            stacklevel=3,
-        )
+        if not quiet:
+            warnings.warn(
+                f"autotune cache {path!r} is corrupt ({e}); ignoring it and "
+                "re-benchmarking — the file will be rewritten",
+                RuntimeWarning,
+                stacklevel=3,
+            )
         return {}
+
+
+def _merge_store(path: str, ck: str, entry: dict) -> None:
+    """Write one entry with merge-on-write: re-load the file immediately
+    before replacing it so concurrent processes (multi-process distributed
+    runs share the default CWD cache path) updating DIFFERENT keys don't
+    drop each other's entries — os.replace only prevents torn files, not
+    lost updates from a stale read-modify-write."""
+    entries = _load_cache(path, quiet=True)
+    entries[ck] = entry
+    _store_cache(path, entries)
 
 
 def _store_cache(path: str, entries: dict) -> None:
@@ -343,7 +476,9 @@ def _store_cache(path: str, entries: dict) -> None:
 
 def _benchmark(key: DispatchKey, candidates: list[Backend]) -> tuple[str, dict]:
     """Interleaved-round timing of each candidate's synthetic thunk; returns
-    (winner name, per-backend median microseconds)."""
+    (winner name, per-backend median microseconds). Precondition: no ambient
+    JAX trace (resolve guards this) — the thunks must really execute so
+    block_until_ready fences device work."""
     counters["benchmark"] += 1
     thunks = {b.name: b.make_thunk(key) for b in candidates}
     for fn in thunks.values():  # compile/warm outside the timed rounds
@@ -370,9 +505,13 @@ def _always(_key: DispatchKey) -> bool:
 
 
 def _pallas_ok(key: DispatchKey) -> bool:
+    # pallas_call has no shard_map replication rule (on any platform), so
+    # ops traced inside a shard body can never route to Pallas. Otherwise:
     # Mosaic compiles on TPU; everywhere else the kernels need the
     # interpreter — with interpret forced off on a non-TPU platform the
     # Pallas backends are unavailable and resolution falls back to XLA.
+    if key.sharded:
+        return False
     return key.platform == "tpu" or key.interpret
 
 

@@ -98,6 +98,7 @@ from repro.pic.distributed import (
     make_dist_step,
     partition_particles,
     psum_all,
+    resolve_sharded_backend,
 )
 from repro.pic.grid import FieldState, GridSpec
 from repro.pic.plasma import ParticleState
@@ -177,6 +178,7 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
     sentinel-off run. With ``with_fault`` the chaos-harness injection
     (distributed.fault) is compiled in, keyed on the traced `fault_vec`.
     """
+    cfg = resolve_sharded_backend(cfg)  # concrete name baked at build time
     n_shards = _mesh_axis_sizes(mesh, cfg.x_axes + cfg.y_axes)
     n_slots_total = n_shards * cfg.local_grid.n_cells * cfg.capacity
     need_energies = with_energies or (health is not None and health.check_energy)
@@ -562,6 +564,7 @@ class DistSimulation:
             PICFaultInjector(_spec.fault)
             if (_spec is not None and _spec.fault is not None) else None
         )
+        self._prewarm_dispatch()
 
     def _default_n_local(self, particles: ParticleState) -> int:
         nx_loc, ny_loc = self.config.local_grid.shape[:2]
@@ -703,15 +706,20 @@ class DistSimulation:
 
     def _demote_backend(self) -> bool:
         """Remediation-ladder rung 3: demote the kernel-dispatch backend to
-        the next backend down the priority ladder (e.g. pallas_reduced ->
-        pallas -> xla), generalizing the old hard-coded "drop Pallas"
-        toggle. Returns False when already at the bottom (the ladder is
-        exhausted)."""
+        the next backend down the priority ladder, generalizing the old
+        hard-coded "drop Pallas" toggle. Returns False when already at the
+        bottom (the ladder is exhausted). `dispatch.demote` never
+        benchmarks — remediation must not re-execute the kernels suspected
+        of the halt. The key carries ``sharded=True`` (the step runs
+        inside shard_map, where only "xla" is available), so on the
+        distributed driver this rung reports exhausted immediately — the
+        run is already on the most conservative backend."""
         from repro.kernels import dispatch
 
         nxt = dispatch.demote(
             self.config.backend, order=self.config.order,
             grid_shape=self.config.local_grid.shape, capacity=self.config.capacity,
+            dtype=str(self.pos.dtype), sharded=True,
         )
         if nxt is None:
             return False
@@ -720,6 +728,25 @@ class DistSimulation:
 
     # Backward-compatible alias for the pre-dispatcher rung name.
     _drop_pallas = _demote_backend
+
+    def _prewarm_dispatch(self) -> None:
+        """Resolve the config's "auto" dispatch keys EAGERLY so the traced
+        shard_map window hits the memo. Keys use the LOCAL grid — the
+        shape the per-shard step resolves at — and ``sharded=True``:
+        Pallas cannot run inside shard_map, so resolution is trivially
+        "xla" with no benchmark (the window builders additionally bake the
+        concrete name via `resolve_sharded_backend`). Re-run after
+        anything that changes the key (capacity growth, restore)."""
+        if self.config.backend != "auto":
+            return
+        from repro.kernels import dispatch
+
+        dispatch.prewarm(
+            dispatch.ops_for_modes(self.config.deposition, self.config.gather),
+            order=self.config.order, grid_shape=self.config.local_grid.shape,
+            capacity=self.config.capacity, dtype=str(self.pos.dtype),
+            sharded=True,
+        )
 
     def _run_host(self, n_steps: int, diagnostics_every: int) -> None:
         import time
@@ -782,6 +809,7 @@ class DistSimulation:
             assert self.config.capacity <= 2 * max(self.n_local, 1), (
                 "binning overflow persists with capacity > n_local"
             )
+            self._prewarm_dispatch()  # capacity is part of the dispatch key
 
     def _needed_capacity(self) -> int:
         """Occupancy of the densest (shard, cell) pair in the CURRENT state
@@ -835,6 +863,7 @@ class DistSimulation:
             ps >= 0, (ps // old_cap) * new_cap + ps % old_cap, ps
         )
         self._pending_presort = True
+        self._prewarm_dispatch()  # capacity is part of the dispatch key
 
     def _grow_mig_cap(self) -> None:
         self.config = dataclasses.replace(self.config, mig_cap=self.config.mig_cap * 2)

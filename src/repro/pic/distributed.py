@@ -294,6 +294,24 @@ def in_domain(pos, shape):
     return (x >= 0) & (x < shape[0]) & (y >= 0) & (y < shape[1])
 
 
+def resolve_sharded_backend(cfg: DistConfig) -> DistConfig:
+    """Bake ``cfg.backend`` into a concrete dispatcher name for shard_map
+    use. ``pallas_call`` has no shard_map replication rule, so the Pallas
+    backends are unavailable inside the shard body (``sharded=True`` key
+    axis) and both "auto" and a forced Pallas name resolve to "xla" — with
+    no benchmark, and eagerly, at build time: the shard body then traces
+    with the concrete name only. Every builder that traces
+    `dist_pic_step_local` must go through this."""
+    from repro.kernels import dispatch
+
+    name = dispatch.resolve(
+        dispatch.OP_BY_DEPOSITION[cfg.deposition], cfg.backend,
+        order=cfg.order, grid_shape=cfg.local_grid.shape,
+        capacity=cfg.capacity, sharded=True,
+    )
+    return dataclasses.replace(cfg, backend=name)
+
+
 def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, slab_valid, cfg: DistConfig,
                         *, mid_pos=None, mid_u=None, use_mid=None):
     """Body executed per shard inside shard_map. fields: 6-tuple of local
@@ -499,6 +517,7 @@ def make_dist_step(mesh, cfg: DistConfig):
       particles: (SX, SY, Nloc, ...) sharded on the two leading axes.
     """
     validate_shard_guard(cfg.local_grid, cfg.order)
+    cfg = resolve_sharded_backend(cfg)
     fspec = P(cfg.x_axes, cfg.y_axes, None)
 
     def spec(*extra):

@@ -732,6 +732,7 @@ class Simulation:
             state, overflow = init_state(fields, particles, self.config)
             assert overflow == 0, "initial binning overflow after capacity growth"
         self.state = state
+        self._prewarm_dispatch()
         self.policy = ResortPolicy(policy)
         self.policy_state = policy_init()
         self.sorts = 0
@@ -908,12 +909,15 @@ class Simulation:
         the next backend down the priority ladder (e.g. pallas_reduced ->
         pallas -> xla), generalizing the old hard-coded "drop Pallas"
         toggle. Returns False when already at the bottom (the ladder is
-        exhausted)."""
+        exhausted). `dispatch.demote` answers from the memo/cache only —
+        remediation never re-executes the kernels suspected of the halt —
+        and gets the step's actual dtype so the key matches the run."""
         from repro.kernels import dispatch
 
         nxt = dispatch.demote(
             self.config.backend, order=self.config.order,
             grid_shape=self.config.grid.shape, capacity=self.config.capacity,
+            dtype=str(self.state.particles.pos.dtype),
         )
         if nxt is None:
             return False
@@ -922,6 +926,23 @@ class Simulation:
 
     # Backward-compatible alias for the pre-dispatcher rung name.
     _drop_pallas = _demote_backend
+
+    def _prewarm_dispatch(self) -> None:
+        """Resolve the config's "auto" dispatch keys EAGERLY (benchmark +
+        persist on first measurement) so the traced step hits the memoized
+        winner: under an ambient trace `resolve` cannot benchmark and would
+        fall back to priority order. Re-run after anything that changes the
+        key — capacity growth, checkpoint restore."""
+        if self.config.backend != "auto":
+            return
+        from repro.kernels import dispatch
+
+        dispatch.prewarm(
+            dispatch.ops_for_modes(self.config.deposition, self.config.gather),
+            order=self.config.order, grid_shape=self.config.grid.shape,
+            capacity=self.config.capacity,
+            dtype=str(self.state.particles.pos.dtype),
+        )
 
     def _needed_capacity(self) -> int:
         """Occupancy of the densest cell in the CURRENT state — the halt
@@ -950,6 +971,7 @@ class Simulation:
         self.growths["capacity"] = self.growths.get("capacity", 0) + 1
         self.state, overflow = global_sort(self.state, self.config)
         assert overflow == 0, "binning overflow persists after sizing capacity to the densest cell"
+        self._prewarm_dispatch()  # capacity is part of the dispatch key
 
     def diagnostics(self) -> dict:
         s = self.state

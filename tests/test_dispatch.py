@@ -88,12 +88,42 @@ def test_forced_interpret_off_disables_pallas_backends():
     are unavailable: auto has one candidate (no benchmark), and forcing
     "pallas" falls back to the best available backend at or below its
     priority — xla."""
-    assert jax.default_backend() != "tpu"
+    if jax.default_backend() == "tpu":
+        pytest.skip("on TPU the Pallas backends compile without the interpreter; "
+                    "this test exercises the non-TPU forced-compiled fallback")
     kw = dict(order=2, grid_shape=(4, 4, 4), capacity=4, interpret=False)
     assert dispatch.resolve("deposit_fused", "auto", **kw) == "xla"
     assert dispatch.counters["benchmark"] == 0
     assert dispatch.resolve("deposit_fused", "pallas", **kw) == "xla"
     assert dispatch.resolve("deposit_fused", "pallas_reduced", **kw) == "xla"
+
+
+def test_sharded_key_disables_pallas_backends():
+    """pallas_call has no shard_map replication rule, so a sharded key has
+    exactly one candidate — "xla" — and resolution (even "auto") never
+    benchmarks; the fault ladder has nowhere to demote to."""
+    kw = dict(order=1, grid_shape=(4, 4, 4), capacity=4, sharded=True)
+    assert dispatch.resolve("deposit_fused", "auto", **kw) == "xla"
+    assert dispatch.resolve("deposit_fused", "pallas_reduced", **kw) == "xla"
+    assert dispatch.counters["benchmark"] == 0
+    assert dispatch.demote("auto", **kw) is None
+
+
+def test_dist_step_builder_bakes_sharded_backend():
+    """The distributed step builders bake cfg.backend into a concrete
+    shard-safe name at build time — "auto" (and a forced Pallas name)
+    become "xla" before the shard body traces."""
+    from repro.pic.distributed import DistConfig, resolve_sharded_backend
+    from repro.pic.grid import GridSpec
+
+    cfg = DistConfig(local_grid=GridSpec(shape=(4, 4, 4)), dt=0.1)
+    assert cfg.backend == "auto"
+    baked = resolve_sharded_backend(cfg)
+    assert baked.backend == "xla"
+    assert resolve_sharded_backend(
+        dataclasses.replace(cfg, backend="pallas_reduced")
+    ).backend == "xla"
+    assert dispatch.counters["benchmark"] == 0
 
 
 def test_forced_name_never_escalates():
@@ -124,10 +154,13 @@ def test_auto_benchmarks_once_then_hits_cache():
     # same process, cold memo: resolve from the file, no re-benchmark
     dispatch.clear_memo()
     assert dispatch.resolve("deposit_fused", "auto", **kw) == name
-    assert dispatch.counters == {"benchmark": 1, "cache_hit": 1, "memo_hit": 0}
+    assert dispatch.counters["benchmark"] == 1
+    assert dispatch.counters["cache_hit"] == 1
+    assert dispatch.counters["trace_fallback"] == 0
     # warm memo: no file read either
+    hits = dispatch.counters["memo_hit"]
     assert dispatch.resolve("deposit_fused", "auto", **kw) == name
-    assert dispatch.counters["memo_hit"] == 1
+    assert dispatch.counters["memo_hit"] == hits + 1
 
 
 def test_cache_key_distinguishes_shapes():
@@ -166,8 +199,92 @@ def test_wrong_version_cache_is_rejected():
 
 
 # ---------------------------------------------------------------------------
+# trace safety: never benchmark (or persist) under an ambient JAX trace
+# ---------------------------------------------------------------------------
+
+
+def test_auto_under_trace_never_benchmarks_or_persists():
+    """Resolving "auto" inside a jitted body must NOT run the synthetic
+    benchmark (the thunks would be staged, timing Python tracing instead of
+    the device) and must NOT write the cache: it falls back to priority
+    order with a warning, leaving the key free for a later eager resolve
+    to measure for real."""
+    import os
+
+    kw = dict(order=1, grid_shape=(4, 4, 4), capacity=4)
+    seen = {}
+
+    @jax.jit
+    def f(x):
+        seen["name"] = dispatch.resolve("deposit_fused", "auto", **kw)
+        return x + 1
+
+    with pytest.warns(RuntimeWarning, match="under a JAX trace"):
+        f(jnp.zeros(2))
+    table = dispatch.backends_for("deposit_fused")
+    best = max(table.values(), key=lambda b: b.priority).name
+    assert seen["name"] == best  # priority-order fallback
+    assert dispatch.counters["benchmark"] == 0
+    assert dispatch.counters["trace_fallback"] == 1
+    assert not os.path.exists(dispatch.cache_path())  # nothing persisted
+
+    # the fallback is NOT memoized: the same key resolved eagerly now
+    # benchmarks for real and persists the measured winner
+    name = dispatch.resolve("deposit_fused", "auto", **kw)
+    assert dispatch.counters["benchmark"] == 1
+    assert name in table
+    entries = json.load(open(dispatch.cache_path()))["entries"]
+    assert all(us > 0 for us in next(iter(entries.values()))["timings_us"].values())
+
+
+def test_eager_entry_point_resolves_before_tracing():
+    """fused_deposit_grids(backend="auto") called eagerly resolves (and
+    benchmarks) BEFORE its jitted impl traces — no trace fallback."""
+    from repro.core.deposition import fused_deposit_grids
+
+    d, val = _slab((4, 4, 4), cap=4)
+    fused_deposit_grids(d, val, grid_shape=(4, 4, 4), order=1, backend="auto")
+    assert dispatch.counters["benchmark"] == 1
+    assert dispatch.counters["trace_fallback"] == 0
+
+
+def test_simulation_setup_prewarms_auto_keys():
+    """The sim driver resolves its "auto" keys eagerly at setup, so the
+    traced step hits the memo — no trace fallback, and the winner was
+    genuinely measured."""
+    from repro.api import make_simulation, scenario
+
+    spec = scenario("uniform", steps=2, grid=(4, 4, 4), ppc=1, order=1)
+    sim = make_simulation(spec)
+    assert sim.config.backend == "auto"
+    assert dispatch.counters["benchmark"] == 2  # deposit_fused + gather_fused
+    before = dispatch.counters["trace_fallback"]
+    sim.run(2, window=2)
+    assert dispatch.counters["trace_fallback"] == before
+    assert dispatch.counters["benchmark"] == 2  # window resolved from memo
+
+
+# ---------------------------------------------------------------------------
 # demotion ladder
 # ---------------------------------------------------------------------------
+
+
+def test_demote_never_benchmarks():
+    """The fault supervisor's rung must not re-execute the suspect kernels
+    mid-recovery: demoting an unmeasured "auto" answers from priority order
+    without running the synthetic benchmark or writing the cache."""
+    import os
+
+    kw = dict(order=1, grid_shape=(4, 4, 4), capacity=4)
+    nxt = dispatch.demote("auto", **kw)
+    table = dispatch.backends_for("deposit_fused")
+    best = max(table.values(), key=lambda b: b.priority).name
+    if best == "xla":
+        assert nxt is None
+    else:
+        assert dispatch.BACKEND_PRIORITY[nxt] < dispatch.BACKEND_PRIORITY[best]
+    assert dispatch.counters["benchmark"] == 0
+    assert not os.path.exists(dispatch.cache_path())
 
 
 def test_demote_walks_priority_ladder():
