@@ -1,0 +1,183 @@
+"""Batched-ensemble sweep: vmapped engine vs N sequential runs -> BENCH_ensemble.json.
+
+Times `EnsembleSimulation.run` (ONE vmapped window executable advancing all
+N members per compiled call) against the sequential baseline (the same N
+members as N independent `Simulation.run` windowed drivers, one after the
+other) across bucket sizes:
+
+    PYTHONPATH=src python -m benchmarks.run --only ensemble_sweep \
+        --ensemble-json BENCH_ensemble.json [--scenario uniform]
+
+Both paths run the identical jitted step math and identical policy
+thresholds (wall-clock trigger disabled); the measured delta is what the
+ensemble engine actually batches away — N-1 compiled-call dispatches, N-1
+bundle fetches, and N-1 host policy/accounting loops per window — plus
+whatever the backend gains from the batched contraction shapes.
+
+The workload is deliberately small (the sweep measures DRIVER batching, not
+kernel throughput): on CPU the per-window overheads are sub-millisecond, so
+they are only visible against a small step; on a real accelerator the same
+dispatches stall the pipeline and dominate at any size.
+
+Schema: {"meta": {...workload...},
+         "results": {"members<N>": {"vmapped_us", "sequential_us", "speedup",
+                                    "vmapped_members_per_s",
+                                    "sequential_members_per_s",
+                                    "ensemble_spec": {...serialized EnsembleSpec...}}},
+         "acceptance": {"<scenario>_members<mid>_vmapped_speedup": x}}
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+from benchmarks.common import emit, time_grid
+from repro.api import EnsembleSpec, make_ensemble, make_simulation, scenario
+from repro.core import ResortPolicy, SortPolicyConfig, policy_init
+
+STEPS = 16
+WINDOW = 8
+ORDER = 2
+GRID = (4, 4, 4)
+PPC_EACH_DIM = (2, 2, 1)
+MEMBERS_AXIS = (2, 4, 8)
+ROUNDS = 7
+
+
+def _base_spec(scenario_name: str, *, grid=GRID, steps=STEPS, window=WINDOW):
+    return scenario(
+        scenario_name,
+        grid=grid,
+        ppc_each_dim=PPC_EACH_DIM,
+        u_thermal=0.05,
+        perturb=None,
+        order=ORDER,
+        deposition="matrix",
+        sort="incremental",
+        capacity=16,
+        steps=steps,
+        window=window,
+        # backend pinned: the sweep measures driver batching, not the
+        # autotuner's (batch-dependent) kernel choice
+        backend="xla",
+        policy=SortPolicyConfig(sort_trigger_perf_enable=False),
+    )
+
+
+def _ensemble_thunk(ens_run, steps: int, window: int):
+    """Fresh vmapped run from the stacked initial state each call (copies:
+    the window donates its input buffers)."""
+    [sim] = ens_run.sims  # replicate() => one bucket by construction
+    state0 = jax.tree.map(lambda a: a.copy(), sim.state)
+    pstate0 = jax.tree.map(lambda a: a.copy(), sim.policy_state)
+
+    def thunk():
+        sim.state = jax.tree.map(lambda a: a.copy(), state0)
+        sim.policy_state = jax.tree.map(lambda a: a.copy(), pstate0)
+        sim.host_step[:] = 0
+        sim.sorts[:] = 0
+        sim.rebuilds[:] = 0
+        sim.histories = [[] for _ in range(sim.n_members)]
+        sim.run(steps, window=window)
+        return sim.state.fields.ex
+
+    return thunk
+
+
+def _sequential_thunk(sims, steps: int, window: int):
+    """The same members as N independent windowed drivers, back to back."""
+    initial = [
+        (jax.tree.map(lambda a: a.copy(), s.state), s.config, s.policy.config)
+        for s in sims
+    ]
+
+    def thunk():
+        out = None
+        for sim, (state0, cfg0, policy_cfg) in zip(sims, initial):
+            sim.state = jax.tree.map(lambda a: a.copy(), state0)
+            sim.config = cfg0
+            sim.policy = ResortPolicy(policy_cfg)
+            sim.policy_state = policy_init()
+            sim.sorts = sim.rebuilds = 0
+            sim._host_step = 0
+            sim.history = []
+            sim.run(steps, window=window)
+            out = sim.state.fields.ex
+        return out
+
+    return thunk
+
+
+def collect(*, label: str = "ensemble", scenario_name: str = "uniform",
+            members_axis=MEMBERS_AXIS, grid=GRID, steps=STEPS, window=WINDOW,
+            rounds: int = ROUNDS) -> dict:
+    """Run the sweep, emit CSV rows, and return the JSON-able payload."""
+    base = _base_spec(scenario_name, grid=grid, steps=steps, window=window)
+    results: dict[str, dict] = {}
+    for n in members_axis:
+        es = EnsembleSpec.replicate(base, n)
+        ens_run = make_ensemble(es)
+        sims = [make_simulation(m) for m in es.members()]
+        row = time_grid({
+            "vmapped": _ensemble_thunk(ens_run, steps, window),
+            "sequential": _sequential_thunk(sims, steps, window),
+        }, rounds=rounds)
+        speedup = row["sequential"] / row["vmapped"]
+        results[f"members{n}"] = {
+            "vmapped_us": row["vmapped"],
+            "sequential_us": row["sequential"],
+            "speedup": speedup,
+            "vmapped_members_per_s": n / (row["vmapped"] / 1e6),
+            "sequential_members_per_s": n / (row["sequential"] / 1e6),
+            "ensemble_spec": es.to_dict(),
+        }
+        emit(f"{label}/members{n}/sequential", row["sequential"], f"{n} runs of {steps} steps")
+        emit(f"{label}/members{n}/vmapped", row["vmapped"],
+             f"one executable, speedup={speedup:.2f}x")
+
+    mid = members_axis[len(members_axis) // 2]
+    n_parts = grid[0] * grid[1] * grid[2] * PPC_EACH_DIM[0] * PPC_EACH_DIM[1] * PPC_EACH_DIM[2]
+    return {
+        "meta": {
+            "scenario": scenario_name,
+            "grid": list(grid),
+            "ppc_each_dim": list(PPC_EACH_DIM),
+            "n_particles_per_member": n_parts,
+            "order": ORDER,
+            "steps": steps,
+            "window": window,
+            "members_axis": list(members_axis),
+            "backend": jax.default_backend(),
+            "note": (
+                f"us per full run, median over {rounds} interleaved rounds "
+                "(time_grid: drift-robust on shared CPUs); vmapped = one "
+                "EnsembleSimulation (one compiled vmapped window for all "
+                "members), sequential = the same members as N independent "
+                "windowed drivers run back to back; identical step math and "
+                "sort decisions on both. Each row embeds the exact serialized "
+                "EnsembleSpec it measured."
+            ),
+        },
+        "results": results,
+        "acceptance": {
+            f"{scenario_name}_members{mid}_vmapped_speedup":
+                results[f"members{mid}"]["speedup"],
+        },
+    }
+
+
+def write_json(path: str, *, scenario_name: str = "uniform") -> None:
+    payload = collect(scenario_name=scenario_name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}")
+
+
+def main(*, scenario_name: str = "uniform") -> None:
+    collect(scenario_name=scenario_name)
+
+
+if __name__ == "__main__":
+    main()

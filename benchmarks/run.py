@@ -24,6 +24,7 @@ MODULES = [
     "gather_sweep",       # per-kernel gather regression (see --gather-json)
     "sim_loop_sweep",     # host-driven vs device-resident loop (see --sim-json)
     "dist_sweep",         # distributed windowed vs per-step loop (see --dist-json)
+    "ensemble_sweep",     # vmapped ensemble vs sequential runs (see --ensemble-json)
 ]
 
 
@@ -38,6 +39,21 @@ def run_smoke() -> None:
     deposition_sweep.collect(grid=(4, 4, 4), ppc=1, rounds=2, label="smoke/deposition_sweep")
     gather_sweep.collect(grid=(4, 4, 4), ppc=1, rounds=2, label="smoke/gather_sweep")
     smoke_dispatch()
+    smoke_ensemble()
+
+
+def smoke_ensemble() -> None:
+    """Ensemble lane: a tiny 2-member bucket through the vmapped-vs-
+    sequential sweep driver (both paths compile and run; no JSON written).
+    The service itself is smoked separately by
+    ``python -m repro.launch.sim_serve --smoke`` in CI."""
+    from benchmarks import ensemble_sweep
+
+    payload = ensemble_sweep.collect(
+        label="smoke/ensemble_sweep", members_axis=(2,), steps=4, window=2,
+        rounds=2,
+    )
+    assert "members2" in payload["results"]
 
 
 def smoke_dispatch() -> None:
@@ -111,6 +127,13 @@ def main() -> None:
         "windowed shard_map, forced 8 host devices) as JSON (BENCH_dist.json)",
     )
     ap.add_argument(
+        "--ensemble-json",
+        metavar="PATH",
+        default=None,
+        help="also write the batched-ensemble sweep (vmapped engine vs "
+        "sequential runs) as JSON (BENCH_ensemble.json)",
+    )
+    ap.add_argument(
         "--scenario",
         metavar="NAME",
         default="uniform",
@@ -130,6 +153,7 @@ def main() -> None:
         ("--gather-json", args.gather_json, "gather_sweep"),
         ("--sim-json", args.sim_json, "sim_loop_sweep"),
         ("--dist-json", args.dist_json, "dist_sweep"),
+        ("--ensemble-json", args.ensemble_json, "ensemble_sweep"),
     ):
         if value and mod not in mods:
             print(
@@ -161,8 +185,13 @@ def main() -> None:
 
                 write_json(args.dist_json, scenario_name=args.scenario)
                 continue
+            if name == "ensemble_sweep" and args.ensemble_json:
+                from benchmarks.ensemble_sweep import write_json
+
+                write_json(args.ensemble_json, scenario_name=args.scenario)
+                continue
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            if name in ("sim_loop_sweep", "dist_sweep"):
+            if name in ("sim_loop_sweep", "dist_sweep", "ensemble_sweep"):
                 mod.main(scenario_name=args.scenario)
             else:
                 mod.main()

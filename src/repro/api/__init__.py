@@ -12,16 +12,22 @@ See docs/api.md.
 """
 
 from repro.api.facade import (  # noqa: F401
+    EnsembleRun,
     SimCheckpointer,
     SimDriver,
+    bucket_specs,
     build_fields,
     build_particles,
     dist_config,
     load_simulation,
+    make_ensemble,
     make_simulation,
     pic_config,
+    restore_ensemble_member,
     restore_simulation,
+    save_ensemble_member,
     save_simulation,
+    spec_signature,
 )
 from repro.api.registry import (  # noqa: F401
     apply_overrides,
@@ -34,6 +40,7 @@ from repro.api.registry import (  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     DepositionSpec,
     DriftSpec,
+    EnsembleSpec,
     FaultSpec,
     HealthConfig,
     MeshSpec,

@@ -31,11 +31,13 @@ from typing import Protocol, runtime_checkable
 import jax
 import numpy as np
 
-from repro.api.spec import SimSpec
+from repro.api.spec import EnsembleSpec, SimSpec
 from repro.checkpoint.checkpoint import (
     _flatten_with_names,
     array_checksums,
     clean_stale_tmp,
+    tree_member_set,
+    tree_member_slice,
     verify_checksums,
 )
 from repro.pic.grid import FieldState, GridSpec
@@ -49,16 +51,22 @@ from repro.pic.plasma import (
 )
 
 __all__ = [
+    "EnsembleRun",
     "SimCheckpointer",
     "SimDriver",
+    "bucket_specs",
     "build_fields",
     "build_particles",
     "dist_config",
     "load_simulation",
+    "make_ensemble",
     "make_simulation",
     "pic_config",
+    "restore_ensemble_member",
     "restore_simulation",
+    "save_ensemble_member",
     "save_simulation",
+    "spec_signature",
 ]
 
 
@@ -219,6 +227,152 @@ def make_simulation(spec: SimSpec, *, fields: FieldState | None = None,
         policy=policy,
         _spec=spec,
     )
+
+
+# ---------------------------------------------------------------------------
+# Ensembles: spec signatures, shape bucketing, the batched facade
+# ---------------------------------------------------------------------------
+
+
+def spec_signature(spec: SimSpec) -> str:
+    """Canonical compile-shape signature of a single-device spec: two specs
+    with the same signature run the SAME compiled window program (identical
+    `PICConfig`, sort policy, window length, and particle count) and may
+    share one vmapped executable — this is the ensemble bucketing key AND
+    the serving layer's compiled-executable cache key.
+
+    Physics that lives in the initial conditions (seed, density, thermal
+    spread, drift/perturb/laser/profile parameters) deliberately does NOT
+    enter the signature: it changes array VALUES, not the program.
+    """
+    import hashlib
+
+    if spec.mesh.shape is not None:
+        raise ValueError(
+            f"spec {spec.name!r} names a device mesh {spec.mesh.shape}; "
+            "signatures (and the ensemble engine) cover single-device specs"
+        )
+    cfg = pic_config(spec)
+    payload = {
+        "grid": list(cfg.grid.shape),
+        "dx": list(cfg.grid.dx),
+        "dt": cfg.dt,
+        "order": cfg.order,
+        "deposition": cfg.deposition,
+        "gather": cfg.gather,
+        "sort_mode": cfg.sort_mode,
+        "charge": cfg.charge,
+        "mass": cfg.mass,
+        "ckc_beta": cfg.ckc_beta,
+        "capacity": cfg.capacity,
+        "backend": cfg.backend,
+        "policy": dataclasses.asdict(spec.sort.policy),
+        "window": spec.run.window,
+        "n_particles": spec.grid.n_cells * spec.plasma.ppc,
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def bucket_specs(specs) -> dict:
+    """Group spec indices by signature (insertion-ordered):
+    ``{signature: [member indices]}``. Each bucket is one compiled
+    executable's worth of compatible members."""
+    buckets: dict[str, list[int]] = {}
+    for i, spec in enumerate(specs):
+        buckets.setdefault(spec_signature(spec), []).append(i)
+    return buckets
+
+
+class EnsembleRun:
+    """The member-indexed facade over one or more shape buckets.
+
+    `make_ensemble` builds one `EnsembleSimulation` per signature bucket;
+    this object keeps the member's-eye view: member ``i`` of the
+    `EnsembleSpec` maps to ``(bucket, slot)`` and every accessor
+    (`diagnostics`, `history`, `save_member`, ...) takes the GLOBAL member
+    index. ``run`` advances the buckets one after another — each bucket is
+    a single vmapped executable; buckets are independent programs.
+    """
+
+    def __init__(self, spec: EnsembleSpec, members: list[SimSpec],
+                 sims: list, slots: list[tuple[int, int]]):
+        self.spec = spec
+        self.members = members
+        self.sims = sims
+        self._slots = slots
+
+    @property
+    def n_members(self) -> int:
+        return len(self.members)
+
+    @property
+    def signatures(self) -> list[str]:
+        return [spec_signature(m) for m in self.members]
+
+    def slot(self, i: int) -> tuple[int, int]:
+        """Global member index -> (bucket index, slot within the bucket)."""
+        return self._slots[i]
+
+    def run(self, n_steps: int | None = None, *, diagnostics_every: int | None = None,
+            window: int | None = None, on_window=None) -> None:
+        for sim in self.sims:
+            sim.run(n_steps, diagnostics_every=diagnostics_every, window=window,
+                    on_window=on_window)
+
+    def diagnostics(self, i: int | None = None):
+        if i is None:
+            return [self.diagnostics(j) for j in range(self.n_members)]
+        b, s = self._slots[i]
+        d = self.sims[b].diagnostics(s)
+        return dict(d, member=i)
+
+    def history(self, i: int) -> list[dict]:
+        b, s = self._slots[i]
+        return self.sims[b].histories[s]
+
+    def member_state(self, i: int):
+        b, s = self._slots[i]
+        return self.sims[b].member_state(s)
+
+    def save_member(self, i: int, path: str) -> None:
+        b, s = self._slots[i]
+        save_ensemble_member(self.sims[b], s, path)
+
+    def restore_member(self, i: int, path: str) -> None:
+        b, s = self._slots[i]
+        restore_ensemble_member(self.sims[b], s, path)
+
+
+def make_ensemble(spec: EnsembleSpec, *, window_fn_for=None) -> EnsembleRun:
+    """Build the batched driver(s) an `EnsembleSpec` describes: members are
+    bucketed by `spec_signature` and each bucket becomes ONE
+    `pic.ensemble.EnsembleSimulation` (one compiled window executable for
+    all its members).
+
+    ``window_fn_for`` (optional): ``signature -> window_fn`` supplying each
+    bucket's jitted window callable — the serving layer passes its
+    signature-keyed `ExecutableCache` lookup here so executables are shared
+    and evicted across jobs; ``None`` uses the shared module-level jit.
+    """
+    from repro.pic.ensemble import EnsembleSimulation
+
+    members = spec.members()
+    buckets = bucket_specs(members)
+    slots: list[tuple[int, int] | None] = [None] * len(members)
+    sims = []
+    for b, (sig, idxs) in enumerate(buckets.items()):
+        bucket_specs_ = [members[i] for i in idxs]
+        pairs = [(build_fields(m), build_particles(m)) for m in bucket_specs_]
+        sims.append(EnsembleSimulation(
+            pairs, pic_config(bucket_specs_[0]),
+            policy=bucket_specs_[0].sort.policy,
+            specs=bucket_specs_,
+            window_fn=None if window_fn_for is None else window_fn_for(sig),
+        ))
+        for s, i in enumerate(idxs):
+            slots[i] = (b, s)
+    return EnsembleRun(spec, members, sims, slots)
 
 
 # ---------------------------------------------------------------------------
@@ -449,6 +603,88 @@ def load_simulation(path: str) -> "SimDriver":
     sim = make_simulation(spec)
     restore_simulation(sim, path)
     return sim
+
+
+def save_ensemble_member(ens, i: int, path: str) -> None:
+    """Checkpoint ONE member out of a stacked ensemble state as a standard
+    single-driver checkpoint: `load_simulation(path)` rebuilds it as a
+    standalone `Simulation` (when the member has a spec) and
+    `restore_ensemble_member` installs it back into an ensemble slot."""
+    spec = ens.specs[i]
+    tree = {
+        "state": tree_member_slice(ens.state, i),
+        "policy_state": tree_member_slice(ens.policy_state, i),
+    }
+    meta = {
+        "driver": "single",
+        "spec": None if spec is None else spec.to_dict(),
+        "scalars": {
+            "sorts": int(ens.sorts[i]),
+            "rebuilds": int(ens.rebuilds[i]),
+            "host_step": int(ens.host_step[i]),
+            "capacity": ens.config.capacity,
+            # the ensemble path drives the DEVICE policy only; a standalone
+            # resume starts its host-loop policy counters fresh
+            "host_policy": {
+                "steps_since_sort": 0,
+                "rebuilds_since_sort": 0,
+                "baseline_perf": None,
+                "perf_ema": None,
+            },
+            "history": ens.histories[i],
+            "growths": dict(ens.growths),
+            "halts": dict(ens.halts),
+            "retries": 0,
+            "restarts": 0,
+            "discarded_steps": 0,
+        },
+    }
+    _write_dir(path, tree, meta)
+
+
+def restore_ensemble_member(ens, i: int, path: str) -> None:
+    """Install a single-driver checkpoint into slot ``i`` of a stacked
+    ensemble. The checkpoint may carry a DIFFERENT bin capacity (it was
+    grown independently, or the ensemble grew since the save): the member
+    is re-binned — permutation-free, so its continuation stays bit-exact —
+    at the ensemble's capacity. A member too dense for the ensemble's
+    current capacity is refused (grow the ensemble first); grid and
+    particle count must match the slot exactly."""
+    arrays, meta = _read_dir(path)
+    if meta["driver"] != "single":
+        raise ValueError(
+            f"ensemble member slots take 'single' driver checkpoints, got "
+            f"{meta['driver']!r}"
+        )
+    scal = meta["scalars"]
+    template = {
+        "state": tree_member_slice(ens.state, i),
+        "policy_state": tree_member_slice(ens.policy_state, i),
+    }
+    restored = _restore_tree(template, arrays)
+    state = restored["state"]
+    want = template["state"].particles.pos.shape
+    got = state.particles.pos.shape
+    if tuple(want) != tuple(got):
+        raise ValueError(
+            f"checkpoint carries {got[0]} particles but ensemble slot {i} "
+            f"holds {want[0]} — the member belongs to a different bucket"
+        )
+    if int(scal["capacity"]) != ens.config.capacity:
+        state, overflow = ens._rebin(state)
+        if overflow:
+            raise ValueError(
+                f"checkpointed member is denser than the ensemble capacity "
+                f"{ens.config.capacity} (saved capacity {scal['capacity']}); "
+                "grow the ensemble before restoring this member"
+            )
+    ens.state = tree_member_set(ens.state, i, state)
+    ens.policy_state = tree_member_set(ens.policy_state, i, restored["policy_state"])
+    ens.host_step[i] = int(scal["host_step"])
+    ens.sorts[i] = int(scal["sorts"])
+    ens.rebuilds[i] = int(scal["rebuilds"])
+    ens.histories[i] = list(scal["history"])
+    ens._prewarm_dispatch()
 
 
 class SimCheckpointer:

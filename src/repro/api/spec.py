@@ -39,6 +39,7 @@ from repro.pic.laser import LaserSpec
 __all__ = [
     "DepositionSpec",
     "DriftSpec",
+    "EnsembleSpec",
     "FaultSpec",
     "HealthConfig",
     "MeshSpec",
@@ -423,3 +424,125 @@ class SimSpec:
     @staticmethod
     def from_json(s: str) -> "SimSpec":
         return SimSpec.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Ensembles: one base spec + per-member flat overrides
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleSpec:
+    """N simulations described as one base `SimSpec` plus per-member flat
+    overrides (the registry's `apply_overrides` vocabulary — ``seed=3``,
+    ``density=0.5``, ``order=2``, ...). One override dict per member; an
+    empty tuple means a single member equal to the base.
+
+    The ensemble engine is single-device: the base spec (and every member)
+    must have ``mesh.shape is None``. Members whose overrides leave the
+    compile-relevant shape unchanged (same grid/capacity/order/backend/...,
+    see `api.facade.spec_signature`) share one compiled window executable;
+    `api.facade.make_ensemble` buckets them automatically.
+
+    Build via `replicate` (seed-staggered copies) and/or `sweep` (cartesian
+    parameter product), or pass explicit override dicts. Unlike `SimSpec`,
+    an `EnsembleSpec` is not hashable (overrides are dicts) — it is a host
+    object, never a jit static.
+    """
+
+    base: SimSpec
+    overrides: tuple = ()
+
+    def __post_init__(self):
+        if self.base.mesh.shape is not None:
+            raise ValueError(
+                "the ensemble engine is single-device: the base spec must have "
+                f"mesh.shape=None, got {self.base.mesh.shape}"
+            )
+        object.__setattr__(self, "overrides", tuple(dict(o) for o in self.overrides))
+
+    @property
+    def n_members(self) -> int:
+        return max(1, len(self.overrides))
+
+    def members(self) -> list[SimSpec]:
+        """The per-member specs: base + overrides, each with a distinct
+        derived name (``<base>-m<i>``) unless the override names it."""
+        from repro.api.registry import apply_overrides  # circular at module scope
+
+        ovs = self.overrides or ({},)
+        out = []
+        for i, ov in enumerate(ovs):
+            ov = dict(ov)
+            ov.setdefault("name", f"{self.base.name}-m{i}")
+            member = apply_overrides(self.base, **ov)
+            if member.mesh.shape is not None:
+                raise ValueError(
+                    f"ensemble member {i} overrides mesh={member.mesh.shape}; "
+                    "the ensemble engine is single-device"
+                )
+            out.append(member)
+        return out
+
+    # -- construction helpers ---------------------------------------------
+
+    @staticmethod
+    def replicate(base: SimSpec, n: int, *, seed_stride: int = 1) -> "EnsembleSpec":
+        """``n`` copies of ``base`` with staggered plasma seeds — the
+        uncertainty-ensemble shape (identical physics knobs, independent
+        initial conditions, one compiled executable)."""
+        if n < 1:
+            raise ValueError(f"ensemble size must be >= 1, got {n}")
+        seed0 = base.plasma.seed
+        return EnsembleSpec(
+            base=base,
+            overrides=tuple({"seed": seed0 + i * seed_stride} for i in range(n)),
+        )
+
+    @staticmethod
+    def sweep(base: SimSpec, axes: dict, *, replicas: int = 1,
+              seed_stride: int = 1) -> "EnsembleSpec":
+        """Cartesian product over ``axes`` ({override name: [values...]}),
+        optionally crossed with ``replicas`` seed-staggered copies per
+        combination. Axis names are validated against the registry's flat
+        override vocabulary by `members()`/`apply_overrides`."""
+        import itertools
+
+        names = list(axes)
+        combos = list(itertools.product(*(axes[k] for k in names))) or [()]
+        seed0 = base.plasma.seed
+        overrides = []
+        for combo in combos:
+            point = dict(zip(names, combo))
+            for r in range(max(1, replicas)):
+                ov = dict(point)
+                if replicas > 1 and "seed" not in ov:
+                    ov["seed"] = seed0 + r * seed_stride
+                overrides.append(ov)
+        return EnsembleSpec(base=base, overrides=tuple(overrides))
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "base": self.base.to_dict(),
+            "overrides": [
+                {k: _to_jsonable(v) for k, v in ov.items()} for ov in self.overrides
+            ],
+        }
+
+    def to_json(self, *, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=False)
+
+    @staticmethod
+    def from_dict(d: dict) -> "EnsembleSpec":
+        kw = _pick(EnsembleSpec, dict(d))
+        if "base" not in kw:
+            raise ValueError("EnsembleSpec requires a 'base' entry")
+        kw["base"] = SimSpec.from_dict(kw["base"])
+        kw["overrides"] = tuple(dict(o) for o in kw.get("overrides", ()))
+        return EnsembleSpec(**kw)
+
+    @staticmethod
+    def from_json(s: str) -> "EnsembleSpec":
+        return EnsembleSpec.from_dict(json.loads(s))

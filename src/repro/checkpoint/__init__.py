@@ -2,5 +2,7 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointManager,
     array_checksums,
     clean_stale_tmp,
+    tree_member_set,
+    tree_member_slice,
     verify_checksums,
 )

@@ -38,6 +38,32 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
+def tree_member_slice(tree, i: int):
+    """Member ``i`` of a stacked-ensemble pytree: drop the leading member
+    axis from every leaf (the inverse of `tree_member_set` /
+    `pic.ensemble.stack_trees`)."""
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def tree_member_set(tree, i: int, member):
+    """Write ``member`` (no member axis) into slot ``i`` of a stacked
+    pytree, returning the new stacked tree. Leaf shapes must match the
+    stacked slots exactly — re-bin a checkpointed member at the ensemble's
+    capacity before installing it (api.facade.restore_ensemble_member)."""
+    import jax.numpy as jnp
+
+    def put(a, m):
+        m = jnp.asarray(m)
+        if tuple(a.shape[1:]) != tuple(m.shape):
+            raise ValueError(
+                f"member leaf shape {tuple(m.shape)} does not fit stacked slot "
+                f"{tuple(a.shape)}[{i}]"
+            )
+        return a.at[i].set(m.astype(a.dtype))
+
+    return jax.tree.map(put, tree, member)
+
+
 def array_checksums(host_leaves) -> list[str]:
     """crc32 hex digest per array (over the raw bytes, C order)."""
     return ["%08x" % zlib.crc32(np.ascontiguousarray(a).tobytes()) for a in host_leaves]

@@ -203,6 +203,7 @@ def deposit_matrix(
     bin_matmul: Callable | None = None,
     separable_reduce: bool = True,
     backend: str | None = None,
+    batch: int = 1,
 ):
     """Matrix-PIC deposition for one current component.
 
@@ -222,7 +223,7 @@ def deposit_matrix(
 
         backend = dispatch.resolve(
             "deposit_unfused", backend, order=order, grid_shape=tuple(grid_shape),
-            capacity=layout.slots.shape[1], dtype=str(values.dtype),
+            capacity=layout.slots.shape[1], dtype=str(values.dtype), batch=batch,
         )
     return _deposit_matrix_jit(
         pos, values, layout, grid_shape=tuple(grid_shape), order=order, stagger=stagger,
@@ -354,6 +355,7 @@ def fused_deposit_grids(
     guard: int | None = None,
     backend: str = "xla",
     separable_reduce: bool = True,
+    batch: int = 1,
 ):
     """Post-slab fused deposition: (C, cap, 3) offsets + values ->
     [Jx, Jy, Jz] guard-padded, via the named dispatcher backend. This is
@@ -369,7 +371,7 @@ def fused_deposit_grids(
     g = sf.max_guard(order) if guard is None else guard
     name = dispatch.resolve(
         "deposit_fused", backend, order=order, grid_shape=tuple(grid_shape),
-        capacity=d.shape[1], dtype=str(val.dtype),
+        capacity=d.shape[1], dtype=str(val.dtype), batch=batch,
     )
     return _fused_deposit_grids_jit(
         d, val, grid_shape=tuple(grid_shape), order=order, guard=g,
@@ -428,6 +430,7 @@ def deposit_current_matrix_fused(
     separable_reduce: bool = True,
     slab: BinSlab | None = None,
     backend: str | None = None,
+    batch: int = 1,
 ):
     """All three Yee-staggered current components in one fused pass — the
     default `Simulation` deposition hot path (paper Alg. 2).
@@ -470,7 +473,7 @@ def deposit_current_matrix_fused(
         backend = dispatch.resolve(
             "deposit_fused", backend, order=order, grid_shape=tuple(grid_shape),
             capacity=layout.slots.shape[1],
-            dtype=str(jnp.result_type(vel.dtype, qw.dtype)),
+            dtype=str(jnp.result_type(vel.dtype, qw.dtype)), batch=batch,
         )
     return _deposit_current_matrix_fused_jit(
         pos, vel, qw, layout, grid_shape=tuple(grid_shape), order=order, guard=guard,

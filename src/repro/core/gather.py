@@ -137,7 +137,7 @@ def _gather_matrix_jit(pos, grid_padded, layout: BinnedLayout, *, grid_shape, or
     return jnp.where(pslot >= 0, e_flat[jnp.maximum(pslot, 0)], jnp.zeros((), e_flat.dtype))
 
 
-def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None, bin_gather_op=None, backend: str | None = None):
+def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: int, stagger: Stagger = NO_STAGGER, guard: int | None = None, bin_gather_op=None, backend: str | None = None, batch: int = 1):
     """Binned matrix gather, one component. Returns (Np,) values (0 for
     unslotted particles).
 
@@ -157,7 +157,7 @@ def gather_matrix(pos, grid_padded, layout: BinnedLayout, *, grid_shape, order: 
 
         backend = dispatch.resolve(
             "bin_gather", backend, order=order, grid_shape=tuple(grid_shape),
-            capacity=layout.slots.shape[1], dtype=str(pos.dtype),
+            capacity=layout.slots.shape[1], dtype=str(pos.dtype), batch=batch,
         )
     return _gather_matrix_jit(
         pos, grid_padded, layout, grid_shape=tuple(grid_shape), order=order,
@@ -231,7 +231,7 @@ def _fused_gather_bins_jit(d, padded_fields, *, grid_shape, order, guard, backen
     )
 
 
-def fused_gather_bins(d, padded_fields, *, grid_shape, order: int, guard: int | None = None, backend: str = "xla"):
+def fused_gather_bins(d, padded_fields, *, grid_shape, order: int, guard: int | None = None, backend: str = "xla", batch: int = 1):
     """Post-slab fused gather: (C, cap, 3) offsets + six padded grids ->
     (C, cap, 6) per-bin field values via the named dispatcher backend.
     This is the portion of the hot path the gather backends disagree on —
@@ -245,7 +245,7 @@ def fused_gather_bins(d, padded_fields, *, grid_shape, order: int, guard: int | 
     g = sf.max_guard(order) if guard is None else guard
     name = dispatch.resolve(
         "gather_fused", backend, order=order, grid_shape=tuple(grid_shape),
-        capacity=d.shape[1], dtype=str(d.dtype),
+        capacity=d.shape[1], dtype=str(d.dtype), batch=batch,
     )
     return _fused_gather_bins_jit(
         d, padded_fields, grid_shape=tuple(grid_shape), order=order, guard=g, backend=name
@@ -303,6 +303,7 @@ def gather_fields_fused(
     guard: int | None = None,
     fused_gather=None,
     backend: str | None = None,
+    batch: int = 1,
 ):
     """All six Yee-staggered field components in one fused pass — the
     default ``gather="matrix"`` hot path (the dual of the fused
@@ -345,7 +346,7 @@ def gather_fields_fused(
 
         backend = dispatch.resolve(
             "gather_fused", backend, order=order, grid_shape=tuple(grid_shape),
-            capacity=slab.d.shape[1], dtype=str(slab.d.dtype),
+            capacity=slab.d.shape[1], dtype=str(slab.d.dtype), batch=batch,
         )
     return _gather_fields_fused_jit(
         slab, padded_fields, layout, grid_shape=tuple(grid_shape), order=order,

@@ -92,14 +92,21 @@ class DispatchKey:
     #: op runs inside a shard_map body — pallas_call has no replication
     #: rule there, so the Pallas backends are unavailable for sharded keys
     sharded: bool = False
+    #: leading vmap batch width the op runs under (the ensemble engine's
+    #: member axis). batch=1 is the plain single-sim key; batched keys
+    #: benchmark/memoize separately so ensemble shapes autotune per bucket
+    #: instead of replaying single-sim winners.
+    batch: int = 1
 
     def cache_key(self) -> str:
         gs = "x".join(map(str, self.grid_shape)) if self.grid_shape else "none"
         mode = "interp" if self.interpret else "compiled"
         shard = "|sharded" if self.sharded else ""
+        # batch=1 omits the suffix so pre-batch cache entries stay valid
+        bat = f"|batch{self.batch}" if self.batch != 1 else ""
         return (
             f"{self.op}|order{self.order}|grid{gs}|cap{self.capacity}"
-            f"|bins{self.n_bins}|{self.dtype}|{self.platform}|{mode}{shard}"
+            f"|bins{self.n_bins}|{self.dtype}|{self.platform}|{mode}{shard}{bat}"
         )
 
 
@@ -198,6 +205,7 @@ def resolve(
     dtype: str = "float32",
     interpret: bool | None = None,
     sharded: bool = False,
+    batch: int = 1,
     allow_benchmark: bool = True,
 ) -> str:
     """Resolve ``requested`` ("auto" or a backend name) to a concrete
@@ -235,6 +243,7 @@ def resolve(
         platform=jax.default_backend(),
         interpret=resolve_interpret(interpret),
         sharded=bool(sharded),
+        batch=int(batch),
     )
 
     memo_key = (key, requested)
@@ -329,6 +338,7 @@ def prewarm(
     dtype: str = "float32",
     interpret: bool | None = None,
     sharded: bool = False,
+    batch: int = 1,
     requested: str = "auto",
 ) -> dict[str, str]:
     """Eagerly resolve (benchmarking + persisting if unmeasured) each op at
@@ -342,6 +352,7 @@ def prewarm(
         op: resolve(
             op, requested, order=order, grid_shape=grid_shape, capacity=capacity,
             n_bins=n_bins, dtype=dtype, interpret=interpret, sharded=sharded,
+            batch=batch,
         )
         for op in ops_
     }
@@ -357,6 +368,7 @@ def demote(
     dtype: str = "float32",
     interpret: bool | None = None,
     sharded: bool = False,
+    batch: int = 1,
 ) -> str | None:
     """The fault supervisor's remediation rung: the next backend down the
     priority ladder from what ``current`` resolves to for the fused
@@ -373,7 +385,7 @@ def demote(
     effective = resolve(
         "deposit_fused", current, order=order, grid_shape=grid_shape,
         capacity=capacity, n_bins=n_bins, dtype=dtype, interpret=interpret,
-        sharded=sharded, allow_benchmark=False,
+        sharded=sharded, batch=batch, allow_benchmark=False,
     )
     ladder = sorted(BACKEND_PRIORITY, key=BACKEND_PRIORITY.get, reverse=True)
     below = [n for n in ladder if BACKEND_PRIORITY[n] < BACKEND_PRIORITY[effective]]
@@ -389,6 +401,7 @@ def record(
     n_bins: int | None = None,
     dtype: str = "float32",
     interpret: bool | None = None,
+    batch: int = 1,
     timings_us: dict[str, float],
 ) -> str:
     """Seed (or overwrite) the autotune-cache entry for one key from
@@ -416,6 +429,7 @@ def record(
         dtype=str(dtype),
         platform=jax.default_backend(),
         interpret=resolve_interpret(interpret),
+        batch=int(batch),
     )
     winner = min(timings_us, key=timings_us.get)
     _merge_store(cache_path(), key.cache_key(), {
@@ -520,14 +534,30 @@ def _pallas_reduced_ok(key: DispatchKey) -> bool:
     return _pallas_ok(key) and key.grid_shape is not None
 
 
+def _bshape(key: DispatchKey, *shape: int) -> tuple[int, ...]:
+    """Operand shape for the key — a leading member axis when batched, so a
+    batched key's benchmark measures the vmapped contraction it will run."""
+    return (key.batch, *shape) if key.batch > 1 else tuple(shape)
+
+
+def _bvmap(key: DispatchKey, fn):
+    """Lift ``fn`` over the leading member axis for batched keys (matching
+    how the ensemble window actually invokes the op)."""
+    if key.batch > 1:
+        import jax
+
+        return jax.vmap(fn)
+    return fn
+
+
 def _synthetic_slab(key: DispatchKey):
     import jax
     import jax.numpy as jnp
 
     dt = jnp.dtype(key.dtype)
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-    d = jax.random.uniform(k1, (key.n_bins, key.capacity, 3), dt, maxval=0.999)
-    val = jax.random.normal(k2, (key.n_bins, key.capacity, 3), dt)
+    d = jax.random.uniform(k1, _bshape(key, key.n_bins, key.capacity, 3), dt, maxval=0.999)
+    val = jax.random.normal(k2, _bshape(key, key.n_bins, key.capacity, 3), dt)
     return d, val
 
 
@@ -538,9 +568,10 @@ def _deposit_fused_thunk(impl: str):
         from repro.core.deposition import fused_deposit_grids
 
         d, val = _synthetic_slab(key)
-        return lambda: jax.block_until_ready(
-            fused_deposit_grids(d, val, grid_shape=key.grid_shape, order=key.order, backend=impl)
-        )
+        fn = jax.jit(_bvmap(key, lambda d_, val_: fused_deposit_grids(
+            d_, val_, grid_shape=key.grid_shape, order=key.order, backend=impl
+        )))
+        return lambda: jax.block_until_ready(fn(d, val))
 
     return make
 
@@ -558,12 +589,15 @@ def _gather_fused_thunk(impl: str):
         nx, ny, nz = key.grid_shape
         keys = jax.random.split(jax.random.PRNGKey(1), 6)
         padded = tuple(
-            jax.random.normal(k, (nx + 2 * g, ny + 2 * g, nz + 2 * g), jnp.dtype(key.dtype))
+            jax.random.normal(
+                k, _bshape(key, nx + 2 * g, ny + 2 * g, nz + 2 * g), jnp.dtype(key.dtype)
+            )
             for k in keys
         )
-        return lambda: jax.block_until_ready(
-            fused_gather_bins(d, padded, grid_shape=key.grid_shape, order=key.order, backend=impl)
-        )
+        fn = jax.jit(_bvmap(key, lambda d_, padded_: fused_gather_bins(
+            d_, padded_, grid_shape=key.grid_shape, order=key.order, backend=impl
+        )))
+        return lambda: jax.block_until_ready(fn(d, padded))
 
     return make
 
@@ -577,14 +611,15 @@ def _deposit_unfused_thunk(impl: str):
         m, _ = support(key.order, True)
         tu, _ = support(key.order, False)
         k1, k2 = jax.random.split(jax.random.PRNGKey(2))
-        a = jax.random.normal(k1, (key.n_bins, key.capacity, m), key.dtype)
-        b = jax.random.normal(k2, (key.n_bins, key.capacity, tu * tu), key.dtype)
+        a = jax.random.normal(k1, _bshape(key, key.n_bins, key.capacity, m), key.dtype)
+        b = jax.random.normal(k2, _bshape(key, key.n_bins, key.capacity, tu * tu), key.dtype)
         if impl == "pallas":
             from repro.kernels.deposition.ops import bin_outer_product as fn
         else:
             from repro.kernels.deposition.ref import bin_outer_product_ref
 
-            fn = jax.jit(bin_outer_product_ref)
+            fn = bin_outer_product_ref
+        fn = jax.jit(_bvmap(key, fn))
         return lambda: jax.block_until_ready(fn(a, b))
 
     return make
@@ -601,17 +636,16 @@ def _bin_gather_thunk(impl: str):
         tu, _ = support(key.order, False)
         n = tu * tu
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
-        wx = jax.random.normal(k1, (key.n_bins, key.capacity, m), key.dtype)
-        byz = jax.random.normal(k2, (key.n_bins, key.capacity, n), key.dtype)
-        g = jax.random.normal(k3, (key.n_bins, m, n), key.dtype)
+        wx = jax.random.normal(k1, _bshape(key, key.n_bins, key.capacity, m), key.dtype)
+        byz = jax.random.normal(k2, _bshape(key, key.n_bins, key.capacity, n), key.dtype)
+        g = jax.random.normal(k3, _bshape(key, key.n_bins, m, n), key.dtype)
         if impl == "pallas":
             from repro.kernels.gather.ops import bin_gather as fn
         else:
-            fn = jax.jit(
-                lambda wx, byz, g: jnp.sum(
-                    wx * jnp.einsum("cpn,cmn->cpm", byz, g), axis=-1
-                )
+            fn = lambda wx, byz, g: jnp.sum(
+                wx * jnp.einsum("cpn,cmn->cpm", byz, g), axis=-1
             )
+        fn = jax.jit(_bvmap(key, fn))
         return lambda: jax.block_until_ready(fn(wx, byz, g))
 
     return make

@@ -5,6 +5,9 @@
     PYTHONPATH=src python -m repro.launch.pic_run --scenario lwfa --mesh 2x2
     PYTHONPATH=src python -m repro.launch.pic_run --spec myrun.json
     PYTHONPATH=src python -m repro.launch.pic_run --scenario weibel --dump-spec weibel.json
+    PYTHONPATH=src python -m repro.launch.pic_run --scenario uniform --ensemble 4
+    PYTHONPATH=src python -m repro.launch.pic_run --scenario two_stream \\
+        --sweep drift=0.1,0.2,0.3 --ensemble 2
 
 The run is described by a `repro.api.SimSpec`: ``--scenario NAME`` builds
 it from the registry, ``--spec FILE.json`` loads a serialized one, and the
@@ -57,6 +60,38 @@ def parse_fault(text: str) -> dict:
     return out
 
 
+def _sweep_value(text: str):
+    """Sweep values parse as int, then float, then bare string."""
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            pass
+    return text
+
+
+def parse_sweeps(texts) -> dict:
+    """Repeated ``--sweep PARAM=V1,V2,...`` flags -> `EnsembleSpec.sweep`
+    axes, with PARAM validated against the registry's flat override
+    vocabulary (the same names every other flag routes through)."""
+    from repro.api.registry import _OVERRIDE_PATHS
+
+    axes: dict[str, list] = {}
+    for text in texts:
+        name, sep, values = text.partition("=")
+        if not sep or not values:
+            raise ValueError(f"--sweep wants PARAM=V1,V2,..., got {text!r}")
+        if name not in _OVERRIDE_PATHS:
+            raise ValueError(
+                f"--sweep {name}: not a flat override "
+                f"(one of {sorted(_OVERRIDE_PATHS)})"
+            )
+        if name in axes:
+            raise ValueError(f"--sweep {name}: axis given twice")
+        axes[name] = [_sweep_value(v) for v in values.split(",")]
+    return axes
+
+
 def build_spec(args) -> SimSpec:
     """Scenario/spec-file + flag overrides -> the SimSpec to run."""
     overrides = {}
@@ -107,6 +142,35 @@ def build_spec(args) -> SimSpec:
     return scenario(name, **overrides)
 
 
+def run_ensemble(ensemble) -> None:
+    """Batched path: bucket the members by compiled shape, run every bucket,
+    print a per-member summary (docs/ensemble.md)."""
+    from repro.api import make_ensemble
+
+    t0 = time.perf_counter()
+    ens = make_ensemble(ensemble)
+    build_dt = time.perf_counter() - t0
+    n = ens.n_members
+    buckets = len(ens.sims)
+    print(
+        f"{ensemble.base.name}: ensemble of {n} members in {buckets} "
+        f"shape bucket{'s' if buckets != 1 else ''} "
+        f"({[s.n_members for s in ens.sims]} members/bucket), built in {build_dt:.2f}s"
+    )
+    t0 = time.perf_counter()
+    ens.run()
+    run_dt = time.perf_counter() - t0
+    steps = [m.run.steps for m in ens.members]
+    print(f"{sum(steps)} member-steps in {run_dt:.2f}s "
+          f"({n / run_dt:.2f} members/s)")
+    for i, d in enumerate(ens.diagnostics()):
+        print(
+            f"  member {i} ({ens.members[i].name}): step {d['step']}, "
+            f"field={d['field_energy']:.4e} kinetic={d['kinetic_energy']:.4e} "
+            f"total={d['total_energy']:.4e}, n_alive={d['n_alive']}"
+        )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     src = ap.add_argument_group("run selection")
@@ -142,6 +206,15 @@ def main() -> None:
         help="run domain-decomposed on an SXxSY device mesh (DistSimulation); "
         "forces SX*SY host devices when no accelerator override is present",
     )
+    ens = ap.add_argument_group("ensembles (docs/ensemble.md)")
+    ens.add_argument("--ensemble", type=int, default=None, metavar="N",
+                     help="run N seed-staggered replicas of the spec as one "
+                     "batched ensemble (with --sweep: N replicas per sweep point)")
+    ens.add_argument("--sweep", action="append", default=None,
+                     metavar="PARAM=V1,V2,...",
+                     help="repeatable: one cartesian sweep axis over a flat "
+                     "override (e.g. --sweep density=0.5,1.0 --sweep order=1,2); "
+                     "members with the same compiled shape share one executable")
     ft = ap.add_argument_group("fault tolerance (docs/robustness.md)")
     ft.add_argument("--sentinel", action="store_true",
                     help="enable the in-graph health sentinel (NaN/Inf + "
@@ -166,12 +239,25 @@ def main() -> None:
 
     try:
         spec = build_spec(args)
+        ensemble = None
+        if args.ensemble is not None or args.sweep:
+            from repro.api import EnsembleSpec
+
+            if args.sweep:
+                ensemble = EnsembleSpec.sweep(
+                    spec, parse_sweeps(args.sweep), replicas=args.ensemble or 1
+                )
+            else:
+                ensemble = EnsembleSpec.replicate(spec, args.ensemble)
     except (ValueError, TypeError, KeyError) as e:
         ap.error(str(e))  # spec validation failures -> one-line message, not a traceback
     if args.dump_spec:
         with open(args.dump_spec, "w") as f:
-            f.write(spec.to_json())
+            f.write(spec.to_json() if ensemble is None else ensemble.to_json())
         print(f"wrote {args.dump_spec}")
+        return
+    if ensemble is not None:
+        run_ensemble(ensemble)
         return
 
     sim = make_simulation(spec)

@@ -16,12 +16,19 @@ from repro.pic.simulation import (  # noqa: F401
     PICConfig,
     PICState,
     Simulation,
+    ensemble_run_window,
     global_sort,
     global_sort_device,
     init_state,
     pic_run_window,
     pic_step,
     pic_step_donated,
+)
+from repro.pic.ensemble import (  # noqa: F401
+    EnsembleSimulation,
+    make_ensemble_window_fn,
+    stack_trees,
+    unstack_tree,
 )
 from repro.pic.distributed import DistConfig  # noqa: F401
 from repro.pic.dist_simulation import DistSimulation, make_pic_mesh  # noqa: F401

@@ -116,6 +116,11 @@ class PICConfig:
     backend: str = "auto"        # kernel-dispatch backend for the bin
                                  # contractions (deposition AND gather):
                                  # auto | xla | pallas | pallas_reduced
+    dispatch_batch: int = 1      # leading vmap member axis the step runs
+                                 # under (the ensemble engine sets this to
+                                 # the bucket width so the dispatcher keys
+                                 # autotune per batched shape instead of
+                                 # replaying single-sim winners)
 
     @property
     def q_over_m(self) -> float:
@@ -185,14 +190,15 @@ def _gather_fields(pos, fields: FieldState, layout, slab: BinSlab | None, config
         return gather_fields_fused(
             slab, tuple(pe) + tuple(pb), layout,
             grid_shape=shape, order=config.order, backend=config.backend,
+            batch=config.dispatch_batch,
         )
     comps_e, comps_b = [], []
     if config.gather == "matrix_unfused":
         # six-call ablation mode: each component re-stages the slab and
         # recomputes its three weight sets
         for k in range(3):
-            comps_e.append(gather_matrix(pos, pe[k], layout, grid_shape=shape, order=config.order, stagger=E_STAGGER[k], backend=config.backend))
-            comps_b.append(gather_matrix(pos, pb[k], layout, grid_shape=shape, order=config.order, stagger=B_STAGGER[k], backend=config.backend))
+            comps_e.append(gather_matrix(pos, pe[k], layout, grid_shape=shape, order=config.order, stagger=E_STAGGER[k], backend=config.backend, batch=config.dispatch_batch))
+            comps_b.append(gather_matrix(pos, pb[k], layout, grid_shape=shape, order=config.order, stagger=B_STAGGER[k], backend=config.backend, batch=config.dispatch_batch))
     else:
         for k in range(3):
             comps_e.append(gather_scatter(pos, pe[k], order=config.order, stagger=E_STAGGER[k]))
@@ -210,7 +216,7 @@ def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig):
         # the contraction backend resolves through the kernel dispatcher
         j3 = deposit_current_matrix_fused(
             pos, v, qw, layout, grid_shape=shape, order=config.order,
-            backend=config.backend, slab=slab,
+            backend=config.backend, slab=slab, batch=config.dispatch_batch,
         )
         return [fold_guards(j, config.guard) * inv_vol for j in j3]
 
@@ -223,7 +229,7 @@ def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig):
         elif config.deposition == "rhocell":
             j = deposit_rhocell(pos, values, cells, grid_shape=shape, order=config.order, stagger=stagger)
         elif config.deposition == "matrix_unfused":
-            j = deposit_matrix(pos, values, layout, grid_shape=shape, order=config.order, stagger=stagger, backend=config.backend)
+            j = deposit_matrix(pos, values, layout, grid_shape=shape, order=config.order, stagger=stagger, backend=config.backend, batch=config.dispatch_batch)
         else:
             raise ValueError(f"unknown deposition method {config.deposition}")
         out.append(fold_guards(j, config.guard) * inv_vol)
@@ -657,6 +663,90 @@ def pic_run_window(
     )
 
 
+# ---------------------------------------------------------------------------
+# Vmapped ensemble window: N independent simulations of ONE shape bucket run
+# their windows as a single compiled program (leading member axis on every
+# PICState/SortPolicyState leaf). See pic.ensemble for the stacked-state
+# container and the host driver.
+# ---------------------------------------------------------------------------
+
+# Trace-time counter for the ensemble window, mirroring _window_trace_count:
+# the one-compile-per-bucket tests read the delta.
+_ensemble_trace_count = 0
+
+
+def _ensemble_window_impl(state, pstate, n_target, fault_vec, config: PICConfig,
+                          policy: SortPolicyConfig, n_steps: int, with_energies: bool,
+                          health: HealthConfig | None, with_fault: bool):
+    """`_pic_run_window_impl` lifted over a leading member axis on every
+    array argument: stacked PICState + SortPolicyState, per-member traced
+    targets ``n_target`` (i32[B]) and fault vectors (i32[B, 3]).
+
+    Each member's window is the EXACT single-sim program — same masked
+    post-halt steps, same in-graph sort decisions, same halt latching — so
+    one member halting (overflow, health) simply masks that member's
+    remaining steps while its siblings keep running. The host inspects the
+    per-member ``halt_code`` vector and re-enters with per-member targets.
+    """
+    global _ensemble_trace_count
+    _ensemble_trace_count += 1
+    member = partial(
+        _pic_run_window_impl, config=config, policy=policy, n_steps=n_steps,
+        with_energies=with_energies, health=health, with_fault=with_fault,
+    )
+    return jax.vmap(member)(state, pstate, n_target, fault_vec)
+
+
+_ensemble_window_jit = partial(jax.jit, static_argnames=_WINDOW_STATICS)(_ensemble_window_impl)
+_ensemble_window_donated = partial(
+    jax.jit, static_argnames=_WINDOW_STATICS, donate_argnums=(0, 1)
+)(_ensemble_window_impl)
+
+
+def ensemble_run_window(
+    state,
+    policy_state,
+    config: PICConfig,
+    n_steps: int,
+    *,
+    policy: SortPolicyConfig | None = None,
+    with_energies: bool = True,
+    donate: bool = True,
+    n_target=None,
+    health: HealthConfig | None = None,
+    fault_vec: jax.Array | None = None,
+):
+    """Run one window for every member of a stacked ensemble state as ONE
+    compiled program (`jax.vmap` of the single-sim window scan).
+
+    ``state``/``policy_state`` carry a leading member axis on every leaf
+    (build them with `pic.ensemble.stack_states`). ``n_target`` is a traced
+    i32[B] of per-member live-step counts ``<= n_steps`` (None runs all
+    members the full window); members whose target is 0 pass through
+    untouched, so a re-entry after one member's capacity growth advances
+    only the members that still owe steps. ``fault_vec`` is i32[B, 3]
+    (chaos harness; None compiles injection out).
+
+    Returns ``(state, policy_state, bundle)`` with the member axis on every
+    bundle leaf — ``bundle["halt_code"]`` is i32[B], ``per_step`` arrays
+    are ``(B, n_steps)``. The config's ``dispatch_batch`` should equal the
+    member count so the traced contractions hit the batched autotune keys
+    the ensemble driver prewarms.
+    """
+    n_members = int(jax.tree.leaves(state)[0].shape[0])
+    if n_target is None:
+        n_target = jnp.full((n_members,), n_steps, jnp.int32)
+    with_fault = fault_vec is not None
+    if fault_vec is None:
+        fault_vec = jnp.broadcast_to(no_fault_vec(), (n_members, 3))
+    fn = _ensemble_window_donated if donate else _ensemble_window_jit
+    return fn(
+        state, policy_state, jnp.asarray(n_target, jnp.int32), fault_vec,
+        config, policy or SortPolicyConfig(), n_steps, with_energies,
+        health, with_fault,
+    )
+
+
 # Sentinel distinguishing "caller said nothing" (-> spec default) from an
 # explicit window=None (-> legacy host loop) in SimDriver.run signatures.
 UNSET = object()
@@ -918,6 +1008,7 @@ class Simulation:
             self.config.backend, order=self.config.order,
             grid_shape=self.config.grid.shape, capacity=self.config.capacity,
             dtype=str(self.state.particles.pos.dtype),
+            batch=self.config.dispatch_batch,
         )
         if nxt is None:
             return False
@@ -942,6 +1033,7 @@ class Simulation:
             order=self.config.order, grid_shape=self.config.grid.shape,
             capacity=self.config.capacity,
             dtype=str(self.state.particles.pos.dtype),
+            batch=self.config.dispatch_batch,
         )
 
     def _needed_capacity(self) -> int:

@@ -265,6 +265,54 @@ def test_simulation_setup_prewarms_auto_keys():
 
 
 # ---------------------------------------------------------------------------
+# batched keys (the ensemble engine's DispatchKey.batch axis)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_key_never_reuses_batch1_entry():
+    """A vmapped contraction has different arithmetic intensity than the
+    single-sim one, so the batched winner must be measured at the batched
+    shape: seeding the batch=1 cache entry must NOT satisfy a batch=4
+    resolve (counter-checked), the two entries persist under distinct keys,
+    and the batch=1 key keeps its pre-batch-axis spelling (old autotune
+    caches stay valid)."""
+    kw = dict(order=1, grid_shape=(4, 4, 4), capacity=4)
+    dispatch.resolve("deposit_fused", "auto", **kw)
+    assert dispatch.counters["benchmark"] == 1
+
+    name4 = dispatch.resolve("deposit_fused", "auto", batch=4, **kw)
+    assert name4 in dispatch.backends_for("deposit_fused")
+    assert dispatch.counters["benchmark"] == 2, (
+        "batch=4 reused the batch=1 measurement"
+    )
+
+    entries = json.load(open(dispatch.cache_path()))["entries"]
+    assert len(entries) == 2
+    assert sum("|batch4" in k for k in entries) == 1
+    assert all("batch" not in k for k in entries if "|batch4" not in k)
+
+    # warm: each key hits its OWN memo entry, no further benchmarking
+    assert dispatch.resolve("deposit_fused", "auto", **kw) in dispatch.backends_for("deposit_fused")
+    assert dispatch.resolve("deposit_fused", "auto", batch=4, **kw) == name4
+    assert dispatch.counters["benchmark"] == 2
+
+
+def test_prewarm_at_batched_shape():
+    """prewarm(batch=N) (the ensemble driver's setup path) measures the
+    batched keys eagerly so the vmapped window's traced resolves hit the
+    memo — no trace fallback."""
+    ops = dispatch.ops_for_modes("matrix", "matrix")
+    kw = dict(order=1, grid_shape=(4, 4, 4), capacity=4, batch=3)
+    dispatch.prewarm(ops, **kw)
+    n_bench = dispatch.counters["benchmark"]
+    assert n_bench == len(ops)
+    for op in ops:
+        dispatch.resolve(op, "auto", **kw)
+    assert dispatch.counters["benchmark"] == n_bench  # all from memo
+    assert dispatch.counters["trace_fallback"] == 0
+
+
+# ---------------------------------------------------------------------------
 # demotion ladder
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,409 @@
+"""Batched ensemble engine: vmapped-window equivalence with sequential
+runs (ints exact, floats to accumulated-rounding tolerance), per-member
+halt-and-grow with bit-exact sibling isolation, one-compile-per-bucket,
+EnsembleSpec construction/serialization, signature bucketing, per-member
+checkpoints, and the async sim service."""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.pic.simulation as simulation
+from repro.api import (
+    EnsembleSpec,
+    apply_overrides,
+    bucket_specs,
+    load_simulation,
+    make_ensemble,
+    make_simulation,
+    scenario,
+    spec_signature,
+)
+from repro.core import SortPolicyConfig
+from repro.pic import (
+    EnsembleSimulation,
+    FieldState,
+    GridSpec,
+    PICConfig,
+    Simulation,
+    uniform_plasma,
+)
+
+# Equivalence tests disable the wall-clock perf trigger (non-deterministic);
+# the growth tests also disable the OCCUPANCY-ratio triggers, because
+# empty/full ratios are measured against capacity and the whole point of
+# those tests is that the ensemble's shared capacity grows while a solo
+# sibling's does not — interval-only policies keep the sort decisions
+# comparable across different capacities.
+POLICY = SortPolicyConfig(sort_interval=20, sort_trigger_perf_enable=False)
+INTERVAL_ONLY = SortPolicyConfig(
+    sort_interval=10,
+    sort_trigger_perf_enable=False,
+    sort_trigger_empty_ratio=2.0,
+    sort_trigger_full_ratio=2.0,
+    sort_trigger_rebuild_count=10**6,
+)
+
+
+def _member(seed, *, u_thermal=0.05, shape=(6, 6, 6), capacity=16):
+    grid = GridSpec(shape=shape)
+    parts = uniform_plasma(
+        jax.random.PRNGKey(seed), grid, ppc_each_dim=(2, 2, 2),
+        density=1.0, u_thermal=u_thermal,
+    )
+    return FieldState.zeros(grid.shape), parts
+
+
+def _config(*, shape=(6, 6, 6), capacity=16, backend="xla"):
+    # backend pinned to "xla": the bit-exactness claims below are about THE
+    # SAME compiled math at different batch/capacity paddings; Pallas block
+    # tuning may legitimately regroup contractions per shape.
+    return PICConfig(
+        grid=GridSpec(shape=shape), dt=0.2, order=1, deposition="matrix",
+        gather="matrix", sort_mode="incremental", capacity=capacity,
+        backend=backend,
+    )
+
+
+def _assert_member_matches(ens, i, solo, *, exact_floats=False):
+    """Member ``i`` of the ensemble vs its sequential run: everything
+    integer/structural EXACT; floats bit-exact when claimed (sibling
+    isolation) else to the windowed-driver rounding tolerance."""
+    st = ens.member_state(i)
+    assert int(st.step) == int(solo.state.step)
+    assert int(ens.host_step[i]) == solo._host_step
+    assert (int(ens.sorts[i]), int(ens.rebuilds[i])) == (solo.sorts, solo.rebuilds)
+    float_eq = (
+        np.testing.assert_array_equal if exact_floats
+        else lambda a, b, **kw: np.testing.assert_allclose(
+            a, b, rtol=2e-5, atol=2e-5, **kw
+        )
+    )
+    for name in ("ex", "ey", "ez", "bx", "by", "bz"):
+        float_eq(
+            np.asarray(getattr(st.fields, name)),
+            np.asarray(getattr(solo.state.fields, name)),
+            err_msg=f"member {i} field {name} diverged",
+        )
+    for name in ("pos", "u"):
+        float_eq(
+            np.asarray(getattr(st.particles, name)),
+            np.asarray(getattr(solo.state.particles, name)),
+            err_msg=f"member {i} particle attr {name} diverged",
+        )
+    for name in ("w", "alive"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st.particles, name)),
+            np.asarray(getattr(solo.state.particles, name)),
+            err_msg=f"member {i} particle attr {name} diverged",
+        )
+
+
+# ---------------------------------------------------------------------------
+# vmapped window == N sequential windowed runs
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_matches_sequential():
+    """3 members (independent seeds) through the vmapped window vs 3
+    sequential windowed runs: same sort decisions, same diagnostics, same
+    final state."""
+    cfg = _config()
+    seeds = [0, 1, 2]
+    ens = EnsembleSimulation([_member(s) for s in seeds], cfg, POLICY)
+    ens.run(30, window=8, diagnostics_every=10)
+
+    for i, seed in enumerate(seeds):
+        fields, parts = _member(seed)
+        solo = Simulation(fields, parts, cfg, policy=POLICY)
+        solo.run(30, window=8, diagnostics_every=10)
+        _assert_member_matches(ens, i, solo)
+        assert [d["step"] for d in ens.histories[i]] == [d["step"] for d in solo.history]
+        for dh, dw in zip(ens.histories[i], solo.history):
+            assert dh["n_alive"] == dw["n_alive"]
+            np.testing.assert_allclose(dh["field_energy"], dw["field_energy"], rtol=2e-5)
+            np.testing.assert_allclose(dh["kinetic_energy"], dw["kinetic_energy"], rtol=2e-5)
+    assert int(ens.sorts.sum() + ens.rebuilds.sum()) > 0, "no member ever sorted — vacuous"
+
+
+def test_ensemble_growth_does_not_perturb_siblings():
+    """Forced per-member overflow: one hot member halts on bin overflow and
+    the SHARED capacity grows. The hot member must still match its own
+    sequential run (which grows identically); its mild siblings — whose
+    solo runs never grow at all — must come out BIT-identical to those
+    solo runs despite being re-binned at the larger capacity mid-flight."""
+    cfg = _config(capacity=12)
+    hot, mild = 0.5, 0.02
+    ens = EnsembleSimulation(
+        [_member(0, u_thermal=hot), _member(1, u_thermal=mild), _member(2, u_thermal=mild)],
+        cfg, INTERVAL_ONLY,
+    )
+    # 28 steps: the hot member's densest cell passes 12 by step ~3 (measured),
+    # while the mild members' bunching first exceeds 12 only after step ~35 —
+    # so the shared growth is attributable to the hot member alone
+    ens.run(28, window=7)
+    assert ens.growths["capacity"] >= 1, "capacity never grew — overflow path not exercised"
+    assert ens.config.capacity > 12
+    assert ens.halts.get("bin_overflow", 0) >= 1
+
+    fields, parts = _member(0, u_thermal=hot)
+    solo_hot = Simulation(fields, parts, cfg, policy=INTERVAL_ONLY)
+    solo_hot.run(28, window=7)
+    assert solo_hot.config.capacity == ens.config.capacity, (
+        "solo and ensemble grew to different capacities — halt steps or "
+        "densest-cell sizing diverged"
+    )
+    _assert_member_matches(ens, 0, solo_hot)
+
+    for i, seed in enumerate((1, 2), start=1):
+        fields, parts = _member(seed, u_thermal=mild)
+        solo = Simulation(fields, parts, cfg, policy=INTERVAL_ONLY)
+        solo.run(28, window=7)
+        assert solo.config.capacity == 12, (
+            "a mild sibling overflowed on its own — the isolation claim is vacuous"
+        )
+        _assert_member_matches(ens, i, solo, exact_floats=True)
+
+
+def test_ensemble_one_compile_per_bucket():
+    """A 4-member bucket compiles the vmapped window ONCE across full
+    windows and the padded tail (20 steps at window=8)."""
+    cfg = _config(shape=(6, 6, 8))  # unique shape => fresh jit cache entry
+    ens = EnsembleSimulation([_member(s, shape=(6, 6, 8)) for s in range(4)], cfg, POLICY)
+    before = simulation._ensemble_trace_count
+    ens.run(20, window=8)  # 2 full windows + a tail of 4
+    assert ens.growths["capacity"] == 0, "capacity grew — trace count not comparable"
+    traces = simulation._ensemble_trace_count - before
+    assert traces == 1, f"expected one ensemble-window compilation, got {traces}"
+    assert list(ens.host_step) == [20] * 4
+
+
+def test_ensemble_per_member_step_targets():
+    """run() takes a per-member n_steps vector: members finish at their own
+    targets inside the shared windows (the service batches jobs with
+    different step counts)."""
+    cfg = _config()
+    ens = EnsembleSimulation([_member(s) for s in range(3)], cfg, POLICY)
+    ens.run([5, 12, 9], window=6)
+    assert list(ens.host_step) == [5, 12, 9]
+    assert [int(ens.member_state(i).step) for i in range(3)] == [5, 12, 9]
+
+
+# ---------------------------------------------------------------------------
+# EnsembleSpec + signatures + bucketing
+# ---------------------------------------------------------------------------
+
+
+def _base_spec(**kw):
+    kw.setdefault("grid", (6, 6, 6))
+    kw.setdefault("ppc", 2)
+    kw.setdefault("steps", 8)
+    kw.setdefault("window", 4)
+    kw.setdefault("backend", "xla")
+    return scenario("uniform", **kw)
+
+
+def test_ensemble_spec_replicate_and_sweep():
+    base = _base_spec()
+    rep = EnsembleSpec.replicate(base, 3)
+    members = rep.members()
+    assert rep.n_members == 3
+    assert [m.plasma.seed for m in members] == [base.plasma.seed + i for i in range(3)]
+    assert [m.name for m in members] == ["uniform-m0", "uniform-m1", "uniform-m2"]
+
+    sw = EnsembleSpec.sweep(base, {"order": [1, 2], "u_thermal": [0.0, 0.1]}, replicas=2)
+    assert sw.n_members == 8
+    orders = [m.deposition.order for m in sw.members()]
+    assert orders == [1, 1, 1, 1, 2, 2, 2, 2]
+    seeds = {m.plasma.seed for m in sw.members()}
+    assert len(seeds) == 2  # replicas staggered, sweep points share them
+
+
+def test_ensemble_spec_rejects_meshes():
+    meshed = apply_overrides(_base_spec(), mesh=(1, 2))
+    with pytest.raises(ValueError, match="single-device"):
+        EnsembleSpec(base=meshed)
+    with pytest.raises(ValueError, match="single-device"):
+        EnsembleSpec(base=_base_spec(), overrides=({"mesh": (1, 2)},)).members()
+
+
+def test_ensemble_spec_json_roundtrip():
+    es = EnsembleSpec.sweep(_base_spec(), {"density": [0.5, 1.0]}, replicas=2)
+    back = EnsembleSpec.from_json(es.to_json())
+    assert back == es
+    assert back.to_json() == es.to_json()
+    assert [m.to_json() for m in back.members()] == [m.to_json() for m in es.members()]
+
+
+def test_spec_signature_is_compile_shape_only():
+    base = _base_spec()
+    # values-only overrides keep the signature (same compiled program) ...
+    for ov in ({"seed": 99}, {"density": 0.25}, {"u_thermal": 0.3}):
+        assert spec_signature(apply_overrides(base, **ov)) == spec_signature(base)
+    # ... shape/program overrides change it
+    for ov in ({"order": 2}, {"grid": (6, 6, 8)}, {"capacity": 64}, {"window": 8}):
+        assert spec_signature(apply_overrides(base, **ov)) != spec_signature(base)
+    with pytest.raises(ValueError, match="mesh"):
+        spec_signature(apply_overrides(base, mesh=(1, 2)))
+
+
+def test_bucket_specs_groups_by_signature():
+    es = EnsembleSpec.sweep(_base_spec(), {"order": [1, 2]}, replicas=2)
+    members = es.members()
+    buckets = bucket_specs(members)
+    assert len(buckets) == 2
+    assert sorted(i for idxs in buckets.values() for i in idxs) == [0, 1, 2, 3]
+    ens = make_ensemble(es)
+    assert [s.n_members for s in ens.sims] == [2, 2]
+    # slot() round-trips every global index
+    for i in range(4):
+        b, s = ens.slot(i)
+        assert ens.sims[b].specs[s] is members[i] or ens.sims[b].specs[s] == members[i]
+
+
+# ---------------------------------------------------------------------------
+# the member-indexed facade + per-member checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_make_ensemble_matches_make_simulation():
+    es = EnsembleSpec.replicate(_base_spec(steps=12), 3)
+    ens = make_ensemble(es)
+    ens.run()
+    for i, m in enumerate(es.members()):
+        solo = make_simulation(m)
+        solo.run()
+        d_ens, d_solo = ens.diagnostics(i), solo.diagnostics()
+        assert d_ens["member"] == i
+        assert d_ens["step"] == d_solo["step"] == 12
+        assert d_ens["n_alive"] == d_solo["n_alive"]
+        np.testing.assert_allclose(
+            d_ens["total_energy"], d_solo["total_energy"], rtol=2e-5
+        )
+
+
+def test_member_checkpoint_roundtrip(tmp_path):
+    es = EnsembleSpec.replicate(_base_spec(steps=8), 3)
+    ens = make_ensemble(es)
+    ens.run()
+    path = str(tmp_path / "m1")
+    ens.save_member(1, path)
+
+    # a member checkpoint is a STANDARD single-driver checkpoint: it loads
+    # standalone and keeps running
+    solo = load_simulation(path)
+    assert int(solo.state.step) == 8
+    assert solo._host_step == 8
+    np.testing.assert_array_equal(
+        np.asarray(solo.state.particles.pos),
+        np.asarray(ens.member_state(1).particles.pos),
+    )
+    solo.run(4)
+    assert int(solo.state.step) == 12
+
+    # and it restores INTO a fresh ensemble slot
+    ens2 = make_ensemble(es)
+    ens2.restore_member(1, path)
+    b, s = ens2.slot(1)
+    assert int(ens2.sims[b].host_step[s]) == 8
+    np.testing.assert_array_equal(
+        np.asarray(ens2.member_state(1).particles.pos),
+        np.asarray(ens.member_state(1).particles.pos),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ens2.member_state(1).fields.ez),
+        np.asarray(ens.member_state(1).fields.ez),
+    )
+
+
+def test_member_restore_rebins_on_capacity_mismatch(tmp_path):
+    """Restoring a member saved at capacity C into an ensemble compiled at
+    capacity 2C re-bins it (permutation-free) at the ensemble's shape."""
+    es = EnsembleSpec.replicate(_base_spec(steps=6), 2)
+    ens = make_ensemble(es)
+    ens.run()
+    path = str(tmp_path / "m0")
+    ens.save_member(0, path)
+    cap = ens.sims[0].config.capacity
+
+    wide = EnsembleSpec.replicate(apply_overrides(_base_spec(steps=6), capacity=2 * cap), 2)
+    ens2 = make_ensemble(wide)
+    ens2.restore_member(0, path)
+    st = ens2.member_state(0)
+    assert st.layout.capacity == 2 * cap
+    np.testing.assert_array_equal(
+        np.asarray(st.particles.pos), np.asarray(ens.member_state(0).particles.pos)
+    )
+    assert int(st.step) == 6
+
+
+# ---------------------------------------------------------------------------
+# the async simulation service
+# ---------------------------------------------------------------------------
+
+
+def test_sim_service_batches_and_streams():
+    """Two same-signature jobs coalesce into ONE batch (one ensemble, one
+    cached executable); a third with a different compiled shape runs in its
+    own batch. Every job streams >= 1 window event then a terminal done."""
+    from repro.launch.sim_serve import SimService
+
+    base = _base_spec(grid=(4, 4, 4), ppc=1, steps=4, window=2)
+    other = apply_overrides(base, order=2)
+
+    async def body():
+        svc = SimService(max_batch=4, batch_wait=0.25)
+        await svc.start()
+        ids = [
+            await svc.submit(base.to_json()),
+            await svc.submit(base.to_json()),
+            await svc.submit(other.to_json()),
+        ]
+        finals, windows = {}, {}
+        for job_id in ids:
+            windows[job_id] = 0
+            async for event in svc.results(job_id):
+                assert event["job"] == job_id
+                if event["event"] == "window":
+                    windows[job_id] += 1
+                else:
+                    finals[job_id] = event
+        await svc.close()
+        return svc, ids, finals, windows
+
+    svc, ids, finals, windows = asyncio.run(body())
+    for job_id in ids:
+        assert finals[job_id]["event"] == "done"
+        assert finals[job_id]["diagnostics"]["step"] == 4
+        assert windows[job_id] >= 1
+    assert finals[ids[0]]["batch_size"] == 2
+    assert finals[ids[1]]["batch_size"] == 2
+    assert finals[ids[2]]["batch_size"] == 1
+    assert finals[ids[0]]["signature"] != finals[ids[2]]["signature"]
+    assert svc.batches_run == 2 and svc.jobs_done == 3
+    # one executable per signature, no re-build for the second job
+    assert svc.cache.stats()["misses"] == 2
+
+
+def test_sim_service_surfaces_bad_specs_and_errors():
+    from repro.launch.sim_serve import ExecutableCache, SimService
+
+    async def body():
+        svc = SimService()
+        await svc.start()
+        with pytest.raises(Exception):
+            await svc.submit("{not json")
+        await svc.close()
+
+    asyncio.run(body())
+
+    cache = ExecutableCache(maxsize=2)
+    fns = [cache.get(sig) for sig in ("a", "b", "c")]
+    assert cache.stats() == {
+        "size": 2, "maxsize": 2, "hits": 0, "misses": 3, "evictions": 1,
+    }
+    assert cache.get("c") is fns[2]  # most recent survives
+    assert cache.get("a") is not fns[0]  # evicted => fresh jit wrapper
