@@ -1,0 +1,181 @@
+"""Gradient-subsystem sweep: grad step vs forward window -> BENCH_grad.json.
+
+Times one jitted ``value_and_grad`` evaluation of the differentiable LWFA
+window (`repro.grad`: StateBuilder + run_window_diff + registered
+objective) against the forward-only evaluation of the SAME program, across
+the `jax.checkpoint` remat policies:
+
+    PYTHONPATH=src python -m benchmarks.run --only grad_sweep \
+        --grad-json BENCH_grad.json
+
+Two quantities per remat policy:
+
+* ``grad_over_forward`` — the reverse-mode wall-clock overhead factor (the
+  paper-facing "cost of a gradient"); remat="step" trades recompute for
+  memory, so its factor is the upper end.
+* ``stacked_residuals`` — the STRUCTURAL memory check: the number of
+  per-step stacked scan outputs in the grad jaxpr, i.e. residual arrays
+  whose leading dim is the step count. Under remat="step" this is a small
+  carry-sized set independent of the window length (checked against a
+  doubled window); under remat="none" it grows with the stored program.
+
+The workload is the tiny LWFA cell (the scenario is pinned — the learned
+leaves are laser parameters, which the ``uniform`` scenario lacks). Each
+row embeds the exact serialized SimSpec + GradSpec it measured.
+
+Schema: {"meta": {...workload...},
+         "results": {"remat_<policy>": {"forward_us", "grad_us",
+                                        "grad_over_forward",
+                                        "stacked_residuals",
+                                        "residuals_at_double_window",
+                                        "spec": {...}, "grad_spec": {...}}},
+         "acceptance": {"lwfa_remat_step_residuals_window_invariant": bool,
+                        "lwfa_remat_step_vs_none_residual_ratio": x,
+                        "lwfa_remat_step_grad_over_forward": x}}
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+
+from benchmarks.common import emit, time_grid
+from repro.api import GradSpec, scenario
+from repro.grad import make_objective
+
+STEPS = 8
+GRID = (6, 6, 16)
+PPC = 1
+REMATS = ("step", "chunk", "none")
+ROUNDS = 5
+
+
+def _spec(*, grid=GRID, ppc=PPC, steps=STEPS):
+    return scenario(
+        "lwfa", grid=grid, ppc=ppc, steps=steps, window=max(steps // 2, 1),
+        backend="xla",
+    )
+
+
+def _gspec(remat: str, steps: int) -> GradSpec:
+    return GradSpec(
+        learn=("laser.a0",), steps=steps, remat=remat,
+        remat_chunk=max(steps // 2, 1) if remat == "chunk" else 0,
+        objective_kwargs={"e_min": 0.1},
+    )
+
+
+def _stacked_scan_outputs(jaxpr, n: int) -> int:
+    """Per-step stacked residuals in a jaxpr: scan outputs whose leading
+    dim is the step count (recursing into sub-jaxprs)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            total += sum(
+                1 for v in eqn.outvars
+                if getattr(v.aval, "shape", ()) and v.aval.shape[0] == n
+            )
+        for p in eqn.params.values():
+            items = p if isinstance(p, (tuple, list)) else (p,)
+            for item in items:
+                if hasattr(item, "jaxpr"):  # ClosedJaxpr
+                    total += _stacked_scan_outputs(item.jaxpr, n)
+                elif hasattr(item, "eqns"):  # raw Jaxpr
+                    total += _stacked_scan_outputs(item, n)
+    return total
+
+
+def _residuals(remat: str, steps: int) -> int:
+    loss_fn, params = make_objective(_spec(steps=steps), _gspec(remat, steps))
+    jaxpr = jax.make_jaxpr(jax.grad(lambda p: loss_fn(p)[0]))(params)
+    return _stacked_scan_outputs(jaxpr.jaxpr, steps)
+
+
+def collect(*, label: str = "grad", grid=GRID, ppc=PPC, steps=STEPS,
+            remats=REMATS, rounds: int = ROUNDS) -> dict:
+    """Run the sweep, emit CSV rows, and return the JSON-able payload."""
+    spec = _spec(grid=grid, ppc=ppc, steps=steps)
+    results: dict[str, dict] = {}
+    for remat in remats:
+        gspec = _gspec(remat, steps)
+        loss_fn, params = make_objective(spec, gspec)
+        forward = jax.jit(lambda p: loss_fn(p)[0])
+        vg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        row = time_grid({
+            "forward": lambda: forward(params),
+            "grad": lambda: vg(params),
+        }, rounds=rounds)
+        overhead = row["grad"] / row["forward"]
+        residuals = _residuals(remat, steps)
+        residuals2 = _residuals(remat, 2 * steps)
+        results[f"remat_{remat}"] = {
+            "forward_us": row["forward"],
+            "grad_us": row["grad"],
+            "grad_over_forward": overhead,
+            "stacked_residuals": residuals,
+            "residuals_at_double_window": residuals2,
+            "spec": spec.to_dict(),
+            "grad_spec": gspec.to_dict(),
+        }
+        emit(f"{label}/remat_{remat}/forward", row["forward"],
+             f"{steps}-step diff window, loss only")
+        emit(f"{label}/remat_{remat}/grad", row["grad"],
+             f"value_and_grad, {overhead:.2f}x forward, "
+             f"residuals {residuals} ({residuals2} at 2x window)")
+
+    step_row = results.get("remat_step")
+    none_row = results.get("remat_none")
+    acceptance = {}
+    if step_row is not None:
+        # the memory-bounded remat check: carry-sized residual set that does
+        # NOT grow when the differentiated window doubles
+        acceptance["lwfa_remat_step_residuals_window_invariant"] = (
+            step_row["stacked_residuals"]
+            == step_row["residuals_at_double_window"]
+        )
+        acceptance["lwfa_remat_step_grad_over_forward"] = (
+            step_row["grad_over_forward"]
+        )
+    if step_row is not None and none_row is not None:
+        acceptance["lwfa_remat_step_vs_none_residual_ratio"] = (
+            none_row["stacked_residuals"] / step_row["stacked_residuals"]
+        )
+    return {
+        "meta": {
+            "scenario": "lwfa",
+            "grid": list(grid),
+            "ppc": ppc,
+            "steps": steps,
+            "remats": list(remats),
+            "learn": ["laser.a0"],
+            "objective": "injected_charge",
+            "backend": jax.default_backend(),
+            "note": (
+                f"us per call, median over {rounds} interleaved rounds "
+                "(time_grid); forward = jitted loss of the differentiable "
+                "window, grad = jitted value_and_grad of the same program. "
+                "stacked_residuals counts per-step stacked scan outputs in "
+                "the grad jaxpr — the structural proxy for reverse-mode "
+                "peak memory. Each row embeds the serialized SimSpec and "
+                "GradSpec it measured."
+            ),
+        },
+        "results": results,
+        "acceptance": acceptance,
+    }
+
+
+def write_json(path: str) -> None:
+    payload = collect()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    collect()
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ MODULES = [
     "sim_loop_sweep",     # host-driven vs device-resident loop (see --sim-json)
     "dist_sweep",         # distributed windowed vs per-step loop (see --dist-json)
     "ensemble_sweep",     # vmapped ensemble vs sequential runs (see --ensemble-json)
+    "grad_sweep",         # differentiable window: grad vs forward (see --grad-json)
 ]
 
 
@@ -40,6 +41,21 @@ def run_smoke() -> None:
     gather_sweep.collect(grid=(4, 4, 4), ppc=1, rounds=2, label="smoke/gather_sweep")
     smoke_dispatch()
     smoke_ensemble()
+    smoke_grad()
+
+
+def smoke_grad() -> None:
+    """Gradient lane: one remat policy of the grad-vs-forward sweep on a
+    tiny window (both programs compile, run, and the structural residual
+    check holds; no JSON written). The fit loop itself is smoked by
+    ``python -m repro.launch.pic_fit --smoke`` in CI."""
+    from benchmarks import grad_sweep
+
+    payload = grad_sweep.collect(
+        label="smoke/grad_sweep", grid=(6, 6, 12), steps=4,
+        remats=("step",), rounds=2,
+    )
+    assert payload["acceptance"]["lwfa_remat_step_residuals_window_invariant"]
 
 
 def smoke_ensemble() -> None:
@@ -134,6 +150,13 @@ def main() -> None:
         "sequential runs) as JSON (BENCH_ensemble.json)",
     )
     ap.add_argument(
+        "--grad-json",
+        metavar="PATH",
+        default=None,
+        help="also write the gradient-subsystem sweep (value_and_grad vs "
+        "forward window across remat policies) as JSON (BENCH_grad.json)",
+    )
+    ap.add_argument(
         "--scenario",
         metavar="NAME",
         default="uniform",
@@ -154,6 +177,7 @@ def main() -> None:
         ("--sim-json", args.sim_json, "sim_loop_sweep"),
         ("--dist-json", args.dist_json, "dist_sweep"),
         ("--ensemble-json", args.ensemble_json, "ensemble_sweep"),
+        ("--grad-json", args.grad_json, "grad_sweep"),
     ):
         if value and mod not in mods:
             print(
@@ -189,6 +213,11 @@ def main() -> None:
                 from benchmarks.ensemble_sweep import write_json
 
                 write_json(args.ensemble_json, scenario_name=args.scenario)
+                continue
+            if name == "grad_sweep" and args.grad_json:
+                from benchmarks.grad_sweep import write_json
+
+                write_json(args.grad_json)
                 continue
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             if name in ("sim_loop_sweep", "dist_sweep", "ensemble_sweep"):

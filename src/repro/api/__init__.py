@@ -19,8 +19,10 @@ from repro.api.facade import (  # noqa: F401
     build_fields,
     build_particles,
     dist_config,
+    fit_simulation,
     load_simulation,
     make_ensemble,
+    make_objective,
     make_simulation,
     pic_config,
     restore_ensemble_member,
@@ -51,5 +53,6 @@ from repro.api.spec import (  # noqa: F401
     SimSpec,
     SortSpec,
 )
+from repro.grad.spec import GradSpec  # noqa: F401
 from repro.pic.grid import GridSpec  # noqa: F401
 from repro.pic.laser import LaserSpec  # noqa: F401

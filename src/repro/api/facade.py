@@ -58,8 +58,10 @@ __all__ = [
     "build_fields",
     "build_particles",
     "dist_config",
+    "fit_simulation",
     "load_simulation",
     "make_ensemble",
+    "make_objective",
     "make_simulation",
     "pic_config",
     "restore_ensemble_member",
@@ -227,6 +229,32 @@ def make_simulation(spec: SimSpec, *, fields: FieldState | None = None,
         policy=policy,
         _spec=spec,
     )
+
+
+# ---------------------------------------------------------------------------
+# The gradient subsystem (repro.grad, docs/autodiff.md): same facade, so a
+# spec in hand is one call away from a differentiable objective or a fit.
+# ---------------------------------------------------------------------------
+
+
+def make_objective(spec: SimSpec, grad=None, **kw):
+    """Differentiable problem from a spec: ``(loss_fn, params0)`` with
+    ``loss_fn(params) -> (loss, aux)`` jit/grad-able through the whole
+    windowed run — see repro.grad.fit.make_objective (``grad`` is a
+    `GradSpec`; keywords like ``objective=``, ``learn=``, ``steps=``
+    override it)."""
+    from repro.grad.fit import make_objective as _make_objective
+
+    return _make_objective(spec, grad, **kw)
+
+
+def fit_simulation(spec: SimSpec, grad=None, **kw):
+    """AdamW-optimize the learned SimSpec leaves against a registered
+    objective — see repro.grad.fit.fit_simulation. Returns a `FitResult`
+    (final params, per-iteration trajectory, compile count)."""
+    from repro.grad.fit import fit_simulation as _fit_simulation
+
+    return _fit_simulation(spec, grad, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.grad.permutations import slot_gather
+
 INVALID = jnp.int32(-1)
 
 # Trace-time counter: incremented every time `build_bin_slab` is traced.
@@ -96,9 +98,11 @@ def build_bin_slab(pos, layout: BinnedLayout, *, grid_shape) -> BinSlab:
     SLAB_BUILDS += 1
     slots = layout.slots
     n_cells, _ = slots.shape
-    p = jnp.maximum(slots, 0)
     valid = slots >= 0
-    pos_b = pos[p]                                   # (C, cap, 3) — once
+    # slot_gather == pos[jnp.maximum(slots, 0)] bitwise, with a masked VJP so
+    # reverse-mode through the slab never scatters alias cotangents onto
+    # particle 0 (grad.permutations)
+    pos_b = slot_gather(pos, slots)                  # (C, cap, 3) — once
     cells = cell_coords(n_cells, grid_shape)
     d = pos_b - cells[:, None, :].astype(pos.dtype)
     return BinSlab(d=d, valid=valid)
@@ -108,10 +112,9 @@ def bin_slab_values(vel, qw, layout: BinnedLayout, slab: BinSlab) -> jax.Array:
     """Per-component deposition values q·w·v staged onto the slab's slot
     table: (n_cells, capacity, 3), exactly 0 on gap/overflow slots (the
     value slab carries the deposition masking)."""
-    p = jnp.maximum(layout.slots, 0)
     valid = slab.valid
-    qw_b = jnp.where(valid, qw[p], jnp.zeros((), qw.dtype))
-    vel_b = jnp.where(valid[..., None], vel[p], jnp.zeros((), vel.dtype))
+    qw_b = jnp.where(valid, slot_gather(qw, layout.slots), jnp.zeros((), qw.dtype))
+    vel_b = jnp.where(valid[..., None], slot_gather(vel, layout.slots), jnp.zeros((), vel.dtype))
     return qw_b[..., None] * vel_b
 
 

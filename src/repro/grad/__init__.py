@@ -1,0 +1,48 @@
+"""Differentiable-simulation subsystem (docs/autodiff.md).
+
+Three layers over the windowed driver:
+
+* `grad.permutations` — custom-VJP wrappers treating the sort/slot-table
+  index machinery as piecewise-constant permutations (stop-gradient index
+  computation, differentiable value movement). Imported by the core/pic
+  layers, so this package's `__init__` must stay import-light: everything
+  else is exported lazily (PEP 562) to keep `core.binning ->
+  grad.permutations` cycle-free.
+* `grad.objectives` / `grad.params` — the `@register_objective` registry of
+  physics losses and the SimSpec-leaf -> trainable-pytree mapping.
+* `grad.fit` — `make_objective` / `fit_simulation`, the AdamW loop over
+  `value_and_grad` of objective∘windowed-run (also exposed on the facade).
+"""
+
+from __future__ import annotations
+
+_LAZY = {
+    "permute_values": "repro.grad.permutations",
+    "permute_tree": "repro.grad.permutations",
+    "slot_gather": "repro.grad.permutations",
+    "GradSpec": "repro.grad.spec",
+    "register_objective": "repro.grad.objectives",
+    "get_objective": "repro.grad.objectives",
+    "objective_names": "repro.grad.objectives",
+    "LEARNABLE": "repro.grad.params",
+    "resolve_param": "repro.grad.params",
+    "default_params": "repro.grad.params",
+    "StateBuilder": "repro.grad.params",
+    "FitResult": "repro.grad.fit",
+    "make_objective": "repro.grad.fit",
+    "fit_simulation": "repro.grad.fit",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,203 @@
+"""The optimization loop: AdamW over `value_and_grad` of objective∘window.
+
+`make_objective(spec, ...)` assembles the differentiable problem — a
+`StateBuilder` (eager index machinery, traced parameter application), the
+`run_window_diff` window at the GradSpec's remat policy, and a registered
+objective — into one jit-able ``loss_fn(params) -> (loss, aux)``.
+`fit_simulation(...)` drives it with the seed's `optim.adamw`, with
+per-iteration checkpointing through `checkpoint.CheckpointManager` (the
+same atomic step-stamped store the simulation autosave uses).
+
+The whole loop compiles the window EXACTLY ONCE: params are traced array
+inputs, so AdamW steps change values, never shapes or statics
+(tests/test_grad.py pins the trace counter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.grad.objectives import get_objective
+from repro.grad.params import StateBuilder
+from repro.grad.spec import GradSpec
+
+__all__ = ["FitResult", "fit_simulation", "make_objective"]
+
+
+@dataclasses.dataclass
+class FitResult:
+    """Outcome of `fit_simulation`: final params (python floats), the
+    per-iteration trajectory (each record holds the evaluated params, loss,
+    physical objective, grads, and grad norm), the problem description, and
+    the number of window (re)traces observed (1 == no recompilation)."""
+
+    params: dict
+    history: list
+    spec: object
+    grad: GradSpec
+    compiles: int
+
+    @property
+    def objective_trajectory(self) -> list:
+        return [r["objective"] for r in self.history]
+
+
+def _resolve(spec, grad, *, objective=None, learn=None, steps=None,
+             remat=None, remat_chunk=None, objective_kwargs=None) -> GradSpec:
+    """Merge keyword conveniences into a GradSpec (kwargs win)."""
+    base = grad or GradSpec()
+    kw = {}
+    if objective is not None:
+        kw["objective"] = objective
+    if learn is not None:
+        kw["learn"] = tuple(learn)
+    if steps is not None:
+        kw["steps"] = steps
+    if remat is not None:
+        kw["remat"] = remat
+    if remat_chunk is not None:
+        kw["remat_chunk"] = remat_chunk
+    if objective_kwargs is not None:
+        kw["objective_kwargs"] = tuple(objective_kwargs.items()) \
+            if isinstance(objective_kwargs, dict) else tuple(objective_kwargs)
+    return dataclasses.replace(base, **kw) if kw else base
+
+
+def _problem(spec, gspec: GradSpec, dtype=None):
+    """-> (loss_fn, params0, builder, n_steps). The loss is minimized:
+    maximize-objectives are negated, and aux carries the physical value
+    plus the window's halt protocol scalars."""
+    from repro.api.facade import pic_config
+    from repro.core import policy_init
+    from repro.pic.simulation import run_window_diff
+
+    obj = get_objective(gspec.objective)
+    config = dataclasses.replace(pic_config(spec), backend="xla")
+    builder = StateBuilder(spec, config, dtype=dtype)
+    n_steps = gspec.steps or spec.run.steps
+    chunk = 0
+    if gspec.remat == "chunk":
+        chunk = gspec.remat_chunk or spec.run.window or 0
+        if chunk <= 0 or n_steps % chunk:
+            raise ValueError(
+                f"remat='chunk' needs a positive chunk dividing the {n_steps} "
+                f"differentiated steps; got {chunk} (set GradSpec.remat_chunk "
+                "or spec.run.window)"
+            )
+    okw = gspec.okwargs
+
+    def loss_fn(params):
+        state = builder.build(params)
+        fstate, _, bundle = run_window_diff(
+            state, policy_init(), builder.config, n_steps,
+            policy=spec.sort.policy, with_energies=False,
+            remat=gspec.remat, remat_chunk=chunk,
+        )
+        value = obj.fn(fstate, bundle, builder.config, **okw)
+        loss = -value if obj.maximize else value
+        aux = {
+            "objective": value,
+            "halt_code": bundle["halt_code"],
+            "n_done": bundle["n_done"],
+        }
+        return loss, aux
+
+    return loss_fn, builder.initial_params(gspec.learn), builder, n_steps
+
+
+def make_objective(spec, grad: GradSpec | None = None, *, dtype=None, **kw):
+    """Build the differentiable problem a spec + GradSpec describe.
+
+    Returns ``(loss_fn, params0)``: ``loss_fn(params) -> (loss, aux)`` is
+    pure and jit/grad-able (``aux`` = objective value, halt_code, n_done;
+    use ``jax.value_and_grad(loss_fn, has_aux=True)``), ``params0`` the
+    spec's current values of the learned leaves. Keyword conveniences
+    (``objective=``, ``learn=``, ``steps=``, ``remat=``, ...) override the
+    GradSpec; ``dtype=jnp.float64`` (under x64) runs the whole problem in
+    double precision for finite-difference validation.
+    """
+    gspec = _resolve(spec, grad, **kw)
+    loss_fn, params0, _, _ = _problem(spec, gspec, dtype=dtype)
+    return loss_fn, params0
+
+
+def fit_simulation(spec, grad: GradSpec | None = None, *, iters: int = 8,
+                   optimizer=None, checkpoint_dir: str | None = None,
+                   checkpoint_every: int = 1, keep: int = 2,
+                   on_iteration=None, dtype=None, **kw) -> FitResult:
+    """Optimize the learned SimSpec leaves with AdamW (optim.adamw).
+
+    One jitted ``value_and_grad`` drives ``iters`` updates; non-finite
+    losses/grads and window halts (capacity overflow) raise loudly rather
+    than silently poisoning the trajectory. ``checkpoint_dir`` enables
+    step-stamped {params, optimizer state} checkpoints every
+    ``checkpoint_every`` iterations (atomic writes, keep-``keep`` GC) and
+    RESUMES from the latest one when present — re-running the same command
+    after a crash continues the fit. ``on_iteration(record)`` observes each
+    appended history record (the CLI's progress printer).
+    """
+    from repro.core.health import HALT_NAMES
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+    from repro.pic import simulation as _sim
+
+    gspec = _resolve(spec, grad, **kw)
+    loss_fn, params, _, _ = _problem(spec, gspec, dtype=dtype)
+    cfg = optimizer or AdamWConfig(lr=0.05, weight_decay=0.0)
+    opt = adamw_init(params)
+    start = 0
+    manager = None
+    if checkpoint_dir:
+        from repro.checkpoint.checkpoint import CheckpointManager
+
+        manager = CheckpointManager(checkpoint_dir, keep=keep)
+        latest = manager.latest_step()
+        if latest is not None:
+            restored, _ = manager.restore({"params": params, "opt": opt}, latest)
+            params, opt = restored["params"], restored["opt"]
+            start = latest
+
+    vg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    traces0 = _sim._window_trace_count
+    history = []
+    for it in range(start, iters):
+        (loss, aux), grads = vg(params)
+        halt = int(aux["halt_code"])
+        if halt:
+            raise RuntimeError(
+                f"fit iteration {it}: window halted with code {halt} "
+                f"({HALT_NAMES[halt]}) after {int(aux['n_done'])} steps — "
+                "grow spec.sort.capacity (the differentiable window cannot "
+                "grow mid-trace)"
+            )
+        record = {
+            "iter": it,
+            "loss": float(loss),
+            "objective": float(aux["objective"]),
+            "params": {k: float(v) for k, v in params.items()},
+            "grads": {k: float(g) for k, g in grads.items()},
+        }
+        if not all(
+            math.isfinite(v) for v in
+            [record["loss"], *record["grads"].values()]
+        ):
+            raise RuntimeError(
+                f"fit iteration {it}: non-finite loss/gradient {record}"
+            )
+        params, opt, metrics = adamw_update(grads, opt, params, cfg)
+        record["grad_norm"] = float(metrics["grad_norm"])
+        history.append(record)
+        if on_iteration is not None:
+            on_iteration(record)
+        if manager is not None and (it + 1) % checkpoint_every == 0:
+            manager.save(it + 1, {"params": params, "opt": opt})
+    return FitResult(
+        params={k: float(v) for k, v in params.items()},
+        history=history,
+        spec=spec,
+        grad=gspec,
+        compiles=_sim._window_trace_count - traces0,
+    )

@@ -1,0 +1,125 @@
+"""Registry of differentiable physics objectives (docs/autodiff.md).
+
+An objective is a scalar function of the FINAL window state (and the
+on-device diagnostics bundle) that `grad.fit` differentiates through the
+whole windowed run:
+
+    @register_objective("my_loss", maximize=True)
+    def my_loss(state, bundle, config, **kwargs) -> jax.Array: ...
+
+Conventions:
+
+* Objectives compute their reductions from ``state`` at the state's own
+  dtype (f64 under the finite-difference tests) rather than reusing the
+  bundle's float32 diagnostic energies — f32 round-off would dominate a
+  1e-4-epsilon central difference.
+* Hard counts are smoothed: `injected_charge` gates on a sigmoid of the
+  kinetic energy instead of a step function, so the objective (and its
+  gradient) is continuous in the laser/plasma parameters.
+* ``maximize=True`` objectives are negated by the fit loop; the registry
+  records the sign so CLIs and benchmarks report the physical quantity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.pic.pusher import lorentz_gamma
+
+__all__ = [
+    "Objective",
+    "get_objective",
+    "objective_names",
+    "register_objective",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    name: str
+    fn: Callable
+    maximize: bool
+    doc: str
+
+
+_OBJECTIVES: dict[str, Objective] = {}
+
+
+def register_objective(name: str, *, maximize: bool = True):
+    """Register ``fn(state, bundle, config, **kwargs) -> scalar`` under
+    ``name``. ``maximize`` records the optimization sense (the fit loop
+    minimizes ``-fn`` when set)."""
+
+    def deco(fn: Callable):
+        doc = (fn.__doc__ or "").strip().split("\n")[0]
+        _OBJECTIVES[name] = Objective(name=name, fn=fn, maximize=maximize, doc=doc)
+        return fn
+
+    return deco
+
+
+def objective_names() -> list[str]:
+    return sorted(_OBJECTIVES)
+
+
+def get_objective(name: str) -> Objective:
+    if name not in _OBJECTIVES:
+        raise KeyError(
+            f"unknown objective {name!r}; registered: {objective_names()}"
+        )
+    return _OBJECTIVES[name]
+
+
+# ---------------------------------------------------------------------------
+# Shipped objectives
+# ---------------------------------------------------------------------------
+
+
+def _gate(state, e_min, width):
+    """Soft indicator of "trapped/energetic" particles: sigmoid of kinetic
+    energy (gamma - 1) above ``e_min``, softness ``width`` — the smooth
+    stand-in for the experimental energy cut."""
+    p = state.particles
+    gamma = lorentz_gamma(p.u)
+    return jax.nn.sigmoid(((gamma - 1.0) - e_min) / width), gamma
+
+
+@register_objective("injected_charge", maximize=True)
+def injected_charge(state, bundle, config, *, e_min: float = 0.5,
+                    width: float = 0.1):
+    """Charge trapped above the energy cut: sum of |q| * w over alive
+    particles, sigmoid-gated on kinetic energy (gamma - 1) > e_min."""
+    p = state.particles
+    gate, _ = _gate(state, e_min, width)
+    alive = p.alive.astype(p.w.dtype)
+    return jnp.sum(jnp.abs(jnp.asarray(config.charge, p.w.dtype)) * p.w * alive * gate)
+
+
+@register_objective("mean_beam_energy", maximize=True)
+def mean_beam_energy(state, bundle, config, *, e_min: float = 0.5,
+                     width: float = 0.1):
+    """Charge-weighted mean kinetic energy (gamma - 1) of the gated beam."""
+    p = state.particles
+    gate, gamma = _gate(state, e_min, width)
+    wgt = p.w * p.alive.astype(p.w.dtype) * gate
+    return jnp.sum(wgt * (gamma - 1.0)) / (jnp.sum(wgt) + jnp.asarray(1e-9, p.w.dtype))
+
+
+@register_objective("field_energy_band", maximize=True)
+def field_energy_band(state, bundle, config, *, z0: float = 0.0,
+                      z1: float | None = None):
+    """EM field energy (0.5 * sum(E^2 + B^2) * cell volume) inside the
+    z-slab [z0, z1) in grid units; z1=None means the box end."""
+    f = state.fields
+    nz = config.grid.shape[2]
+    hi = nz if z1 is None else z1
+    mask = ((jnp.arange(nz) >= z0) & (jnp.arange(nz) < hi)).astype(f.ex.dtype)
+    em = sum(
+        0.5 * jnp.sum((comp * comp) * mask[None, None, :])
+        for comp in (f.ex, f.ey, f.ez, f.bx, f.by, f.bz)
+    )
+    return em * jnp.asarray(config.grid.cell_volume, f.ex.dtype)

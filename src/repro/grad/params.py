@@ -1,0 +1,145 @@
+"""Trainable-parameter mapping: declared `SimSpec` leaves <-> a flat pytree.
+
+`LEARNABLE` names the SimSpec leaves the gradient subsystem can
+differentiate; `StateBuilder` splits state construction into the eager,
+parameter-INDEPENDENT part (particle lattice, global sort, bin layout,
+slab — all index machinery, no tangents) and the traced,
+parameter-DEPENDENT part (`build(params)`: laser injection with jnp-scalar
+overrides, density scaling of the weights). The traced part is pure jnp of
+the flat params dict, so
+
+* `jax.grad` flows from the loss back into every learned leaf, and
+* an optimizer step changes only ARRAY VALUES — the compiled window is
+  traced once per fit, never per iteration (trace-counter-pinned in
+  tests/test_grad.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LEARNABLE", "StateBuilder", "default_params", "resolve_param"]
+
+# canonical name -> human description (the CLI menu); aliases below
+LEARNABLE = {
+    "laser.a0": "laser amplitude a0",
+    "laser.waist": "laser transverse 1/e radius w0 (grid units)",
+    "laser.duration": "laser longitudinal 1/e half-length tau (grid units)",
+    "density": "plasma density scale (multiplies every macro-weight)",
+}
+
+_ALIASES = {
+    "laser.w0": "laser.waist",
+    "laser.tau": "laser.duration",
+}
+
+
+def resolve_param(name: str) -> str:
+    """Canonical LEARNABLE key for ``name`` (accepts the paper-notation
+    aliases ``laser.w0``/``laser.tau``); loud KeyError otherwise."""
+    name = _ALIASES.get(name, name)
+    if name not in LEARNABLE:
+        raise KeyError(
+            f"unknown trainable parameter {name!r}; learnable: "
+            f"{sorted(LEARNABLE)} (aliases: {sorted(_ALIASES)})"
+        )
+    return name
+
+
+def default_params(spec, learn, dtype=jnp.float32) -> dict:
+    """The spec's current values of the learned leaves as a flat dict of
+    jnp scalars — the fit loop's initial point."""
+    params = {}
+    for name in learn:
+        name = resolve_param(name)
+        if name == "density":
+            if spec.plasma.density <= 0:
+                raise ValueError(
+                    "learning 'density' needs spec.plasma.density > 0 (the "
+                    "trainable scale multiplies the spec-built weights)"
+                )
+            value = spec.plasma.density
+        else:
+            if spec.laser is None:
+                raise ValueError(
+                    f"learning {name!r} needs a spec with a laser (spec.laser is None)"
+                )
+            value = getattr(spec.laser, name.split(".", 1)[1])
+        params[name] = jnp.asarray(value, dtype)
+    return params
+
+
+def _cast_floats(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.inexact) else a,
+        tree,
+    )
+
+
+class StateBuilder:
+    """Eager parameter-independent setup + traced `build(params)`.
+
+    Construction runs the spec's particle build, global sort, and binning
+    EAGERLY (they are pure index machinery of the parameter-independent
+    positions — and binning overflow must be resolved on the host, exactly
+    like `Simulation._setup`; the grown capacity is published as
+    ``self.config``). `build(params)` is traced inside the loss: it injects
+    the laser with the params' jnp scalars and scales the weights by the
+    density parameter, touching nothing that would retrigger compilation.
+    """
+
+    def __init__(self, spec, config, *, dtype=None):
+        from repro.api.facade import build_particles
+        from repro.core import choose_capacity
+        from repro.pic.grid import FieldState
+        from repro.pic.simulation import init_state
+
+        if spec.mesh.shape is not None:
+            raise ValueError(
+                "the gradient subsystem differentiates the single-device "
+                f"windowed driver; spec {spec.name!r} names mesh {spec.mesh.shape}"
+            )
+        self.spec = spec
+        self.dtype = jnp.dtype(dtype) if dtype is not None else jnp.float32
+        particles = _cast_floats(build_particles(spec), self.dtype)
+        fields0 = FieldState.zeros(spec.grid.shape, self.dtype)
+        state0, overflow = init_state(fields0, particles, config)
+        if overflow:
+            config = dataclasses.replace(
+                config, capacity=choose_capacity(config.capacity * 2 // 3 * 2)
+            )
+            state0, overflow = init_state(fields0, particles, config)
+            if overflow:
+                raise ValueError(
+                    "initial binning overflow persists after capacity growth; "
+                    "set spec.sort.capacity explicitly"
+                )
+        self.config = config
+        self._state0 = state0
+
+    def initial_params(self, learn) -> dict:
+        return default_params(self.spec, learn, self.dtype)
+
+    def build(self, params: dict):
+        """Traced: the initial `PICState` at ``params`` (flat dict keyed by
+        canonical LEARNABLE names; missing keys fall back to spec values)."""
+        from repro.pic.laser import inject_laser
+
+        p = {k: jnp.asarray(v, self.dtype) for k, v in params.items()}
+        state = self._state0
+        particles = state.particles
+        if "density" in p:
+            scale = p["density"] / jnp.asarray(self.spec.plasma.density, self.dtype)
+            particles = dataclasses.replace(particles, w=particles.w * scale)
+        fields = state.fields  # zeros at the builder dtype
+        if self.spec.laser is not None:
+            fields = inject_laser(
+                fields, self.spec.grid, self.spec.laser,
+                a0=p.get("laser.a0"),
+                waist=p.get("laser.waist"),
+                duration=p.get("laser.duration"),
+            )
+        return dataclasses.replace(state, fields=fields, particles=particles)

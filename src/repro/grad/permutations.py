@@ -1,0 +1,113 @@
+"""Custom VJPs for the sorter's index machinery (docs/autodiff.md).
+
+Every reordering the simulation performs — the global counting sort's
+attribute permutation, the GPMA slot table's bin-order gathers
+(`build_bin_slab` / `bin_slab_values`), the distributed migration
+reindexing — is *piecewise constant* in the physics values: the indices are
+integer functions of positions whose derivative is zero almost everywhere.
+Reverse-mode AD therefore needs exactly two things from them:
+
+1. the index computation carries NO tangent (it is `stop_gradient`), and
+2. the value movement is the linear map ``values -> values[perm]``, whose
+   transpose is a scatter-add at ``perm``.
+
+JAX's native gather/scatter rules already provide (2), but the wrappers
+here make the contract explicit and fix the one place native AD is wrong:
+slot tables pad gap/overflow slots with ``-1`` which the forward pass
+clamps to 0, aliasing particle 0 — a naive transpose would scatter those
+slots' cotangents onto particle 0. `slot_gather`'s backward masks invalid
+slots out instead.
+
+Forward passes are bit-identical to the raw indexing they replace
+(tests/test_grad.py pins this): `permute_values(v, perm) == v[perm]` and
+`slot_gather(v, slots) == v[jnp.maximum(slots, 0)]` exactly.
+
+This module imports ONLY jax — `core.binning` depends on it, so it must
+sit below the core layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["permute_values", "permute_tree", "slot_gather"]
+
+
+# ---------------------------------------------------------------------------
+# Full-array permutation (global sort attribute movement)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def permute_values(values: jax.Array, perm: jax.Array) -> jax.Array:
+    """``values[perm]`` along axis 0 with an explicit piecewise-constant-
+    permutation VJP: cotangents scatter-add back through ``perm`` and the
+    index array itself receives none (int-valued, zero tangent)."""
+    return jnp.take(values, perm, axis=0)
+
+
+def _permute_fwd(values, perm):
+    return permute_values(values, perm), (lax.stop_gradient(perm), values.shape)
+
+
+def _permute_bwd(res, ct):
+    perm, shape = res
+    dv = jnp.zeros(shape, ct.dtype).at[perm].add(ct)
+    return dv, None
+
+
+permute_values.defvjp(_permute_fwd, _permute_bwd)
+
+
+def permute_tree(tree, perm: jax.Array):
+    """Apply one permutation to every leaf of a pytree (axis 0).
+
+    Float leaves route through `permute_values` (explicit VJP); integer and
+    boolean leaves — cell ids, alive masks, slot bookkeeping — use plain
+    indexing, since they carry no tangents and a custom VJP on them would
+    only manufacture float0 cotangent plumbing.
+    """
+    return jax.tree.map(
+        lambda a: permute_values(a, perm) if jnp.issubdtype(a.dtype, jnp.inexact)
+        else a[perm],
+        tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Slot-table gather (bin-order staging: build_bin_slab / bin_slab_values)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def slot_gather(values: jax.Array, slots: jax.Array) -> jax.Array:
+    """Stage per-particle ``values`` (N, ...) onto a slot table
+    ``slots`` (n_cells, capacity; ``-1`` marks gap/overflow slots),
+    returning (n_cells, capacity, ...).
+
+    Forward is exactly the historical clamp-gather
+    ``values[jnp.maximum(slots, 0)]`` — invalid slots alias particle 0, and
+    the CALLER's masking (`jnp.where(slab.valid, ...)`) keeps its job. The
+    backward masks invalid slots out of the scatter-add, so particle 0
+    never accumulates phantom cotangents even if a consumer forgets to
+    mask.
+    """
+    return jnp.take(values, jnp.maximum(slots, 0), axis=0)
+
+
+def _slot_gather_fwd(values, slots):
+    slots = lax.stop_gradient(slots)
+    return slot_gather(values, slots), (slots, values.shape)
+
+
+def _slot_gather_bwd(res, ct):
+    slots, shape = res
+    valid = (slots >= 0).reshape(slots.shape + (1,) * (ct.ndim - slots.ndim))
+    ct = jnp.where(valid, ct, jnp.zeros((), ct.dtype))
+    dv = jnp.zeros(shape, ct.dtype).at[jnp.maximum(slots, 0)].add(ct)
+    return dv, None
+
+
+slot_gather.defvjp(_slot_gather_fwd, _slot_gather_bwd)

@@ -12,11 +12,13 @@ executables with the cached callable.
 
 Protocol (stdlib only — asyncio + JSON lines, no network deps):
 
-    svc = SimService(max_batch=8)
+    svc = SimService(max_batch=8, max_queue=64)
     await svc.start()
     job_id = await svc.submit(spec.to_json())
     async for event in svc.results(job_id):
-        ...   # {"event": "window", ...} * N, then {"event": "done", ...}
+        ...   # {"event": "window", ...} * N, then a terminal event:
+        ...   # done | error | rejected (admission bound) | cancelled
+    svc.cancel(job_id)   # queued -> dropped; running -> stream cut short
     await svc.close()
 
 Optionally `serve(svc, host, port)` exposes the same protocol over a
@@ -122,11 +124,14 @@ class SimService:
     """
 
     def __init__(self, *, max_batch: int = 8, batch_wait: float = 0.05,
-                 cache_size: int = 8):
+                 cache_size: int = 8, max_queue: int = 0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue}")
         self.max_batch = max_batch
         self.batch_wait = batch_wait
+        self.max_queue = max_queue  # admission bound; 0 = unbounded
         self.cache = ExecutableCache(cache_size)
         self.jobs: dict[str, SimJob] = {}
         self._pending: asyncio.Queue = asyncio.Queue()
@@ -134,6 +139,9 @@ class SimService:
         self._worker: asyncio.Task | None = None
         self.batches_run = 0
         self.jobs_done = 0
+        self.queued = 0      # jobs admitted but not yet running
+        self.rejected = 0    # jobs refused at the admission bound
+        self.cancelled = 0   # cancel() calls that hit a live job
 
     # -- client side --------------------------------------------------------
 
@@ -156,8 +164,42 @@ class SimService:
             signature=spec_signature(spec),
         )
         self.jobs[job.id] = job
+        if self.max_queue and self.queued >= self.max_queue:
+            # Admission control: refuse loudly instead of buffering without
+            # bound — the client sees a terminal event, not a hang.
+            job.status = "rejected"
+            self.rejected += 1
+            job.events.put_nowait({
+                "event": "rejected",
+                "job": job.id,
+                "queued": self.queued,
+                "max_queue": self.max_queue,
+                "message": f"queue full ({self.queued}/{self.max_queue}); "
+                           "retry after draining a result stream",
+            })
+            return job.id
+        self.queued += 1
         await self._pending.put(job)
         return job.id
+
+    def cancel(self, job_id: str) -> str:
+        """Cancel a job: a queued job is dropped (terminal ``cancelled``
+        event right away); a running job is flagged so its stream stops at
+        the next window boundary and ends with ``cancelled`` instead of
+        ``done``. Returns the job's new status; terminal jobs are left
+        as-is. Raises KeyError for unknown ids."""
+        job = self.jobs[job_id]
+        if job.status == "queued":
+            job.status = "cancelled"
+            self.queued -= 1
+            self.cancelled += 1
+            job.events.put_nowait(
+                {"event": "cancelled", "job": job.id, "was": "queued"}
+            )
+        elif job.status == "running":
+            job.status = "cancelling"
+            self.cancelled += 1
+        return job.status
 
     async def results(self, job_id: str):
         """Async-iterate a job's event stream until its terminal event."""
@@ -165,7 +207,7 @@ class SimService:
         while True:
             event = await job.events.get()
             yield event
-            if event["event"] in ("done", "error"):
+            if event["event"] in ("done", "error", "rejected", "cancelled"):
                 return
 
     async def close(self) -> None:
@@ -182,10 +224,15 @@ class SimService:
             head = await self._pending.get()
             if head is None:
                 return
+            if head.status != "queued":  # cancelled while waiting
+                continue
             batch = await self._gather_batch(head)
+            if not batch:
+                continue
             self.batches_run += 1
             for job in batch:
                 job.status = "running"
+                self.queued -= 1
             try:
                 await loop.run_in_executor(None, self._run_batch, batch, loop)
             except Exception as err:  # surface, don't kill the worker
@@ -196,8 +243,11 @@ class SimService:
                     )
             else:
                 for job in batch:
-                    job.status = "done"
-                    self.jobs_done += 1
+                    if job.status == "cancelling":
+                        job.status = "cancelled"
+                    else:
+                        job.status = "done"
+                        self.jobs_done += 1
 
     async def _gather_batch(self, head: SimJob) -> list[SimJob]:
         """Drain queued jobs that share ``head``'s signature (briefly
@@ -218,6 +268,8 @@ class SimService:
             if nxt is None:
                 self._pending.put_nowait(None)  # preserve the shutdown signal
                 break
+            if nxt.status != "queued":  # cancelled while waiting
+                continue
             if nxt.signature == head.signature:
                 batch.append(nxt)
             else:
@@ -245,6 +297,8 @@ class SimService:
 
         def on_window(e: EnsembleSimulation, host: dict) -> None:
             for slot, job in enumerate(batch):
+                if job.status == "cancelling":  # flagged: stop streaming
+                    continue
                 mb = member_bundle(host, slot)
                 records = e.histories[slot][seen[slot]:]
                 seen[slot] = len(e.histories[slot])
@@ -260,6 +314,14 @@ class SimService:
 
         ens.run(on_window=on_window)
         for slot, job in enumerate(batch):
+            if job.status == "cancelling":
+                post(job, {
+                    "event": "cancelled",
+                    "job": job.id,
+                    "was": "running",
+                    "step": int(ens.host_step[slot]),
+                })
+                continue
             post(job, {
                 "event": "done",
                 "job": job.id,
@@ -271,8 +333,9 @@ class SimService:
 
 
 async def serve(service: SimService, host: str = "127.0.0.1", port: int = 8571):
-    """JSON-lines TCP front end: each line in is ``{"spec": {...}}``, each
-    line out is one event of that job's stream (ending with done/error)."""
+    """JSON-lines TCP front end: each line in is ``{"spec": {...}}`` (event
+    stream out, ending with a terminal event) or ``{"cancel": "job-N"}``
+    (single ack line out)."""
     await service.start()
 
     async def handle(reader, writer):
@@ -280,6 +343,15 @@ async def serve(service: SimService, host: str = "127.0.0.1", port: int = 8571):
             while line := await reader.readline():
                 try:
                     request = json.loads(line)
+                    if "cancel" in request:
+                        status = service.cancel(request["cancel"])
+                        writer.write(
+                            (json.dumps({"event": "cancel",
+                                         "job": request["cancel"],
+                                         "status": status}) + "\n").encode()
+                        )
+                        await writer.drain()
+                        continue
                     job_id = await service.submit(request["spec"])
                 except Exception as err:
                     writer.write(
@@ -342,9 +414,29 @@ async def _smoke(args) -> int:
         print(f"FAIL: jobs ran in batches of {sorted(sizes)}, "
               f"wanted one batch of {args.members}")
         ok = False
+    # Admission control + cancellation, deterministically: a bounded
+    # service whose worker is never started, so queue state can't race.
+    adm = SimService(max_batch=1, max_queue=1)
+    j1 = await adm.submit(base.to_json())
+    j2 = await adm.submit(base.to_json())  # over the bound -> rejected
+    ev2 = [e async for e in adm.results(j2)]
+    if [e["event"] for e in ev2] != ["rejected"]:
+        print(f"FAIL: over-bound submit streamed {ev2}, wanted one rejected")
+        ok = False
+    status = adm.cancel(j1)
+    ev1 = [e async for e in adm.results(j1)]
+    if status != "cancelled" or [e["event"] for e in ev1] != ["cancelled"]:
+        print(f"FAIL: queued cancel gave status={status}, events={ev1}")
+        ok = False
+    if (adm.queued, adm.rejected, adm.cancelled) != (0, 1, 1):
+        print(f"FAIL: admission counters queued={adm.queued} "
+              f"rejected={adm.rejected} cancelled={adm.cancelled}")
+        ok = False
+
     print(
         f"sim_serve smoke: {len(ids)} jobs, batch={sorted(sizes)}, "
         f"{windows[ids[0]]} windows/job, cache={svc.cache.stats()}, "
+        f"admission rejected={adm.rejected} cancelled={adm.cancelled}, "
         f"{elapsed:.2f}s -> {'OK' if ok else 'FAIL'}"
     )
     return 0 if ok else 1

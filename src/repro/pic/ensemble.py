@@ -47,7 +47,7 @@ from repro.core import (
 )
 from repro.core.health import HALT_BIN_OVERFLOW, HALT_NAMES, HALT_NONE
 from repro.pic.simulation import (
-    _WINDOW_STATICS,
+    _ENSEMBLE_STATICS,
     PICConfig,
     PICState,
     _energies,
@@ -97,7 +97,7 @@ def make_ensemble_window_fn(*, donate: bool = True):
     (`EnsembleSimulation(window_fn=None)`) is shared and never evicted."""
     return partial(
         jax.jit,
-        static_argnames=_WINDOW_STATICS,
+        static_argnames=_ENSEMBLE_STATICS,
         donate_argnums=(0, 1) if donate else (),
     )(_ensemble_window_impl)
 

@@ -24,21 +24,36 @@ class LaserSpec:
     z_center: float = 24.0     # initial pulse center, grid units
 
 
-def inject_laser(fields: FieldState, grid: GridSpec, spec: LaserSpec) -> FieldState:
+def inject_laser(fields: FieldState, grid: GridSpec, spec: LaserSpec, *,
+                 a0=None, waist=None, duration=None) -> FieldState:
+    """Add the pulse the spec describes to ``fields``.
+
+    ``a0`` / ``waist`` / ``duration`` override the spec values and may be
+    TRACED jnp scalars — the pulse amplitude/geometry are then inputs of the
+    compiled program rather than constants baked into it, so the gradient
+    subsystem (grad.params) can differentiate through them and an optimizer
+    step changing them never retriggers compilation. Defaults keep the
+    historical static-float path bit-for-bit.
+    """
     nx, ny, nz = grid.shape
+    dtype = fields.ex.dtype
+    a0 = jnp.asarray(spec.a0 if a0 is None else a0, dtype)
+    waist = jnp.asarray(spec.waist if waist is None else waist, dtype)
+    duration = jnp.asarray(spec.duration if duration is None else duration, dtype)
+
     x = jnp.arange(nx)[:, None, None] + 0.5  # Ex is x-staggered
     y = jnp.arange(ny)[None, :, None]
     z = jnp.arange(nz)[None, None, :]
 
     r2 = (x - nx / 2) ** 2 + (y - ny / 2) ** 2
     k0 = 2.0 * jnp.pi / spec.wavelength
-    envelope = jnp.exp(-r2 / spec.waist**2 - ((z - spec.z_center) / spec.duration) ** 2)
-    ex = spec.a0 * k0 * envelope * jnp.cos(k0 * (z - spec.z_center))
+    envelope = jnp.exp(-r2 / waist**2 - ((z - spec.z_center) / duration) ** 2)
+    ex = a0 * k0 * envelope * jnp.cos(k0 * (z - spec.z_center))
 
     # By staggered at (i+1/2, j, k+1/2): same expression evaluated at z+1/2.
     zb = z + 0.5
-    env_b = jnp.exp(-r2 / spec.waist**2 - ((zb - spec.z_center) / spec.duration) ** 2)
-    by = spec.a0 * k0 * env_b * jnp.cos(k0 * (zb - spec.z_center))
+    env_b = jnp.exp(-r2 / waist**2 - ((zb - spec.z_center) / duration) ** 2)
+    by = a0 * k0 * env_b * jnp.cos(k0 * (zb - spec.z_center))
 
     return dataclasses.replace(
         fields,

@@ -95,6 +95,7 @@ from repro.distributed.fault import (
     no_fault_vec,
     run_supervised_windows,
 )
+from repro.grad.permutations import permute_tree
 from repro.pic.grid import B_STAGGER, E_STAGGER, FieldState, GridSpec
 from repro.pic.maxwell import maxwell_step
 from repro.pic.plasma import ParticleState
@@ -168,7 +169,7 @@ def init_state(fields: FieldState, particles: ParticleState, config: PICConfig) 
     """Global init (paper Alg. 1 lines 1-5): global sort + GPMA build."""
     cells = cell_index(particles.pos, config.grid.shape)
     perm = sort_permutation(cells, particles.alive)
-    particles = jax.tree.map(lambda a: a[perm], particles)
+    particles = permute_tree(particles, perm)
     cells = cell_index(particles.pos, config.grid.shape)
     layout, overflow = build_bins(cells, particles.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
     state = PICState(
@@ -306,7 +307,10 @@ def global_sort_device(state: PICState, config: PICConfig) -> tuple[PICState, ja
     under `lax.cond` in the scan window."""
     cells = cell_index(state.particles.pos, config.grid.shape)
     perm = sort_permutation(cells, state.particles.alive)
-    particles = jax.tree.map(lambda a: a[perm], state.particles)
+    # the sort is a piecewise-constant permutation: the index computation is
+    # stop-gradient, the value movement differentiable (grad.permutations) —
+    # bitwise identical to plain a[perm] in the forward pass
+    particles = permute_tree(state.particles, perm)
     cells = cell_index(particles.pos, config.grid.shape)
     layout, overflow = build_bins(cells, particles.alive, n_cells=config.grid.n_cells, capacity=config.capacity)
     state = dataclasses.replace(
@@ -486,7 +490,8 @@ _window_trace_count = 0
 
 def _pic_run_window_impl(state, pstate, n_target, fault_vec, config: PICConfig,
                          policy: SortPolicyConfig, n_steps: int, with_energies: bool,
-                         health: HealthConfig | None, with_fault: bool):
+                         health: HealthConfig | None, with_fault: bool,
+                         remat: str = "none", remat_chunk: int = 0):
     global _window_trace_count
     _window_trace_count += 1
 
@@ -542,10 +547,43 @@ def _pic_run_window_impl(state, pstate, n_target, fault_vec, config: PICConfig,
     zero_f = jnp.zeros((), jnp.float32)
     carry0 = (state, pstate, n_target <= jnp.int32(0), zero, jnp.int32(-1),
               zero, zero_f, zero_f, zero, zero)
+    xs = jnp.arange(n_steps, dtype=jnp.int32)
+    # Rematerialization policy for reverse-mode (run_window_diff). The primal
+    # computation is untouched — jax.checkpoint is the identity on the
+    # forward pass — so "none" IS the production program and the remat
+    # variants stay bit-identical forward (tests/test_grad.py pins this).
+    # `prevent_cse=False` is the documented setting under scan, where the
+    # loop structure already prevents the CSE that checkpoint guards against.
+    if remat == "step":
+        # one remat point per step: backward recomputes each step from its
+        # carry, so peak residency is O(window state), not O(n_steps x state)
+        carry, per_step = lax.scan(
+            jax.checkpoint(body, prevent_cse=False), carry0, xs
+        )
+    elif remat == "chunk":
+        # one remat point per `remat_chunk`-step sub-window: the backward
+        # keeps chunk boundaries and recomputes inside each chunk — the
+        # memory/recompute trade dialed between "none" and "step"
+        if remat_chunk <= 0 or n_steps % remat_chunk:
+            raise ValueError(
+                f"remat='chunk' needs remat_chunk > 0 dividing n_steps, "
+                f"got remat_chunk={remat_chunk}, n_steps={n_steps}"
+            )
+        chunk = jax.checkpoint(
+            lambda c, ii: lax.scan(body, c, ii), prevent_cse=False
+        )
+        carry, per_step = lax.scan(
+            chunk, carry0, xs.reshape(n_steps // remat_chunk, remat_chunk)
+        )
+        per_step = jax.tree.map(
+            lambda a: a.reshape((n_steps,) + a.shape[2:]), per_step
+        )
+    elif remat == "none":
+        carry, per_step = lax.scan(body, carry0, xs)
+    else:
+        raise ValueError(f"unknown remat policy {remat!r} (none | step | chunk)")
     (state, pstate, halted, halt_code, halt_step, halt_inv, halt_meas,
-     halt_ref, sorts, rebuilds), per_step = lax.scan(
-        body, carry0, jnp.arange(n_steps, dtype=jnp.int32)
-    )
+     halt_ref, sorts, rebuilds) = carry
     per_step.pop("halt")
     bundle = {
         "n_done": jnp.sum(per_step["active"]).astype(jnp.int32),
@@ -563,7 +601,8 @@ def _pic_run_window_impl(state, pstate, n_target, fault_vec, config: PICConfig,
     return state, pstate, bundle
 
 
-_WINDOW_STATICS = ("config", "policy", "n_steps", "with_energies", "health", "with_fault")
+_WINDOW_STATICS = ("config", "policy", "n_steps", "with_energies", "health",
+                   "with_fault", "remat", "remat_chunk")
 _pic_run_window_jit = partial(jax.jit, static_argnames=_WINDOW_STATICS)(_pic_run_window_impl)
 _pic_run_window_donated = partial(
     jax.jit, static_argnames=_WINDOW_STATICS, donate_argnums=(0, 1)
@@ -663,6 +702,57 @@ def pic_run_window(
     )
 
 
+def run_window_diff(
+    state: PICState,
+    policy_state: SortPolicyState,
+    config: PICConfig,
+    n_steps: int,
+    *,
+    policy: SortPolicyConfig | None = None,
+    with_energies: bool = False,
+    n_target: int | jax.Array | None = None,
+    remat: str = "step",
+    remat_chunk: int = 0,
+):
+    """The differentiable window: `pic_run_window` with reverse-mode
+    rematerialization and none of the forward-only conveniences that block
+    `jax.grad` (docs/autodiff.md).
+
+    Identical physics program — the forward pass is bit-identical to
+    ``pic_run_window(..., donate=False)`` under the same remat policy, and
+    ``remat="none"`` IS the production program. The differences are purely
+    AD plumbing:
+
+    * buffers are never donated (grad re-reads the primal inputs),
+    * the health sentinel and chaos-harness injection are compiled out,
+    * ``remat`` picks the `jax.checkpoint` granularity: ``"step"`` (default)
+      rematerializes every step so reverse-mode peak memory scales with the
+      window state instead of ``n_steps`` stacked step residuals;
+      ``"chunk"`` checkpoints ``remat_chunk``-step sub-windows (less
+      recompute, more memory); ``"none"`` stores every residual.
+
+    Requires ``config.backend="xla"`` — the Pallas kernel backends define no
+    VJP, and "auto" could resolve to one. `grad.fit.make_objective` builds
+    the config accordingly; direct callers get a loud error instead of an
+    opaque Pallas differentiation failure.
+
+    Returns ``(state, policy_state, bundle)`` exactly like `pic_run_window`;
+    every float leaf is differentiable w.r.t. the float leaves of ``state``.
+    """
+    if config.backend != "xla":
+        raise ValueError(
+            f"run_window_diff needs config.backend='xla' (got "
+            f"{config.backend!r}): the Pallas kernel backends have no VJP"
+        )
+    if n_target is None:
+        n_target = n_steps
+    return _pic_run_window_jit(
+        state, policy_state, jnp.asarray(n_target, jnp.int32), no_fault_vec(),
+        config, policy or SortPolicyConfig(), n_steps, with_energies,
+        None, False, remat, remat_chunk,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Vmapped ensemble window: N independent simulations of ONE shape bucket run
 # their windows as a single compiled program (leading member axis on every
@@ -697,9 +787,12 @@ def _ensemble_window_impl(state, pstate, n_target, fault_vec, config: PICConfig,
     return jax.vmap(member)(state, pstate, n_target, fault_vec)
 
 
-_ensemble_window_jit = partial(jax.jit, static_argnames=_WINDOW_STATICS)(_ensemble_window_impl)
+# The ensemble window is forward-only (no remat statics — reverse-mode goes
+# through run_window_diff on the single-sim impl).
+_ENSEMBLE_STATICS = ("config", "policy", "n_steps", "with_energies", "health", "with_fault")
+_ensemble_window_jit = partial(jax.jit, static_argnames=_ENSEMBLE_STATICS)(_ensemble_window_impl)
 _ensemble_window_donated = partial(
-    jax.jit, static_argnames=_WINDOW_STATICS, donate_argnums=(0, 1)
+    jax.jit, static_argnames=_ENSEMBLE_STATICS, donate_argnums=(0, 1)
 )(_ensemble_window_impl)
 
 

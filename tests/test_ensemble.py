@@ -407,3 +407,58 @@ def test_sim_service_surfaces_bad_specs_and_errors():
     }
     assert cache.get("c") is fns[2]  # most recent survives
     assert cache.get("a") is not fns[0]  # evicted => fresh jit wrapper
+
+
+def test_sim_service_admission_and_cancel():
+    """A bounded service rejects over-quota submits with a loud terminal
+    event; cancel drops a queued job immediately (freeing its admission
+    slot) and cuts a running job's stream to a terminal cancelled event —
+    no window events after the flag, no done. The worker skips jobs
+    cancelled while they sat in the queue."""
+    from repro.launch.sim_serve import SimService
+
+    base = _base_spec(grid=(4, 4, 4), ppc=1, steps=4, window=2)
+
+    async def body():
+        svc = SimService(max_batch=1, batch_wait=0.05, max_queue=1)
+        # worker not started yet: queue state can't race
+        j1 = await svc.submit(base.to_json())
+        j2 = await svc.submit(base.to_json())  # over the bound
+        ev2 = [e async for e in svc.results(j2)]
+        assert [e["event"] for e in ev2] == ["rejected"]
+        assert ev2[0]["queued"] == 1 and ev2[0]["max_queue"] == 1
+        assert svc.jobs[j2].status == "rejected"
+
+        # queued cancel: dropped before any work, slot freed
+        assert svc.cancel(j1) == "cancelled"
+        ev1 = [e async for e in svc.results(j1)]
+        assert [e["event"] for e in ev1] == ["cancelled"]
+        assert ev1[0]["was"] == "queued"
+        assert (svc.queued, svc.rejected, svc.cancelled) == (0, 1, 1)
+        j3 = await svc.submit(base.to_json())  # admitted again
+        assert svc.jobs[j3].status == "queued"
+
+        # running cancel: flag mid-flight => terminal cancelled. Drive
+        # _run_batch directly (as the worker thread would) so the
+        # "running" phase is deterministic, not a sleep race.
+        loop = asyncio.get_running_loop()
+        job = svc.jobs[j3]
+        job.status = "running"
+        svc.queued -= 1
+        assert svc.cancel(j3) == "cancelling"
+        await loop.run_in_executor(None, svc._run_batch, [job], loop)
+        ev3 = [e async for e in svc.results(j3)]
+        assert [e["event"] for e in ev3] == ["cancelled"]
+        assert ev3[0]["was"] == "running"
+
+        # worker skips queue entries that were cancelled while waiting
+        # (j1 is still sitting in _pending with a terminal status)
+        await svc.start()
+        j4 = await svc.submit(base.to_json())
+        ev4 = [e async for e in svc.results(j4)]
+        assert ev4[-1]["event"] == "done"
+        await svc.close()
+        return svc
+
+    svc = asyncio.run(body())
+    assert svc.jobs_done == 1  # only j4 completed normally
