@@ -24,6 +24,8 @@ import jax
 from benchmarks.common import emit, make_workload, time_grid
 from repro.core import (
     CURRENT_STAGGER,
+    bin_slab_staging,
+    build_bin_slab,
     deposit_current_matrix_fused,
     deposit_matrix,
     deposit_rhocell,
@@ -55,6 +57,33 @@ def _fused(wl, order, fused_matmul=None, backend=None):
     )
 
 
+@partial(jax.jit, static_argnames=("grid_shape", "order", "fused_staging"))
+def _staged_impl(pos, v, qw, layout, *, grid_shape, order, fused_staging):
+    if fused_staging:
+        slab, values = bin_slab_staging(pos, v, qw, layout, grid_shape=grid_shape)
+    else:
+        slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
+        values = None
+    return deposit_current_matrix_fused(
+        pos, v, qw, layout, grid_shape=grid_shape, order=order,
+        slab=slab, values=values,
+    )
+
+
+def _staged(wl, order, *, fused_staging: bool):
+    """The driver's staging pipeline as ONE jitted program (the sim step
+    traces both pieces into a single executable): build the step's BinSlab
+    from the slot table, then deposit against it. ``fused_staging=False``
+    is the pre-PR-10 route (positions staged, then `bin_slab_values` does
+    TWO more slot-table gathers for q·w and v inside the deposit);
+    ``True`` stages positions and values off ONE packed gather
+    (`bin_slab_staging`)."""
+    return _staged_impl(
+        wl["pos"], wl["v"], wl["qw"], wl["layout"],
+        grid_shape=wl["grid"].shape, order=order, fused_staging=fused_staging,
+    )
+
+
 # dispatcher backend name -> the sweep row that measures that route
 _BACKEND_ROWS = {
     "xla": "matrix_fused",
@@ -79,6 +108,10 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
             "rhocell": partial(_per_component, "rhocell", wl, order),
             "matrix": partial(_per_component, "matrix", wl, order),
             "matrix_fused": partial(_fused, wl, order),
+            # driver-shaped rows: staging + deposit, two-gather vs the
+            # PR 10 fused staging (one packed slot-table gather)
+            "staged_two_gathers": partial(_staged, wl, order, fused_staging=False),
+            "staged_fused": partial(_staged, wl, order, fused_staging=True),
         }
         if with_pallas:
             # apples-to-apples kernel comparison: both routes through Pallas
@@ -102,7 +135,10 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
             auto_backend[f"order{order}"] = winner
             row["matrix_fused_auto"] = row[_BACKEND_ROWS[winner]]
         results[f"order{order}"] = row
-        sp = {"fused_vs_matrix": row["matrix"] / row["matrix_fused"]}
+        sp = {
+            "fused_vs_matrix": row["matrix"] / row["matrix_fused"],
+            "staging_fused_vs_two_gathers": row["staged_two_gathers"] / row["staged_fused"],
+        }
         if with_pallas:
             sp["fused_vs_matrix_pallas"] = row["matrix_pallas"] / row["matrix_fused_pallas"]
             sp["auto_vs_matrix_fused"] = row["matrix_fused"] / row["matrix_fused_auto"]
@@ -120,7 +156,12 @@ def collect(grid=(16, 16, 16), ppc=8, *, with_pallas: bool = True, rounds: int =
                     "(time_grid: drift-robust on shared CPUs); pallas rows run the "
                     "interpreter off-TPU and are NOT comparable to compiled rows there; "
                     "matrix_fused_auto is the row of the backend the dispatcher's "
-                    "autotune cache resolves to (seeded from this sweep's medians)",
+                    "autotune cache resolves to (seeded from this sweep's medians); "
+                    "staged_* rows time the driver-shaped staging+deposit pipeline "
+                    "as one jitted program (three slot-table gathers vs the single "
+                    "packed bin_slab_staging gather; XLA CPU fuses the gathers so "
+                    "the saved passes read ~neutral here — the row exists to track "
+                    "the trajectory on real accelerators)",
         },
         "auto_backend": auto_backend,
         "results": results,

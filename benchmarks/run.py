@@ -24,6 +24,7 @@ MODULES = [
     "gather_sweep",       # per-kernel gather regression (see --gather-json)
     "sim_loop_sweep",     # host-driven vs device-resident loop (see --sim-json)
     "dist_sweep",         # distributed windowed vs per-step loop (see --dist-json)
+    "comm_sweep",         # communication co-design matrix (see --comm-json)
     "ensemble_sweep",     # vmapped ensemble vs sequential runs (see --ensemble-json)
     "grad_sweep",         # differentiable window: grad vs forward (see --grad-json)
 ]
@@ -42,6 +43,16 @@ def run_smoke() -> None:
     smoke_dispatch()
     smoke_ensemble()
     smoke_grad()
+    smoke_comm()
+
+
+def smoke_comm() -> None:
+    """Communication lane: the overlapped halo exchange must stay
+    bit-identical to the serialized exchange (2x2 mesh in a forced-device
+    subprocess; see comm_sweep.smoke)."""
+    from benchmarks import comm_sweep
+
+    comm_sweep.smoke()
 
 
 def smoke_grad() -> None:
@@ -143,6 +154,14 @@ def main() -> None:
         "windowed shard_map, forced 8 host devices) as JSON (BENCH_dist.json)",
     )
     ap.add_argument(
+        "--comm-json",
+        metavar="PATH",
+        default=None,
+        help="also write the communication co-design sweep (overlapped halos "
+        "x compressed migration x rebalance, forced 8 host devices) as JSON "
+        "(BENCH_comm.json)",
+    )
+    ap.add_argument(
         "--ensemble-json",
         metavar="PATH",
         default=None,
@@ -176,6 +195,7 @@ def main() -> None:
         ("--gather-json", args.gather_json, "gather_sweep"),
         ("--sim-json", args.sim_json, "sim_loop_sweep"),
         ("--dist-json", args.dist_json, "dist_sweep"),
+        ("--comm-json", args.comm_json, "comm_sweep"),
         ("--ensemble-json", args.ensemble_json, "ensemble_sweep"),
         ("--grad-json", args.grad_json, "grad_sweep"),
     ):
@@ -208,6 +228,11 @@ def main() -> None:
                 from benchmarks.dist_sweep import write_json
 
                 write_json(args.dist_json, scenario_name=args.scenario)
+                continue
+            if name == "comm_sweep" and args.comm_json:
+                from benchmarks.comm_sweep import write_json
+
+                write_json(args.comm_json)
                 continue
             if name == "ensemble_sweep" and args.ensemble_json:
                 from benchmarks.ensemble_sweep import write_json

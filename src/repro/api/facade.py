@@ -187,6 +187,7 @@ def dist_config(spec: SimSpec):
         mass=spec.mass,
         capacity=spec.sort.resolved_capacity(spec.plasma.ppc),
         mig_cap=spec.mesh.mig_cap,
+        comm=spec.comm,
     )
 
 
@@ -514,10 +515,14 @@ def save_simulation(sim, path: str) -> None:
         scalars.update(
             mig_cap=sim.config.mig_cap,
             n_local=sim.n_local,
-            mesh_shape=list(sim.spec.mesh.shape) if sim.spec is not None else [sim.sx, sim.sy],
+            # the LIVE decomposition: a load-aware rebalance may have
+            # re-split the mesh mid-run (sim.spec is kept in sync)
+            mesh_shape=[sim.sx, sim.sy],
             mig_recv_dropped=sim.mig_recv_dropped,
             pending_presort=bool(sim._pending_presort),
             pending_resume=bool(sim._pending_resume),
+            comm_stats=dict(sim.comm_stats),
+            rebalance_armed=bool(sim._rebalance_armed),
         )
     tree = {"state": sim.state, "policy_state": sim.policy_state}
     meta = {
@@ -587,6 +592,8 @@ def restore_simulation(sim, path: str) -> None:
         sim.mig_recv_dropped = scal["mig_recv_dropped"]
         sim._pending_presort = bool(scal.get("pending_presort", False))
         sim._pending_resume = bool(scal.get("pending_resume", False))
+        sim.comm_stats = dict(scal.get("comm_stats", sim.comm_stats))
+        sim._rebalance_armed = bool(scal.get("rebalance_armed", True))
         sim._fns.clear()
         # pre-robustness checkpoints carry no replay snapshot: substitute
         # zeros of the saved particle shapes (always valid — a checkpoint

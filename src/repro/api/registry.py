@@ -38,6 +38,7 @@ import math
 from typing import Callable
 
 from repro.api.spec import (
+    CommSpec,
     DriftSpec,
     FaultSpec,
     HealthConfig,
@@ -100,6 +101,11 @@ _OVERRIDE_PATHS = {
     "autosave_path": ("run", "autosave_path"),
     "health": ("health",),
     "fault": ("fault",),
+    "comm": ("comm",),
+    "overlap_halo": ("comm", "overlap_halo"),
+    "compress_migration": ("comm", "compress_migration"),
+    "rebalance_enable": ("comm", "rebalance_enable"),
+    "imbalance_ratio": ("comm", "imbalance_ratio"),
     "order": ("deposition", "order"),
     "deposition": ("deposition", "mode"),
     "use_pallas": ("deposition", "use_pallas"),
@@ -150,6 +156,8 @@ def apply_overrides(spec: SimSpec, **overrides) -> SimSpec:
             value = HealthConfig.from_dict(value)
         if key == "fault" and isinstance(value, dict):
             value = FaultSpec.from_dict(value)
+        if key == "comm" and isinstance(value, dict):
+            value = CommSpec.from_dict(value)
         if len(path) == 1:
             top[path[0]] = value
         else:

@@ -32,11 +32,13 @@ from typing import Any
 
 from repro.core.health import HealthConfig
 from repro.core.resort_policy import SortPolicyConfig
+from repro.distributed.comm import CommSpec
 from repro.distributed.fault import FaultSpec
 from repro.pic.grid import GridSpec
 from repro.pic.laser import LaserSpec
 
 __all__ = [
+    "CommSpec",
     "DepositionSpec",
     "DriftSpec",
     "EnsembleSpec",
@@ -346,6 +348,7 @@ class SimSpec:
     deposition: DepositionSpec = DepositionSpec()
     sort: SortSpec = SortSpec()
     mesh: MeshSpec = MeshSpec()
+    comm: CommSpec = CommSpec()
     run: RunSpec = RunSpec()
     health: HealthConfig = HealthConfig()
     fault: FaultSpec | None = None
@@ -413,7 +416,7 @@ class SimSpec:
             kw["laser"] = LaserSpec(**_pick(LaserSpec, kw["laser"]))
         for key, sub in (
             ("plasma", PlasmaSpec), ("deposition", DepositionSpec), ("sort", SortSpec),
-            ("mesh", MeshSpec), ("run", RunSpec), ("health", HealthConfig),
+            ("mesh", MeshSpec), ("comm", CommSpec), ("run", RunSpec), ("health", HealthConfig),
         ):
             if key in kw:
                 kw[key] = sub.from_dict(kw[key])

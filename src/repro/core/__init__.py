@@ -4,6 +4,7 @@ from repro.core.binning import (  # noqa: F401
     INVALID,
     BinnedLayout,
     BinSlab,
+    bin_slab_staging,
     bin_slab_values,
     build_bin_slab,
     build_bins,
@@ -37,6 +38,7 @@ from repro.core.gather import (  # noqa: F401
 from repro.core.gpma import GPMAStats, gpma_update  # noqa: F401
 from repro.core.health import (  # noqa: F401
     HALT_BIN_OVERFLOW,
+    HALT_IMBALANCE,
     HALT_INVARIANT,
     HALT_MIG_RECV,
     HALT_MIG_SEND,

@@ -108,6 +108,34 @@ def build_bin_slab(pos, layout: BinnedLayout, *, grid_shape) -> BinSlab:
     return BinSlab(d=d, valid=valid)
 
 
+def bin_slab_staging(pos, vel, qw, layout: BinnedLayout, *, grid_shape):
+    """Fused push-into-bin-order staging: positions AND the post-push q·w·v
+    deposition values through ONE slot-table gather.
+
+    `build_bin_slab` + `bin_slab_values` pay the slot gather twice (the
+    PR 5 carried-forward follow-up); here the (N, 3) positions, (N, 3)
+    velocities and (N,) values concatenate into one (N, 7) matrix so the
+    row permutation runs once. Bit-identical to the two-gather route:
+    `slot_gather` is pure row selection, so gathering a column-concatenated
+    matrix yields exactly the per-array gathers column for column.
+
+    Returns ``(BinSlab, values)`` with `values` the (n_cells, capacity, 3)
+    q·w·v slab `bin_slab_values` would have produced.
+    """
+    global SLAB_BUILDS
+    SLAB_BUILDS += 1
+    slots = layout.slots
+    n_cells, _ = slots.shape
+    valid = slots >= 0
+    packed = jnp.concatenate([pos, vel, qw[:, None]], axis=1)   # (N, 7)
+    staged = slot_gather(packed, slots)                         # (C, cap, 7) — once
+    cells = cell_coords(n_cells, grid_shape)
+    d = staged[..., :3] - cells[:, None, :].astype(pos.dtype)
+    qw_b = jnp.where(valid, staged[..., 6], jnp.zeros((), qw.dtype))
+    vel_b = jnp.where(valid[..., None], staged[..., 3:6], jnp.zeros((), vel.dtype))
+    return BinSlab(d=d, valid=valid), qw_b[..., None] * vel_b
+
+
 def bin_slab_values(vel, qw, layout: BinnedLayout, slab: BinSlab) -> jax.Array:
     """Per-component deposition values q·w·v staged onto the slab's slot
     table: (n_cells, capacity, 3), exactly 0 on gap/overflow slots (the

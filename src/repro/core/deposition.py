@@ -396,12 +396,13 @@ def _deposit_current_matrix_fused_jit(
     separable_reduce: bool,
     slab: BinSlab | None,
     backend: str | None,
+    values=None,
 ):
     g = sf.max_guard(order) if guard is None else guard
     if slab is None:
         slab = build_bin_slab(pos, layout, grid_shape=grid_shape)
     d = slab.d
-    val = bin_slab_values(vel, qw, layout, slab)
+    val = values if values is not None else bin_slab_values(vel, qw, layout, slab)
     reduce = reduce_rhocell_separable if separable_reduce else reduce_rhocell
 
     if fused_matmul is not None:
@@ -431,6 +432,7 @@ def deposit_current_matrix_fused(
     slab: BinSlab | None = None,
     backend: str | None = None,
     batch: int = 1,
+    values=None,
 ):
     """All three Yee-staggered current components in one fused pass — the
     default `Simulation` deposition hot path (paper Alg. 2).
@@ -455,6 +457,10 @@ def deposit_current_matrix_fused(
     NOT repeated here — only the velocity-dependent q·w·v values are
     gathered against the same slot table (`bin_slab_values`), so the one
     slab the step built serves the field gather AND this deposition.
+    ``values`` goes one further: a caller that staged the q·w·v slab
+    together with the positions (`binning.bin_slab_staging`, the fused
+    push-into-bin-order path both sim drivers use) passes it here and NO
+    slot-table gather runs inside the deposition at all.
 
     ``backend`` routes the post-slab contraction through the kernel
     dispatcher ("auto"/"xla"/"pallas"/"pallas_reduced" — kernels.dispatch;
@@ -478,7 +484,7 @@ def deposit_current_matrix_fused(
     return _deposit_current_matrix_fused_jit(
         pos, vel, qw, layout, grid_shape=tuple(grid_shape), order=order, guard=guard,
         fused_matmul=fused_matmul, separable_reduce=separable_reduce, slab=slab,
-        backend=backend,
+        backend=backend, values=values,
     )
 
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "HALT_BIN_OVERFLOW",
+    "HALT_IMBALANCE",
     "HALT_INVARIANT",
     "HALT_MIG_RECV",
     "HALT_MIG_SEND",
@@ -45,16 +46,20 @@ __all__ = [
 ]
 
 # Window halt codes (bundle["halt_code"]). 0-3 are the original
-# pic/dist_simulation family; 4-5 are the health sentinel's additions.
+# pic/dist_simulation family; 4-5 are the health sentinel's additions;
+# 6 is the load-aware repartitioning request (comm co-design): the step is
+# KEPT and lossless — the host re-splits the domain decomposition and
+# re-enters the window on the new mesh.
 HALT_NONE = 0
 HALT_BIN_OVERFLOW = 1
 HALT_MIG_SEND = 2
 HALT_MIG_RECV = 3
 HALT_NONFINITE = 4
 HALT_INVARIANT = 5
+HALT_IMBALANCE = 6
 HALT_NAMES = (
     "none", "bin_overflow", "mig_send_overflow", "mig_recv_dropped",
-    "nonfinite", "invariant",
+    "nonfinite", "invariant", "imbalance",
 )
 
 # Which check fired (bundle["halt_inv"], error.invariant).

@@ -1,0 +1,64 @@
+"""Communication co-design knobs for the distributed driver (`CommSpec`).
+
+One frozen node carried on both `SimSpec` (declarative surface) and
+`DistConfig` (the shard_map step's static config), switching the three
+co-designed mechanisms of docs/distributed.md "Communication co-design":
+
+* ``overlap_halo``        — issue the halo boundary-slab ppermutes with no
+                            data dependence on interior compute (split
+                            extend/reduce; bit-identical to the serialized
+                            path by construction — pure routing).
+* ``compress_migration``  — pack migrating particles as shard-relative
+                            fixed-point uint16 positions + bf16 momenta
+                            (weights stay exact float32, so charge is
+                            conserved exactly); parity at the documented
+                            tolerance. Off (exact, bit-identical) by
+                            default.
+* ``rebalance_enable``    — per-window particle-count imbalance feeds the
+                            ``HALT_IMBALANCE`` halt-and-grow code; the host
+                            re-splits the domain decomposition when the
+                            max/mean shard occupancy exceeds
+                            ``imbalance_ratio``.
+
+Defined here (not in api.spec) for the same layering reason as
+`distributed.fault.FaultSpec`: `pic.distributed` needs the node as a
+`DistConfig` field and must not import the api layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CommSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Frozen and hashable: it is part of `DistConfig`, which keys the
+    compiled window cache — distinct comm configurations compile distinct
+    programs (the three mechanisms are static branches of the step).
+
+    ``imbalance_ratio`` is the halt threshold on
+    ``max_shard_alive * n_shards / n_alive`` (1.0 = perfectly balanced);
+    it only matters with ``rebalance_enable``.
+    """
+
+    overlap_halo: bool = False
+    compress_migration: bool = False
+    rebalance_enable: bool = False
+    imbalance_ratio: float = 4.0
+
+    def __post_init__(self):
+        if self.imbalance_ratio <= 1.0:
+            raise ValueError(
+                f"CommSpec.imbalance_ratio must exceed 1.0 (perfect balance), "
+                f"got {self.imbalance_ratio}"
+            )
+
+    @staticmethod
+    def from_dict(d: dict) -> "CommSpec":
+        names = {f.name for f in dataclasses.fields(CommSpec)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"CommSpec has unknown keys {sorted(unknown)}")
+        return CommSpec(**d)

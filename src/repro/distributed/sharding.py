@@ -28,6 +28,65 @@ from jax.sharding import PartitionSpec as P
 _state = threading.local()
 
 
+# ------------------------------------------------------------------
+# load-aware 2-D domain-decomposition planning (PIC rebalance)
+# ------------------------------------------------------------------
+
+def valid_mesh_splits(n_devices: int, global_shape, order: int) -> list[tuple[int, int]]:
+    """Every (sx, sy) factorization of `n_devices` whose implied local block
+    divides the global grid and keeps each decomposed extent at least the
+    deposition guard width (`halo` slabs must not wrap into the neighbor's
+    neighbor — same constraint `pic.distributed.validate_shard_guard`
+    enforces on the configured split)."""
+    from repro.core.shape_functions import max_guard
+
+    g = max_guard(order)
+    nx, ny, nz = global_shape
+    out = []
+    for sx in range(1, n_devices + 1):
+        if n_devices % sx:
+            continue
+        sy = n_devices // sx
+        if nx % sx or ny % sy:
+            continue
+        if min(nx // sx, ny // sy, nz) < g:
+            continue
+        out.append((sx, sy))
+    return out
+
+
+def plan_balanced_split(n_devices: int, global_shape, order: int, pos, alive):
+    """Pick the (sx, sy) decomposition minimizing the max per-shard alive
+    particle count — the load-aware repartitioning step behind
+    ``HALT_IMBALANCE``. `pos` (N, 3) global-frame positions, `alive` (N,)
+    mask (host arrays). Ties break toward fewer shard-boundary columns along
+    x (less x-migration traffic) and then toward the squarer split.
+
+    Returns ``(sx, sy, peak)`` with `peak` the winning split's max shard
+    count; raises if no factorization is valid."""
+    import numpy as np
+
+    splits = valid_mesh_splits(n_devices, global_shape, order)
+    if not splits:
+        raise ValueError(
+            f"no valid (sx, sy) split of {n_devices} devices for grid "
+            f"{tuple(global_shape)} at order {order}"
+        )
+    pos = np.asarray(pos)
+    alive = np.asarray(alive)
+    x = pos[alive, 0]
+    y = pos[alive, 1]
+    best = None
+    for sx, sy in splits:
+        ix = np.clip((x // (global_shape[0] // sx)).astype(int), 0, sx - 1)
+        iy = np.clip((y // (global_shape[1] // sy)).astype(int), 0, sy - 1)
+        peak = int(np.bincount(ix * sy + iy, minlength=sx * sy).max()) if x.size else 0
+        key = (peak, sx, abs(sx - sy))
+        if best is None or key < best[0]:
+            best = (key, (sx, sy, peak))
+    return best[1]
+
+
 class Rules:
     """Mapping logical axis name -> mesh axis (str | tuple | None)."""
 

@@ -123,6 +123,17 @@ def build_spec(args) -> SimSpec:
         overrides["autosave_path"] = args.autosave_path
     if args.fault is not None:
         overrides["fault"] = parse_fault(args.fault)
+    comm = {}
+    if args.overlap_halo:
+        comm["overlap_halo"] = True
+    if args.compress_migration:
+        comm["compress_migration"] = True
+    if args.rebalance:
+        comm["rebalance_enable"] = True
+    if args.imbalance_ratio is not None:
+        comm["imbalance_ratio"] = args.imbalance_ratio
+    if comm:
+        overrides["comm"] = comm
 
     if args.spec is not None:
         try:
@@ -215,6 +226,20 @@ def main() -> None:
                      help="repeatable: one cartesian sweep axis over a flat "
                      "override (e.g. --sweep density=0.5,1.0 --sweep order=1,2); "
                      "members with the same compiled shape share one executable")
+    cm = ap.add_argument_group("distributed communication (docs/distributed.md)")
+    cm.add_argument("--overlap-halo", action="store_true", dest="overlap_halo",
+                    help="issue halo-exchange collectives overlapped with interior "
+                    "compute (bit-identical to the serialized exchange)")
+    cm.add_argument("--compress-migration", action="store_true", dest="compress_migration",
+                    help="quantize migration payloads (uint16 fixed-point positions, "
+                    "bf16 momenta; weights stay exact f32)")
+    cm.add_argument("--rebalance", action="store_true",
+                    help="load-aware repartitioning: halt the window when shard "
+                    "occupancy imbalance exceeds --imbalance-ratio and re-split "
+                    "the domain decomposition")
+    cm.add_argument("--imbalance-ratio", type=float, default=None, metavar="R",
+                    help="rebalance trigger: max shard occupancy > R x the "
+                    "balanced share (default 4.0)")
     ft = ap.add_argument_group("fault tolerance (docs/robustness.md)")
     ft.add_argument("--sentinel", action="store_true",
                     help="enable the in-graph health sentinel (NaN/Inf + "

@@ -43,6 +43,7 @@ pass-through trick as `pic_run_window`, never a whole-step `lax.cond`):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import warnings
 
@@ -68,6 +69,7 @@ from repro.core import (
 # defined codes 0-3 before core.health existed).
 from repro.core.health import (  # noqa: F401
     HALT_BIN_OVERFLOW,
+    HALT_IMBALANCE,
     HALT_INVARIANT,
     HALT_MIG_RECV,
     HALT_MIG_SEND,
@@ -79,6 +81,7 @@ from repro.core.health import (  # noqa: F401
     nonfinite_count,
 )
 from repro.core.resort_policy import REASON_OVERFLOW
+from repro.distributed.sharding import plan_balanced_split
 from repro.distributed.fault import (
     PICFaultInjector,
     inject_fields,
@@ -152,7 +155,7 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
     Call signature of the returned function:
         (fields6, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
          mid_pos, mid_u, policy_state, n_target, presort, resume, step0,
-         fault_vec)
+         rebalance_armed, fault_vec)
         -> (fields6, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
             mid_pos, mid_u, policy_state, bundle)
 
@@ -184,7 +187,8 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
     need_energies = with_energies or (health is not None and health.check_energy)
 
     def window_body(fields, pos, u, w, alive, slots, pslot, slab_d, slab_valid,
-                    mid_pos, mid_u, pstate, n_target, presort, resume, step0, fault_vec):
+                    mid_pos, mid_u, pstate, n_target, presort, resume, step0,
+                    rebalance_armed, fault_vec):
         global _window_trace_count
         _window_trace_count += 1
         sq = lambda a: a.reshape(a.shape[2:])
@@ -317,9 +321,28 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
             else:
                 h_code = jnp.zeros((), jnp.int32)
 
+            # load-imbalance trigger (comm co-design): compare the peak
+            # per-shard occupancy against the ideal even split. Compiled
+            # out entirely when rebalancing is off; gated on the traced
+            # `rebalance_armed` flag so the host can disarm it after a
+            # no-improvement repartitioning attempt (termination).
+            if cfg.comm.rebalance_enable and n_shards > 1:
+                halt_imb = (
+                    (rebalance_armed > 0)
+                    & (stats["n_alive"] > 0)
+                    & (
+                        stats["max_shard_alive"].astype(jnp.float32) * jnp.float32(n_shards)
+                        > jnp.float32(cfg.comm.imbalance_ratio) * stats["n_alive"].astype(jnp.float32)
+                    )
+                )
+            else:
+                halt_imb = jnp.zeros((), bool)
+
             # halt classification (recv-drop discards the whole step: those
             # particles would have been destroyed). Health outranks the
             # growth halts: a poisoned state must not be "fixed" by growing.
+            # Imbalance ranks LOWEST — it is a perf optimization request,
+            # not a correctness event; any correctness halt wins the step.
             recv_drop = stats["mig_recv_dropped"] > 0
             halt_bin = overflow_after > 0
             halt_send = stats["mig_send_overflow"] > 0
@@ -329,7 +352,10 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
                     recv_drop, jnp.int32(HALT_MIG_RECV),
                     jnp.where(
                         halt_bin, jnp.int32(HALT_BIN_OVERFLOW),
-                        jnp.where(halt_send, jnp.int32(HALT_MIG_SEND), jnp.int32(HALT_NONE)),
+                        jnp.where(
+                            halt_send, jnp.int32(HALT_MIG_SEND),
+                            jnp.where(halt_imb, jnp.int32(HALT_IMBALANCE), jnp.int32(HALT_NONE)),
+                        ),
                     ),
                 ),
             )
@@ -372,6 +398,9 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
                 "mig_send_overflow": jnp.where(counted, stats["mig_send_overflow"], 0).astype(jnp.int32),
                 "mig_recv_dropped": jnp.where(executed, stats["mig_recv_dropped"], 0).astype(jnp.int32),
                 "n_unmigrated": jnp.where(counted, stats["n_unmigrated"], 0).astype(jnp.int32),
+                "n_migrated": jnp.where(counted, stats["n_migrated"], 0).astype(jnp.int32),
+                "mig_payload_bytes": jnp.where(counted, stats["mig_payload_bytes"], 0).astype(jnp.int32),
+                "max_shard_alive": jnp.where(counted, stats["max_shard_alive"], 0).astype(jnp.int32),
                 "discarded": (executed & recv_drop).astype(jnp.int32),
                 "field_energy": jnp.where(counted, field_e, 0.0),
                 "kinetic_energy": jnp.where(counted, kinetic, 0.0),
@@ -430,6 +459,7 @@ def make_dist_window(mesh, cfg: DistConfig, policy: SortPolicyConfig, n_steps: i
         P(),  # presort flag (capacity-growth re-entry)
         P(),  # resume flag (recv-drop replay re-entry)
         P(),  # step0 (absolute step counter at window entry)
+        P(),  # rebalance_armed (imbalance-halt arming flag)
         P(),  # fault_vec (chaos harness; all-shard identical)
     )
     out_specs = (
@@ -542,8 +572,16 @@ class DistSimulation:
         self.rebuilds = 0
         self._pending_presort = False  # capacity-growth re-entry flag
         self._pending_resume = False   # recv-drop replay re-entry flag
-        self.growths = {"capacity": 0, "mig_cap": 0, "n_local": 0}
+        self.growths = {"capacity": 0, "mig_cap": 0, "n_local": 0, "rebalance": 0}
         self.mig_recv_dropped = 0  # host loop only; the windowed driver never drops
+        # communication observability (comm co-design): accumulated from the
+        # per-step device counters, serialized into checkpoints and the
+        # BENCH_comm/BENCH_dist rows
+        self.comm_stats = {"n_migrated": 0, "mig_payload_bytes": 0, "max_imbalance": 0.0}
+        # the imbalance halt stays armed until a repartitioning attempt finds
+        # no better split (then firing again would livelock the window)
+        self._rebalance_armed = True
+        self._mesh_ctx: contextlib.ExitStack | None = None
         self.history: list[dict] = []
         self._host_step = 0
         self._fns: dict = {}
@@ -617,12 +655,20 @@ class DistSimulation:
         n_steps, diagnostics_every, window, autosave_every, autosave_path = resolve_run_args(
             self.spec, n_steps, diagnostics_every, window, autosave_every, autosave_path
         )
-        with set_mesh_compat(self.mesh):
-            if window is None:
-                self._run_host(n_steps, diagnostics_every)
-            else:
-                self._run_windowed(n_steps, diagnostics_every, window,
-                                   autosave_every, autosave_path)
+        # the ambient mesh context is held through an ExitStack so a
+        # mid-run repartitioning (`_rebalance`) can swap it for the new
+        # mesh without unwinding the driver loop
+        self._mesh_ctx = contextlib.ExitStack()
+        try:
+            with self._mesh_ctx:
+                self._mesh_ctx.enter_context(set_mesh_compat(self.mesh))
+                if window is None:
+                    self._run_host(n_steps, diagnostics_every)
+                else:
+                    self._run_windowed(n_steps, diagnostics_every, window,
+                                       autosave_every, autosave_path)
+        finally:
+            self._mesh_ctx = None
 
     def _run_windowed(self, n_steps: int, diagnostics_every: int, window: int,
                       autosave_every: int = 0, autosave_path: str = "") -> None:
@@ -645,6 +691,7 @@ class DistSimulation:
                              fault_vec is not None)
         presort = jnp.int32(1 if self._pending_presort else 0)
         resume = jnp.int32(1 if self._pending_resume else 0)
+        armed = jnp.int32(1 if self._rebalance_armed else 0)
         self._pending_presort = False
         self._pending_resume = False
         vec = no_fault_vec() if fault_vec is None else fault_vec
@@ -653,7 +700,7 @@ class DistSimulation:
          self.policy_state, bundle) = fn(
             self.fields, self.pos, self.u, self.w, self.alive, self.slots, self.pslot,
             self.slab_d, self.slab_valid, self.mid_pos, self.mid_u, self.policy_state,
-            jnp.int32(k), presort, resume, jnp.int32(self._host_step), vec,
+            jnp.int32(k), presort, resume, jnp.int32(self._host_step), armed, vec,
         )
         return _fetch_bundle(bundle)
 
@@ -665,6 +712,17 @@ class DistSimulation:
         self.sorts += n_sorts
         self.rebuilds += n_rebuilds
         self._host_step += n_done
+        # communication accounting: the per-step arrays are zero-masked on
+        # uncounted steps, so plain sums/maxima commit exactly the kept work
+        per = host["per_step"]
+        self.comm_stats["n_migrated"] += int(np.sum(per["n_migrated"]))
+        self.comm_stats["mig_payload_bytes"] += int(np.sum(per["mig_payload_bytes"]))
+        n_alive = np.asarray(per["n_alive"])
+        peak = np.asarray(per["max_shard_alive"])
+        mask = n_alive > 0
+        if mask.any():
+            ratio = float(np.max(peak[mask] * (self.sx * self.sy) / n_alive[mask]))
+            self.comm_stats["max_imbalance"] = max(self.comm_stats["max_imbalance"], ratio)
         return n_done
 
     def _take_snapshot(self):
@@ -693,6 +751,8 @@ class DistSimulation:
         elif code == HALT_MIG_RECV:
             self._grow_n_local()
             self._pending_resume = True  # replay the discarded step's migration
+        elif code == HALT_IMBALANCE:
+            self._rebalance()
         else:
             raise RuntimeError(
                 f"distributed driver cannot handle halt code {code} ({HALT_NAMES[code]})"
@@ -764,6 +824,13 @@ class DistSimulation:
             # per-key int() would cost a blocking round-trip each)
             stats = {k: int(v) for k, v in jax.device_get(stats).items()}
             self._host_step += 1
+            self.comm_stats["n_migrated"] += stats["n_migrated"]
+            self.comm_stats["mig_payload_bytes"] += stats["mig_payload_bytes"]
+            if stats["n_alive"]:
+                self.comm_stats["max_imbalance"] = max(
+                    self.comm_stats["max_imbalance"],
+                    stats["max_shard_alive"] * self.sx * self.sy / stats["n_alive"],
+                )
             if stats["mig_recv_dropped"]:
                 # the step already applied: those particles are gone. Count
                 # the loss honestly and grow so it stops; only the windowed
@@ -890,6 +957,94 @@ class DistSimulation:
         self.mid_u = pad(self.mid_u, 0.0)
         self.n_local += add
         self.growths["n_local"] += 1
+
+    def _rebalance(self) -> None:
+        """Load-aware repartitioning (HALT_IMBALANCE): re-split the global
+        domain decomposition so the peak per-shard particle count drops.
+
+        The halting step was KEPT — the state is lossless — so this is a
+        pure host-side re-layout: gather the global particle/field state,
+        pick the (sx, sy) factorization minimizing the peak shard occupancy
+        (`distributed.sharding.plan_balanced_split`), and re-partition onto
+        a fresh mesh exactly like construction did. When no strictly better
+        split exists the trigger DISARMS instead (otherwise the next window
+        would halt on the same state forever); it re-arms only on a later
+        successful rebalance. Every cached compiled program keys on the
+        replaced config, and the ambient mesh context held by `run()` is
+        swapped in place, so the supervisor loop re-enters the window on
+        the new decomposition transparently."""
+        parts = self.particles_global()
+        fields = self.fields_global()
+        pos = np.asarray(parts.pos)
+        alive = np.asarray(parts.alive)
+
+        # peak occupancy of the CURRENT split, for the strict-improvement test
+        nx_loc, ny_loc = self.config.local_grid.shape[:2]
+        ix = np.clip((pos[alive, 0] // nx_loc).astype(int), 0, self.sx - 1)
+        iy = np.clip((pos[alive, 1] // ny_loc).astype(int), 0, self.sy - 1)
+        cur_peak = (
+            int(np.bincount(ix * self.sy + iy, minlength=self.sx * self.sy).max())
+            if alive.any() else 0
+        )
+
+        sx, sy, peak = plan_balanced_split(
+            self.sx * self.sy, self.global_grid.shape, self.config.order, pos, alive
+        )
+        if (sx, sy) == (self.sx, self.sy) or peak >= cur_peak:
+            self._rebalance_armed = False
+            return
+
+        local = GridSpec(
+            shape=(self.global_grid.shape[0] // sx, self.global_grid.shape[1] // sy,
+                   self.global_grid.shape[2]),
+            dx=self.config.local_grid.dx,
+        )
+        self.mesh = make_pic_mesh(sx, sy)
+        self.sx, self.sy = sx, sy
+        self.config = dataclasses.replace(self.config, local_grid=local)
+        # size the per-shard particle arrays to the NEW peak (1.5x headroom,
+        # rounded up to 8): the imbalanced split padded every shard to the
+        # straggler's occupancy, and shrinking that padding is where the
+        # rebalanced decomposition's throughput comes from — the n_local
+        # growth hatch still covers any later overflow
+        self.n_local = max(8, -(-int(peak * 1.5) // 8) * 8)
+        self.pos, self.u, self.w, self.alive = partition_particles(
+            parts, self.global_grid, sx, sy, self.n_local
+        )
+        while True:
+            slots, pslot, slab_d, slab_valid, overflow = build_local_bins(
+                self.pos, self.alive, local, self.config.capacity
+            )
+            if not overflow:
+                break
+            self.config = dataclasses.replace(self.config, capacity=self.config.capacity * 2)
+            self.growths["capacity"] += 1
+        self.slots, self.pslot = slots, pslot
+        self.slab_d, self.slab_valid = slab_d, slab_valid
+        # re-upload the fields from the gathered host copy: the old device
+        # arrays are laid out over the retired mesh
+        self.fields = tuple(jnp.asarray(np.asarray(f)) for f in (
+            fields.ex, fields.ey, fields.ez, fields.bx, fields.by, fields.bz
+        ))
+        # the replay snapshot is index-aligned with the OLD partitioning;
+        # a rebalance only follows a kept step, so no resume is pending
+        self.mid_pos = jnp.zeros_like(self.pos)
+        self.mid_u = jnp.zeros_like(self.u)
+        self._pending_presort = False
+        self._pending_resume = False
+        self._rebalance_armed = True
+        self.growths["rebalance"] += 1
+        # keep the declarative spec in sync with the live decomposition so
+        # checkpoints written after the rebalance rebuild the right mesh
+        if self.spec is not None:
+            self.spec = dataclasses.replace(
+                self.spec, mesh=dataclasses.replace(self.spec.mesh, shape=(sx, sy))
+            )
+        self._fns.clear()  # every cached program was built for the old mesh
+        self._prewarm_dispatch()
+        if self._mesh_ctx is not None:
+            self._mesh_ctx.close()
+            self._mesh_ctx.enter_context(set_mesh_compat(self.mesh))
 
     # -- protocol state view + checkpointing -------------------------------
 

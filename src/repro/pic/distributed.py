@@ -54,7 +54,16 @@ from repro.core import (
     gpma_update,
     sort_permutation,
 )
-from repro.core.binning import BinnedLayout, BinSlab
+from repro.core.binning import BinnedLayout, BinSlab, bin_slab_staging
+from repro.distributed.comm import CommSpec
+from repro.distributed.compression import (
+    MIG_ROW_BYTES_COMPRESSED,
+    MIG_ROW_BYTES_EXACT,
+    pack_momenta,
+    pack_positions,
+    unpack_momenta,
+    unpack_positions,
+)
 from repro.pic.grid import B_STAGGER, E_STAGGER, GridSpec
 from repro.pic.maxwell import curl_b_padded, curl_e_padded
 from repro.pic.plasma import ParticleState
@@ -123,6 +132,99 @@ def halo_reduce_periodic_local(fpad, g: int, axis: int):
 
 
 # ---------------------------------------------------------------------------
+# overlapped halo exchange (comm co-design)
+# ---------------------------------------------------------------------------
+#
+# The serialized `_extend_all`/`_reduce_all` chain the per-axis exchanges:
+# the y ppermute slices slabs out of the x-extended array, so it cannot
+# issue until the x exchange has landed. The overlapped variants below
+# re-express the SAME region map so every first-hop ppermute slices the raw
+# local block — the compiler is free to issue the x slabs, the y slabs and
+# the interior compute concurrently and hide the boundary traffic behind
+# the bulk. ppermute is pure routing (no arithmetic), and the reduce keeps
+# the serialized per-element float ADD GROUPING, so both variants are
+# bitwise identical to the serialized path (asserted by tier-1 and the
+# comm benchmark's --smoke lane).
+
+def halo_extend_overlapped(f, g: int, x_axis, y_axis):
+    """Extend f by g cells along x AND y in one concurrent exchange round.
+
+    Edge slabs slice the raw block; the four g×g corners route x-then-y as
+    two-hop ppermutes of just the corner block (the serialized path ships
+    them embedded in the second-axis slabs — same values, same route, less
+    serialization). The z periodic extension is applied by the caller LAST,
+    matching the serialized x → y → z order.
+    """
+    nx, ny = f.shape[0], f.shape[1]
+    # first-hop slabs, all sliced from the raw local block: no exchange
+    # depends on another exchange's result
+    row_top = lax.ppermute(f[nx - g:], x_axis, _ring(x_axis, +1))
+    row_bot = lax.ppermute(f[:g], x_axis, _ring(x_axis, -1))
+    col_left = lax.ppermute(f[:, ny - g:], y_axis, _ring(y_axis, +1))
+    col_right = lax.ppermute(f[:, :g], y_axis, _ring(y_axis, -1))
+    # corners: g×g two-hop blocks, x hop then y hop (the serialized routing)
+    hop_x = lambda blk, s: lax.ppermute(blk, x_axis, _ring(x_axis, s))
+    hop_y = lambda blk, s: lax.ppermute(blk, y_axis, _ring(y_axis, s))
+    c_tl = hop_y(hop_x(f[nx - g:, ny - g:], +1), +1)
+    c_tr = hop_y(hop_x(f[nx - g:, :g], +1), -1)
+    c_bl = hop_y(hop_x(f[:g, ny - g:], -1), +1)
+    c_br = hop_y(hop_x(f[:g, :g], -1), -1)
+    top = jnp.concatenate([c_tl, row_top, c_tr], axis=1)
+    mid = jnp.concatenate([col_left, f, col_right], axis=1)
+    bot = jnp.concatenate([c_bl, row_bot, c_br], axis=1)
+    return jnp.concatenate([top, mid, bot], axis=0)
+
+
+def halo_reduce_overlapped(zf, g: int, x_axis, y_axis):
+    """Fold x and y guard contributions onto neighbor cores in one
+    concurrent exchange round. `zf` is the padded deposition grid AFTER the
+    caller's local z fold ((nx+2g, ny+2g, nz)); returns the (nx, ny, nz)
+    core.
+
+    Bit-identity with the serialized z → y → x fold hinges on float add
+    grouping: the serialized x-phase ships guard rows whose corner columns
+    ALREADY hold the received-y contribution, so the four corner-mixed g×g
+    pieces here are summed BEFORE their x hop — every destination element
+    sees exactly the serialized (zf + recv_y) + recv_x association. The
+    full-height y slabs and the pure middle x slabs are first-hop reads of
+    `zf` and issue concurrently. Requires nx, ny >= 2g (the pure-middle
+    column split is empty or negative below that); `_reduce_all` falls back
+    to the serialized fold for smaller shards.
+    """
+    nx = zf.shape[0] - 2 * g
+    ny = zf.shape[1] - 2 * g
+    # full-height y-guard slabs: first hop, issues immediately
+    recv_y_hi = lax.ppermute(zf[:, ny + g:], y_axis, _ring(y_axis, +1))
+    recv_y_lo = lax.ppermute(zf[:, :g], y_axis, _ring(y_axis, -1))
+    # pure-middle x-guard rows (columns untouched by the y fold): first hop
+    recv_x_hi_mid = lax.ppermute(zf[nx + g:, 2 * g:ny], x_axis, _ring(x_axis, +1))
+    recv_x_lo_mid = lax.ppermute(zf[:g, 2 * g:ny], x_axis, _ring(x_axis, -1))
+    # corner-mixed g×g pieces: zf corner + received y contribution summed
+    # pre-send — the exact partial sums the serialized x-phase transports
+    hi_l = zf[nx + g:, g:2 * g] + recv_y_hi[nx + g:]
+    hi_r = zf[nx + g:, ny:ny + g] + recv_y_lo[nx + g:]
+    lo_l = zf[:g, g:2 * g] + recv_y_hi[:g]
+    lo_r = zf[:g, ny:ny + g] + recv_y_lo[:g]
+    recv_x_hi = jnp.concatenate([
+        lax.ppermute(hi_l, x_axis, _ring(x_axis, +1)),
+        recv_x_hi_mid,
+        lax.ppermute(hi_r, x_axis, _ring(x_axis, +1)),
+    ], axis=1)
+    recv_x_lo = jnp.concatenate([
+        lax.ppermute(lo_l, x_axis, _ring(x_axis, -1)),
+        recv_x_lo_mid,
+        lax.ppermute(lo_r, x_axis, _ring(x_axis, -1)),
+    ], axis=1)
+    # destination adds in the serialized order: interior, +y, +x
+    out = zf[g:nx + g, g:ny + g]
+    out = out.at[:, :g].add(recv_y_hi[g:nx + g])
+    out = out.at[:, ny - g:].add(recv_y_lo[g:nx + g])
+    out = out.at[:g].add(recv_x_hi)
+    out = out.at[nx - g:].add(recv_x_lo)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # particle migration
 # ---------------------------------------------------------------------------
 
@@ -163,7 +265,8 @@ def _insert(parts_arrays, alive, bufs, valid):
     return out, alive, n_dropped, inserted
 
 
-def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_cap: int):
+def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_cap: int,
+                 local_shape=None, compress: bool = False):
     """Exchange out-of-range particles along one decomposed axis.
 
     Returns ``(pos, u, w, alive, n_send_overflow, n_recv_dropped,
@@ -172,6 +275,16 @@ def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_ca
     until it migrates); receive-side drops are destroyed particles;
     ``arrived`` is the boolean mask of indices that received a migrated-in
     particle this call (for churn accounting — see `_insert`).
+
+    ``compress`` (``comm.compress_migration``) quantizes the exchange
+    payload on the wire: positions are shard-relative after the coordinate
+    shift below, so they pack into margin-banded uint16 fixed point over
+    the local extent (``local_shape`` required) and momenta into bfloat16;
+    weights cross exact, so total charge is conserved bit-for-bit. Packing
+    happens BEFORE the ppermutes and unpacking after — the collective
+    itself carries 16 B/row instead of 28 B (see distributed/compression
+    for the tolerance contract). Invalid buffer rows round-trip through
+    garbage values harmlessly: `_insert` never lands them.
     """
     x = pos[:, coord]
     go_hi = alive & (x >= extent)
@@ -185,10 +298,22 @@ def migrate_axis(pos, u, w, alive, *, coord: int, extent: int, axis_name, mig_ca
 
     alive = alive & ~(sel_hi | sel_lo)
 
+    if compress:
+        pack = lambda b: [pack_positions(b[0], local_shape), pack_momenta(b[1]), b[2]]
+        bufs_hi, bufs_lo = pack(bufs_hi), pack(bufs_lo)
+
     recv_from_prev = [lax.ppermute(b, axis_name, _ring(axis_name, +1)) for b in bufs_hi]
     recv_valid_prev = lax.ppermute(valid_hi, axis_name, _ring(axis_name, +1))
     recv_from_next = [lax.ppermute(b, axis_name, _ring(axis_name, -1)) for b in bufs_lo]
     recv_valid_next = lax.ppermute(valid_lo, axis_name, _ring(axis_name, -1))
+
+    if compress:
+        unpack = lambda b: [
+            unpack_positions(b[0], local_shape, pos.dtype),
+            unpack_momenta(b[1], u.dtype),
+            b[2],
+        ]
+        recv_from_prev, recv_from_next = unpack(recv_from_prev), unpack(recv_from_next)
 
     arrays = [pos, u, w]
     arrays, alive, drop1, ins1 = _insert(arrays, alive, recv_from_prev, recv_valid_prev)
@@ -217,6 +342,7 @@ class DistConfig:
     mig_cap: int = 256
     x_axes: tuple = ("data",)     # mesh axes decomposing grid x
     y_axes: tuple = ("model",)
+    comm: CommSpec = CommSpec()   # communication co-design knobs
 
     def __post_init__(self):
         validate_shard_guard(self.local_grid, self.order)
@@ -266,7 +392,16 @@ def validate_shard_guard(local_grid: GridSpec, order: int) -> None:
         )
 
 
+def _overlap_ok(cfg: DistConfig) -> bool:
+    """Static predicate: the overlapped exchange handles exactly one mesh
+    axis per grid dimension (multi-axis decompositions chain by nature)."""
+    return cfg.comm.overlap_halo and len(cfg.x_axes) == 1 and len(cfg.y_axes) == 1
+
+
 def _extend_all(f, g, cfg: DistConfig):
+    if _overlap_ok(cfg):
+        f = halo_extend_overlapped(f, g, cfg.x_axes[0], cfg.y_axes[0])
+        return halo_extend_periodic_local(f, g, 2)
     for ax_name in cfg.x_axes:
         f = halo_extend(f, g, 0, ax_name)
     for ax_name in cfg.y_axes:
@@ -276,6 +411,9 @@ def _extend_all(f, g, cfg: DistConfig):
 
 def _reduce_all(fpad, g, cfg: DistConfig):
     fpad = halo_reduce_periodic_local(fpad, g, 2)
+    nx, ny = cfg.local_grid.shape[0], cfg.local_grid.shape[1]
+    if _overlap_ok(cfg) and nx >= 2 * g and ny >= 2 * g:
+        return halo_reduce_overlapped(fpad, g, cfg.x_axes[0], cfg.y_axes[0])
     for ax_name in reversed(cfg.y_axes):
         fpad = halo_reduce(fpad, g, 1, ax_name)
     for ax_name in reversed(cfg.x_axes):
@@ -372,16 +510,19 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
     mig_send_overflow = jnp.int32(0)
     mig_recv_dropped = jnp.int32(0)
     arrived = jnp.zeros_like(alive)
+    compress = cfg.comm.compress_migration
     for ax_name in cfg.x_axes:
         pos_new, u_new, w, alive, of, dr, ins = migrate_axis(
-            pos_new, u_new, w, alive, coord=0, extent=shape[0], axis_name=ax_name, mig_cap=cfg.mig_cap
+            pos_new, u_new, w, alive, coord=0, extent=shape[0], axis_name=ax_name, mig_cap=cfg.mig_cap,
+            local_shape=shape, compress=compress,
         )
         mig_send_overflow += of
         mig_recv_dropped += dr
         arrived |= ins
     for ax_name in cfg.y_axes:
         pos_new, u_new, w, alive, of, dr, ins = migrate_axis(
-            pos_new, u_new, w, alive, coord=1, extent=shape[1], axis_name=ax_name, mig_cap=cfg.mig_cap
+            pos_new, u_new, w, alive, coord=1, extent=shape[1], axis_name=ax_name, mig_cap=cfg.mig_cap,
+            local_shape=shape, compress=compress,
         )
         mig_send_overflow += of
         mig_recv_dropped += dr
@@ -415,25 +556,33 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
         arrived & binned & (stale_cell < 0) & (layout.particle_slot < 0)
     )
 
+    # 5-prep: push-derived deposition inputs, computed BEFORE the staging
+    # so the fused matrix path can stage positions and q·w·v values through
+    # one slot-table gather (binned particles only: the layout already
+    # excludes stragglers, qw masking keeps the oracle identical)
+    gamma = lorentz_gamma(u_new)
+    v = u_new / gamma[:, None]
+    qw = cfg.charge * w * binned.astype(w.dtype)
+
     # 4b. the step's ONE slab staging, consistent with (pos_new, layout):
     # consumed by the fused deposition below and carried for the next
     # step's fused gather (pure-unfused ablation configs carry the input
-    # slab through untouched — nothing consumes it)
-    if cfg.needs_slab:
+    # slab through untouched — nothing consumes it). The matrix deposition
+    # stages its value slab through the same gather.
+    values = None
+    if cfg.deposition == "matrix":
+        slab, values = bin_slab_staging(pos_new, v, qw, layout, grid_shape=shape)
+    elif cfg.needs_slab:
         slab = build_bin_slab(pos_new, layout, grid_shape=shape)
     else:
         slab = BinSlab(d=slab_d, valid=slab_valid)
 
-    # 5. deposition + guard reduction (binned particles only: the layout
-    # already excludes stragglers, qw masking keeps the oracle identical)
-    gamma = lorentz_gamma(u_new)
-    v = u_new / gamma[:, None]
-    qw = cfg.charge * w * binned.astype(w.dtype)
+    # 5. deposition + guard reduction
     inv_vol = 1.0 / cfg.local_grid.cell_volume
     if cfg.deposition == "matrix":
         j3 = deposit_current_matrix_fused(
             pos_new, v, qw, layout, grid_shape=shape, order=cfg.order,
-            backend=cfg.backend, slab=slab,
+            backend=cfg.backend, slab=slab, values=values,
         )
         j = [_reduce_all(jp, g, cfg) * inv_vol for jp in j3]
     else:  # matrix_unfused: per-component comparison mode
@@ -459,6 +608,13 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
     ez1 = ez + cfg.dt * (cz - j[2])
     bx2, by2, bz2 = half_b(ex1, ey1, ez1, bx1, by1, bz1, 0.5 * cfg.dt)
 
+    # per-step communication accounting (comm co-design observability):
+    # the migration payload is statically sized — every migrate_axis call
+    # ships 2 directions × mig_cap rows regardless of occupancy — so the
+    # per-shard wire bytes are a config constant; psum turns them into the
+    # global per-step traffic the BENCH_comm rows report.
+    row_bytes = MIG_ROW_BYTES_COMPRESSED if cfg.comm.compress_migration else MIG_ROW_BYTES_EXACT
+    n_axis_calls = len(cfg.x_axes) + len(cfg.y_axes)
     stats = {
         "n_moved": gstats.n_moved + n_arrived_invisible,
         "n_overflow": gstats.n_overflow,
@@ -467,10 +623,15 @@ def dist_pic_step_local(fields, pos, u, w, alive, slots, particle_slot, slab_d, 
         "mig_recv_dropped": mig_recv_dropped,
         "n_unmigrated": jnp.sum(alive & ~in_domain(pos_new, shape)).astype(jnp.int32),
         "n_alive": jnp.sum(alive),
+        "n_migrated": jnp.sum(arrived).astype(jnp.int32),
+        "mig_payload_bytes": jnp.int32(2 * cfg.mig_cap * row_bytes * n_axis_calls),
     }
     # global sums for the resort policy (host- or in-graph)
     for k in list(stats):
         stats[k] = psum_all(stats[k], cfg)
+    # peak per-shard occupancy: the load-imbalance signal behind
+    # HALT_IMBALANCE (pmax, not psum — n_alive above is the global total)
+    stats["max_shard_alive"] = pmax_all(jnp.sum(alive), cfg)
 
     return (ex1, ey1, ez1, bx2, by2, bz2), pos_new, u_new, w, alive, layout.slots, layout.particle_slot, slab.d, slab.valid, mid_pos_out, mid_u_out, stats
 
@@ -482,9 +643,17 @@ def psum_all(value, cfg: DistConfig):
     return value
 
 
+def pmax_all(value, cfg: DistConfig):
+    """Max of a per-shard scalar over every decomposed mesh axis."""
+    for ax in cfg.x_axes + cfg.y_axes:
+        value = lax.pmax(value, ax)
+    return value
+
+
 STAT_KEYS = (
     "n_moved", "n_overflow", "n_empty", "mig_send_overflow",
     "mig_recv_dropped", "n_unmigrated", "n_alive",
+    "n_migrated", "mig_payload_bytes", "max_shard_alive",
 )
 
 

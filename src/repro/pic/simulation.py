@@ -56,6 +56,7 @@ from repro.core import (
     ResortPolicy,
     SortPolicyConfig,
     SortPolicyState,
+    bin_slab_staging,
     build_bin_slab,
     build_bins,
     cell_index,
@@ -207,7 +208,7 @@ def _gather_fields(pos, fields: FieldState, layout, slab: BinSlab | None, config
     return jnp.stack(comps_e, -1), jnp.stack(comps_b, -1)
 
 
-def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig):
+def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig, values=None):
     shape = config.grid.shape
     inv_vol = 1.0 / config.grid.cell_volume
 
@@ -218,6 +219,7 @@ def _deposit_current(pos, v, qw, layout, slab, cells, config: PICConfig):
         j3 = deposit_current_matrix_fused(
             pos, v, qw, layout, grid_shape=shape, order=config.order,
             backend=config.backend, slab=slab, batch=config.dispatch_batch,
+            values=values,
         )
         return [fold_guards(j, config.guard) * inv_vol for j in j3]
 
@@ -274,15 +276,22 @@ def _pic_step(state: PICState, config: PICConfig) -> tuple[PICState, GPMAStats]:
         )
 
     # 3b. the step's ONE slab staging, consistent with (pos_new, layout):
-    # consumed by the deposition below and carried for the next gather
+    # consumed by the deposition below and carried for the next gather.
+    # Velocity and charge-weight come first so the fused matrix path can
+    # stage positions AND deposition values off a single slot-table gather
+    # instead of a second gather inside the deposit kernel.
     particles = dataclasses.replace(p, pos=pos_new, u=u_new)
-    slab = _state_slab(particles, layout, config)
-
-    # 4. deposition at x^{n+1}, v^{n+1/2}
     gamma = lorentz_gamma(u_new)
     v = u_new / gamma[:, None]
     qw = config.charge * p.w * alive_f
-    j = _deposit_current(pos_new, v, qw, layout, slab, new_cells, config)
+    values = None
+    if config.deposition == "matrix":
+        slab, values = bin_slab_staging(pos_new, v, qw, layout, grid_shape=config.grid.shape)
+    else:
+        slab = _state_slab(particles, layout, config)
+
+    # 4. deposition at x^{n+1}, v^{n+1/2}
+    j = _deposit_current(pos_new, v, qw, layout, slab, new_cells, config, values=values)
 
     # 5. fields
     fields = maxwell_step(state.fields, j, dx=config.grid.dx, dt=config.dt, ckc_beta=config.ckc_beta)

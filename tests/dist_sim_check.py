@@ -152,7 +152,7 @@ def scenario_fetch() -> None:
     dist = DistSimulation(fields, parts, dcfg, mesh_shape=MESH_SHAPE, policy=POLICY)
     traces0 = dist_simulation._window_trace_count
     dist.run(50, window=8)  # 6 full windows + a padded tail of 2
-    assert dist.growths == {"capacity": 0, "mig_cap": 0, "n_local": 0}, (
+    assert dist.growths == {"capacity": 0, "mig_cap": 0, "n_local": 0, "rebalance": 0}, (
         f"growth fired ({dist.growths}) — fetch/trace counts not comparable"
     )
     assert len(calls) == 7, f"expected 7 window fetches, counted {len(calls)}"

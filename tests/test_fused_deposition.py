@@ -205,3 +205,36 @@ def test_simulation_fused_matches_unfused():
         sim.run(3)
         results[dep] = np.stack([np.asarray(f) for f in sim.state.fields.e()])
     np.testing.assert_allclose(results["matrix"], results["matrix_unfused"], rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("order", ORDERS)
+@pytest.mark.parametrize("grid", GRIDS)
+def test_fused_staging_bit_identical_to_two_gathers(order, grid):
+    """`bin_slab_staging` (ONE slot gather for positions + values, the PR 5
+    carried-forward follow-up) is BITWISE identical to the historical
+    `build_bin_slab` + `bin_slab_values` two-gather route, and feeding its
+    values slab into the fused deposit reproduces the internal path."""
+    from repro.core import bin_slab_staging, bin_slab_values, build_bin_slab
+
+    pos, vel, qw = make_particles(400, grid, seed=10 + order)
+    layout, of = make_binned(pos, grid)
+    assert int(of) == 0
+
+    slab_ref = build_bin_slab(pos, layout, grid_shape=grid)
+    values_ref = bin_slab_values(vel, qw, layout, slab_ref)
+    slab, values = bin_slab_staging(pos, vel, qw, layout, grid_shape=grid)
+
+    np.testing.assert_array_equal(np.asarray(slab.valid), np.asarray(slab_ref.valid))
+    np.testing.assert_array_equal(np.asarray(slab.d), np.asarray(slab_ref.d))
+    np.testing.assert_array_equal(np.asarray(values), np.asarray(values_ref))
+
+    internal = deposit_current_matrix_fused(
+        pos, vel, qw, layout, grid_shape=grid, order=order, slab=slab_ref
+    )
+    via_values = deposit_current_matrix_fused(
+        pos, vel, qw, layout, grid_shape=grid, order=order, slab=slab, values=values
+    )
+    for comp in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(via_values[comp]), np.asarray(internal[comp])
+        )

@@ -102,8 +102,80 @@ def test_dist_chaos_recovery(scenario):
 
 
 # ---------------------------------------------------------------------------
+# Communication co-design (docs/distributed.md "Communication co-design")
+# ---------------------------------------------------------------------------
+
+
+def test_dist_comm_fast_lane():
+    """Tier-1 lane on a 2x2 mesh: overlapped halo exchange bit-identical to
+    the serialized exchange, and compressed migration conserving total
+    charge exactly with zero particles lost."""
+    out = _run_check("dist_comm_check.py", "fast")
+    assert "FAST OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_dist_overlapped_halo_bit_identity(order):
+    """Overlapped halo exchange (comm.overlap_halo) is BIT-identical to the
+    serialized per-axis exchange at deposition orders 1-3 on a 4x2 mesh."""
+    out = _run_check("dist_comm_check.py", f"overlap{order}")
+    assert f"OVERLAP{order} OK" in out
+
+
+@pytest.mark.slow
+def test_dist_compressed_migration_parity():
+    """uint16/bf16 migration payloads: physics within the documented
+    tolerance, exact charge conservation, 16/28 payload byte ratio."""
+    out = _run_check("dist_comm_check.py", "compress")
+    assert "COMPRESS OK" in out
+
+
+@pytest.mark.slow
+def test_dist_imbalance_rebalance():
+    """Forced-imbalance workload triggers HALT_IMBALANCE; the driver
+    re-splits the decomposition live with nothing lost."""
+    out = _run_check("dist_comm_check.py", "rebalance")
+    assert "REBALANCE OK" in out
+
+
+# ---------------------------------------------------------------------------
 # Host-side validation (no devices needed)
 # ---------------------------------------------------------------------------
+
+
+def test_comm_spec_validation():
+    from repro.distributed.comm import CommSpec
+
+    with pytest.raises(ValueError, match="imbalance_ratio"):
+        CommSpec(imbalance_ratio=1.0)
+    with pytest.raises(ValueError, match="unknown"):
+        CommSpec.from_dict({"overlap": True})
+    spec = CommSpec.from_dict({"overlap_halo": True, "imbalance_ratio": 2.0})
+    assert spec.overlap_halo and spec.imbalance_ratio == 2.0
+
+
+def test_plan_balanced_split_prefers_loaded_axis():
+    """All particles in an x-slab: the planner must pick an x-light split
+    (1xN) over the x-heavy ones, and report the true peak occupancy."""
+    import numpy as np
+
+    from repro.distributed.sharding import plan_balanced_split, valid_mesh_splits
+
+    splits = valid_mesh_splits(8, (16, 16, 16), order=2)
+    assert (4, 2) in splits and (1, 8) in splits
+    rng = np.random.default_rng(0)
+    n = 4096
+    pos = np.stack([
+        rng.uniform(0.0, 2.0, n),       # everything in x < 2 (one 16/8 slab)
+        rng.uniform(0.0, 16.0, n),
+        rng.uniform(0.0, 16.0, n),
+    ], axis=1)
+    alive = np.ones(n, bool)
+    sx, sy, peak = plan_balanced_split(8, (16, 16, 16), 2, pos, alive)
+    assert sx == 1 and sy == 8, (sx, sy)
+    counts = np.bincount((pos[:, 1] // 2).astype(int), minlength=8)
+    assert peak == counts.max()
 
 
 def test_guard_validation_rejects_small_shards():
